@@ -1,0 +1,103 @@
+"""Figs 5-6: multi-node aggregated bandwidth/throughput scaling.
+
+Simulated cluster (interconnect model accounts per-node timelines; see
+repro.fanstore.cluster). GPU-cluster arm: {1,4,8,16} nodes, FDR IB 56 Gb/s.
+CPU-cluster arm: {1,64,128,256,512} nodes, OPA 100 Gb/s. Each node reads
+every file once (the paper's benchmark), files striped once across nodes
+(R=1), so the local hit rate falls as 1/N — exactly the regime Figs 5-6
+measure. Reported: aggregated bandwidth, throughput, scaling efficiency vs
+the paper's chosen baselines (4 nodes GPU / 64 nodes CPU).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.data.synthetic import fixed_size_files
+from repro.fanstore.cluster import FanStoreCluster, InterconnectModel
+from repro.fanstore.prepare import prepare_dataset
+
+FILE_SIZES = [128 * 1024, 512 * 1024, 2 * 1024 * 1024, 8 * 1024 * 1024]
+
+GPU_NET = InterconnectModel(latency_s=1.0e-6, bandwidth_Bps=56e9 / 8,
+                            disk_bw_Bps=2.0e9)
+CPU_NET = InterconnectModel(latency_s=1.5e-6, bandwidth_Bps=100e9 / 8,
+                            disk_bw_Bps=2.0e9)
+
+
+def run_one(nodes: int, file_size: int, count: int,
+            net: InterconnectModel, *, replication: int = 1,
+            reads_per_node: int = 128) -> Dict:
+    # one shared payload per size: content is timing-irrelevant here and
+    # generating count x file_size of RNG bytes dominated the wall time
+    import numpy as _np0
+    payload = bytes(_np0.random.default_rng(1).integers(
+        0, 256, file_size, dtype=_np0.uint8))
+    files = {f"bench/f_{i:06d}.bin": payload for i in range(count)}
+    blobs, _ = prepare_dataset(files, max(nodes, 8), compress=False)
+    cluster = FanStoreCluster(nodes, interconnect=net)
+    cluster.load_partitions(blobs, replication=replication)
+    paths = sorted(files)
+    cluster.reset_clocks()
+    # each node reads a uniform sample of the directory: the per-node
+    # timeline statistics match the paper's read-everything benchmark in
+    # expectation while bounding the python-loop cost at 512 nodes
+    import numpy as _np
+    rng = _np.random.default_rng(nodes)
+    m = min(reads_per_node, len(paths))
+    for nid in range(nodes):
+        for i in rng.choice(len(paths), size=m, replace=False):
+            cluster.read(nid, paths[int(i)], materialize=False)
+    bw = cluster.aggregate_bandwidth()
+    t = cluster.makespan_s()
+    return {"nodes": nodes, "file_size": file_size,
+            "agg_MBps": bw / 1e6,
+            "files_s": nodes * m / t,
+            "hit_rate": cluster.local_hit_rate()}
+
+
+def run(arm: str = "cpu", *, count: int = None) -> List[Dict]:
+    if arm == "gpu":
+        scales, net = [1, 4, 8, 16], GPU_NET
+        count = count or 128
+    else:
+        scales, net = [1, 64, 128, 256, 512], CPU_NET
+        # file count must exceed the node count or the benchmark measures
+        # hot-owner serialization instead of scaling (paper uses 2K-128K)
+        count = count or 1024
+    rows = []
+    for size in FILE_SIZES:
+        for n in scales:
+            # F >= 2N keeps the benchmark in the scaling (not hot-owner)
+            # regime while bounding the python-loop cost at large N
+            c = min(count, max(256, 2 * n))
+            rows.append(run_one(n, size, c, net))
+    # efficiency vs the paper's baselines
+    base_n = 4 if arm == "gpu" else 64
+    for size in FILE_SIZES:
+        base = next(r for r in rows
+                    if r["file_size"] == size and r["nodes"] == base_n)
+        peak = next(r for r in rows
+                    if r["file_size"] == size and r["nodes"] == scales[-1])
+        peak["efficiency_vs_base"] = (
+            peak["agg_MBps"] / peak["nodes"]) / (base["agg_MBps"] / base["nodes"])
+    return rows
+
+
+def main() -> List[str]:
+    out = []
+    for arm, fig in (("gpu", "fig5"), ("cpu", "fig6")):
+        for r in run(arm):
+            eff = r.get("efficiency_vs_base")
+            out.append(
+                f"{fig},arm={arm},nodes={r['nodes']},"
+                f"size={r['file_size']//1024}KB,agg_bw={r['agg_MBps']:.0f}MB/s,"
+                f"files_s={r['files_s']:.0f},hit={r['hit_rate']:.3f}"
+                + (f",scale_eff={eff:.3f}" if eff else ""))
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,91 @@
+"""Format experiments/dryrun/*.json into the EXPERIMENTS.md roofline table.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import ARCH_IDS, SHAPES
+
+
+def load(dir_: str) -> List[Dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.1f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(rows: List[Dict], mesh: str = "16x16") -> List[str]:
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "model GF | useful | MFU-bound | peak GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = next((r for r in rows if r.get("arch") == arch
+                      and r.get("shape") == shape
+                      and r.get("mesh") == mesh
+                      and not r.get("skipped")), None)
+            s = next((r for r in rows if r.get("arch") == arch
+                      and r.get("shape") == shape and r.get("skipped")), None)
+            if r is None:
+                if s is not None:
+                    out.append(f"| {arch} | {shape} | — | — | — | SKIP "
+                               f"(sub-quadratic only) | | | | |")
+                continue
+            peak = r.get("peak_memory_bytes") or 0
+            out.append(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+                f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                f"**{r['dominant']}** | {r['model_flops_global']/1e9:.0f} | "
+                f"{r['useful_flops_ratio']:.2f} | {r['mfu_bound']:.3f} | "
+                f"{peak/1e9:.1f} |")
+    return out
+
+
+def multipod_table(rows: List[Dict]) -> List[str]:
+    out = ["| arch | shape | compiled | compile_s | peak GB/dev | "
+           "collectives seen |",
+           "|---|---|---|---|---|---|"]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = next((r for r in rows if r.get("arch") == arch
+                      and r.get("shape") == shape
+                      and r.get("mesh") == "2x16x16"
+                      and not r.get("skipped")), None)
+            if r is None:
+                continue
+            peak = r.get("peak_memory_bytes") or 0
+            kinds = ",".join(sorted((r.get("collectives") or {}).keys()))
+            out.append(f"| {arch} | {shape} | yes | {r['compile_s']:.0f} | "
+                       f"{peak/1e9:.1f} | {kinds} |")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--multipod", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    lines = multipod_table(rows) if args.multipod else table(rows, args.mesh)
+    for l in lines:
+        print(l)
+
+
+if __name__ == "__main__":
+    main()

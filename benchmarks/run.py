@@ -1,0 +1,61 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+  fig1    global vs partitioned dataset view (accuracy/loss gap)
+  fig3    single-node bw/throughput: FanStore vs SSD vs FUSE vs SFS
+  fig5/6  multi-node scaling (GPU-cluster and CPU-cluster arms)
+  fig7-9  application throughput + weak scaling (ResNet/SRGAN/FRNN minis)
+  fig10/11 + sec6.3  compression ratio / prep cost / relative throughput
+  fetch   device-tier fetch collective bytes (uniform vs stratified)
+
+Prints ``name,metric=value,...`` CSV-ish lines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig3,scaling,apps,compression,fetch")
+    ap.add_argument("--skip", default=None)
+    args = ap.parse_args()
+
+    sections = {
+        "fig3": lambda: __import__("benchmarks.io_single_node",
+                                   fromlist=["main"]).main(),
+        "scaling": lambda: __import__("benchmarks.io_scaling",
+                                      fromlist=["main"]).main(),
+        "apps": lambda: __import__("benchmarks.app_throughput",
+                                   fromlist=["main"]).main(),
+        "compression": lambda: __import__("benchmarks.compression",
+                                          fromlist=["main"]).main(),
+        "fig1": lambda: __import__("benchmarks.view_ablation",
+                                   fromlist=["main"]).main(),
+        "fetch": lambda: __import__("benchmarks.fetch_device",
+                                    fromlist=["main"]).main(),
+    }
+    only = set(args.only.split(",")) if args.only else set(sections)
+    skip = set(args.skip.split(",")) if args.skip else set()
+    failures = 0
+    for name, fn in sections.items():
+        if name not in only or name in skip:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for line in fn():
+                print(line, flush=True)
+            print(f"section={name},seconds={time.perf_counter()-t0:.1f}",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"section={name},FAILED", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Batched serving example: prefill a batch of prompts, stream decode.
+
+Exercises every cache family by default (full KV, sliding-window + SSM via
+hymba, MLA latent via deepseek smoke config):
+
+  PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.models import build_model
+from repro.serve.serve_step import generate, make_decode_step, make_prefill_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch).scaled(remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    shape = (args.batch, args.prompt_len)
+    if cfg.family == "audio":
+        shape += (cfg.num_codebooks,)
+    prompt = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, shape).astype(np.int32))}
+    if cfg.family == "vlm":
+        prompt["patches"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.num_patches, cfg.d_model)),
+            jnp.bfloat16)
+
+    t0 = time.perf_counter()
+    out = generate(model, params, prompt, steps=args.steps,
+                   sample="greedy" if args.temperature == 0 else "temp",
+                   key=jax.random.key(1))
+    out = jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    print(f"{args.arch} [{cfg.family}] cache segments: "
+          f"{[(s.kind, s.n_layers, s.window) for s in model.segments]}")
+    print(f"generated {tuple(out.shape)} tokens in {dt:.2f}s "
+          f"({args.batch*args.steps/dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(out)[0].reshape(args.steps, -1)[:, 0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Config registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full published config; ``get_smoke(name)``
+returns the reduced same-family config used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+
+_REGISTRY: Dict[str, "module"] = {}
+
+ARCH_IDS: List[str] = [
+    "falcon-mamba-7b",
+    "granite-moe-3b-a800m",
+    "deepseek-v2-236b",
+    "musicgen-large",
+    "internvl2-76b",
+    "chatglm3-6b",
+    "qwen2-72b",
+    "qwen1.5-32b",
+    "nemotron-4-15b",
+    "hymba-1.5b",
+]
+
+_MODULES = {
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "musicgen-large": "musicgen_large",
+    "internvl2-76b": "internvl2_76b",
+    "chatglm3-6b": "chatglm3_6b",
+    "qwen2-72b": "qwen2_72b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "hymba-1.5b": "hymba_1_5b",
+}
+
+
+def _module(name: str):
+    import importlib
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    if name not in _REGISTRY:
+        _REGISTRY[name] = importlib.import_module(
+            f"repro.configs.{_MODULES[name]}")
+    return _REGISTRY[name]
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+           "ARCH_IDS", "get_config", "get_smoke"]

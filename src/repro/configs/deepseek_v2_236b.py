@@ -1,0 +1,27 @@
+"""deepseek-v2-236b [moe] — MLA + fine-grained MoE.
+
+60L d_model=5120 128H, MLA kv_lora=512 (qk_nope=128 qk_rope=64 v=128,
+q_lora=1536), 2 shared + 160 routed experts top-6, expert d_ff=1536,
+first layer dense (d_ff 12288), vocab=102400 [arXiv:2405.04434].
+160 experts divide the 16-way model axis -> EP (10 experts/shard).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b", family="moe",
+    num_layers=60, d_model=5120, vocab_size=102400,
+    num_heads=128, num_kv_heads=128, head_dim=192,   # qk head (nope+rope)
+    d_ff=12288,                                      # the first dense layer
+    mla=True, q_lora_rank=1536, kv_lora_rank=512,
+    qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+    num_experts=160, experts_top_k=6, num_shared_experts=2, moe_d_ff=1536,
+    first_dense_layers=1,
+    rope="full", rope_theta=10_000.0,
+)
+
+SMOKE = CONFIG.scaled(num_layers=3, d_model=64, vocab_size=128,
+                      num_heads=4, num_kv_heads=4, head_dim=24, d_ff=128,
+                      q_lora_rank=32, kv_lora_rank=16,
+                      qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+                      num_experts=8, experts_top_k=2, num_shared_experts=1,
+                      moe_d_ff=32, moe_block_tokens=64)

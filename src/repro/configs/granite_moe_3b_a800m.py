@@ -1,0 +1,22 @@
+"""granite-moe-3b-a800m [moe] — IBM Granite 3.0 MoE.
+
+32L d_model=1536 24H (GQA kv=8) expert_d_ff=512 vocab=49155, 40 experts
+top-8 [hf:ibm-granite]. Note: the assignment lists "MoE 40e top-8" and
+"32 experts" in two places; we follow the first (40 routed experts).
+40 does not divide the 16-way model axis -> TP-inside-expert sharding
+(d_ff=512 divides 16); see dist/sharding.py.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    num_layers=32, d_model=1536, vocab_size=49155,
+    num_heads=24, num_kv_heads=8, head_dim=64,
+    num_experts=40, experts_top_k=8, moe_d_ff=512,
+    rope="full", rope_theta=10_000.0, tie_embeddings=True,
+)
+
+SMOKE = CONFIG.scaled(num_layers=2, d_model=64, vocab_size=128,
+                      num_heads=4, num_kv_heads=2, head_dim=16,
+                      num_experts=8, experts_top_k=2, moe_d_ff=32,
+                      moe_block_tokens=64)

@@ -1,0 +1,20 @@
+"""internvl2-76b [vlm] — InternViT frontend (STUB) + 76B LM backbone.
+
+Backbone: 80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256
+[arXiv:2404.16821]. input_specs() provides precomputed patch embeddings
+(B, num_patches, d_model); the model prepends them through a connector
+projection and trains CE on text positions only.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    num_layers=80, d_model=8192, vocab_size=128256,
+    num_heads=64, num_kv_heads=8, head_dim=128,
+    d_ff=28672, rope="full", rope_theta=500_000.0,
+    num_patches=256,
+)
+
+SMOKE = CONFIG.scaled(num_layers=2, d_model=64, vocab_size=128,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      num_patches=8)

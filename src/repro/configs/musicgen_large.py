@@ -1,0 +1,20 @@
+"""musicgen-large [audio] — decoder-only LM over EnCodec tokens.
+
+48L d_model=2048 32H d_ff=8192 vocab=2048, 4 codebooks [arXiv:2306.05284].
+The EnCodec frontend is a STUB: input_specs() supplies the (B, T, 4) token
+grid directly (delay-pattern flattening is a host-side detail).
+GELU MLP + LayerNorm, sinusoidal positions via rope="none".
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    num_layers=48, d_model=2048, vocab_size=2048,
+    num_heads=32, num_kv_heads=32, head_dim=64,
+    d_ff=8192, mlp="gelu", norm="ln", rope="none",
+    num_codebooks=4,
+)
+
+SMOKE = CONFIG.scaled(num_layers=2, d_model=64, vocab_size=64,
+                      num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+                      num_codebooks=4)

@@ -1,0 +1,20 @@
+"""Device-resident FanStore — the paper's idea mapped onto a TPU pod.
+
+The paper aggregates node-local SSDs into one transient store and serves
+random sample access over the fabric. On a TPU pod the fast local tier is
+HBM and the fabric is ICI, so:
+
+  * ``device_store``  — the dataset packed to fixed-size sample records and
+    sharded across the mesh (data x model axes; replicated or sharded over
+    pods = the paper's replication factor).
+  * ``fetch``         — per-step batched sample exchange: one capacity-bounded
+    ``all_to_all`` replaces the paper's per-file MPI round trips.
+  * ``codec``         — fixed-rate block quantization (the TPU-idiomatic
+    stand-in for LZSS; decode is a Pallas kernel at HBM bandwidth).
+"""
+from repro.core.device_store import DeviceStore, DeviceStoreConfig
+from repro.core.fetch import make_fetch_fn, tokens_from_payload
+from repro.core.codec import block_quantize, block_dequantize_host
+
+__all__ = ["DeviceStore", "DeviceStoreConfig", "make_fetch_fn",
+           "tokens_from_payload", "block_quantize", "block_dequantize_host"]

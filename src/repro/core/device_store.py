@@ -1,0 +1,101 @@
+"""The HBM-resident dataset shard — FanStore's "local SSD" tier on TPU.
+
+``DeviceStore`` packs a host dataset of fixed-size sample records into a
+single (num_samples, sample_bytes) uint8 array and places it on the mesh:
+
+  * samples sharded over the ``data`` axis (and optionally ``pod``),
+  * bytes sharded over the ``model`` axis (so TP peers don't duplicate HBM —
+    analogous to the paper splitting partitions across nodes),
+  * pod-replicated by default = paper's replication factor R (pod count).
+
+Records must be fixed-rate; variable-size files are padded at pack time
+(``pad_to``) or block-quantized by :mod:`repro.core.codec` first. The
+whole-record fetch mirrors the paper's whole-file sequential reads (§3.4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.fetch import make_fetch_fn
+
+
+@dataclass(frozen=True)
+class DeviceStoreConfig:
+    num_samples: int
+    sample_bytes: int
+    data_axis: str = "data"
+    model_axis: Optional[str] = "model"
+    pod_axis: Optional[str] = None       # None => replicate store across pods
+    capacity_factor: float = 2.0
+
+    def __post_init__(self):
+        if self.sample_bytes % 4:
+            raise ValueError("sample_bytes must be a multiple of 4 "
+                             "(records are bitcast to 4-byte words)")
+
+
+class DeviceStore:
+    """Owns the sharded dataset array + its fetch function."""
+
+    def __init__(self, mesh: Mesh, config: DeviceStoreConfig):
+        self.mesh = mesh
+        self.config = config
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        m = axis_sizes.get(config.model_axis, 1) if config.model_axis else 1
+        if config.sample_bytes % (4 * m):
+            raise ValueError(
+                f"sample_bytes {config.sample_bytes} must divide 4*model "
+                f"axis ({m}) for byte sharding")
+        self.fetch = make_fetch_fn(
+            mesh, num_samples=config.num_samples,
+            sample_bytes=config.sample_bytes,
+            data_axis=config.data_axis, model_axis=config.model_axis,
+            pod_axis=config.pod_axis,
+            capacity_factor=config.capacity_factor)
+        self.store_sharding = NamedSharding(mesh, self.fetch.store_spec)
+        self.idx_sharding = NamedSharding(mesh, self.fetch.idx_spec)
+
+    # -- placement -------------------------------------------------------------
+    def place(self, records: np.ndarray) -> jax.Array:
+        """Move (num_samples, sample_bytes) uint8 host records onto the mesh."""
+        cfg = self.config
+        if records.shape != (cfg.num_samples, cfg.sample_bytes):
+            raise ValueError(f"records shape {records.shape} != "
+                             f"{(cfg.num_samples, cfg.sample_bytes)}")
+        return jax.device_put(np.ascontiguousarray(records, dtype=np.uint8),
+                              self.store_sharding)
+
+    def place_tokens(self, tokens: np.ndarray) -> jax.Array:
+        """Place an int32 (num_samples, seq_len) token dataset as records."""
+        recs = np.ascontiguousarray(tokens, dtype="<i4")
+        recs = recs.view(np.uint8).reshape(tokens.shape[0], -1)
+        return self.place(recs)
+
+    def specs(self) -> Tuple[jax.ShapeDtypeStruct, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStructs for (store, idx) — dry-run stand-ins."""
+        cfg = self.config
+        store = jax.ShapeDtypeStruct(
+            (cfg.num_samples, cfg.sample_bytes), jnp.uint8,
+            sharding=self.store_sharding)
+        # global batch length is the caller's choice; expose a builder
+        return store
+
+    def idx_spec(self, global_batch: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((global_batch,), jnp.int32,
+                                    sharding=self.idx_sharding)
+
+    @property
+    def hbm_bytes_per_device(self) -> int:
+        cfg = self.config
+        axis_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        d = axis_sizes[cfg.data_axis]
+        if cfg.pod_axis:
+            d *= axis_sizes[cfg.pod_axis]
+        m = axis_sizes.get(cfg.model_axis, 1) if cfg.model_axis else 1
+        return cfg.num_samples * cfg.sample_bytes // (d * m)

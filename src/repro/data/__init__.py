@@ -1,0 +1,7 @@
+from repro.data.sampler import (GlobalUniformSampler, StratifiedSampler,
+                                PartitionedViewSampler)
+from repro.data.pipeline import PrefetchLoader, EpochShuffler
+from repro.data import synthetic
+
+__all__ = ["GlobalUniformSampler", "StratifiedSampler", "PartitionedViewSampler",
+           "PrefetchLoader", "EpochShuffler", "synthetic"]

@@ -1,0 +1,134 @@
+"""Host-side prefetching data pipeline (paper §3.4: async I/O / prefetch).
+
+``PrefetchLoader`` runs a pool of I/O threads (Keras uses 4 per process; same
+default) that pull sample indices from a sampler, fetch the bytes through a
+FanStore read function, decode, and stage finished batches in a bounded
+queue — so the I/O of batch t+1..t+depth overlaps the compute of batch t.
+The loader is checkpointable: its cursor is the sampler state.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+
+class EpochShuffler:
+    """Deterministic per-epoch permutation utility (shared by samplers/tests)."""
+
+    def __init__(self, n: int, seed: int = 0):
+        self.n = n
+        self.seed = seed
+
+    def perm(self, epoch: int) -> np.ndarray:
+        return np.random.default_rng((self.seed, epoch)).permutation(self.n)
+
+
+class PrefetchLoader:
+    """Bounded-depth async batch loader.
+
+    Args:
+      sampler: object with ``next_batch() -> np.ndarray[int32]`` and ``state``.
+      fetch: maps one sample index -> bytes (e.g. a FanStore read).
+      decode: maps list-of-bytes for a batch -> model-ready arrays.
+      num_threads: I/O threads *per batch* fetching samples concurrently.
+      depth: batches staged ahead of compute.
+    """
+
+    def __init__(self, sampler, fetch: Callable[[int], bytes],
+                 decode: Callable[[List[bytes]], object], *,
+                 num_threads: int = 4, depth: int = 2):
+        self.sampler = sampler
+        self.fetch = fetch
+        self.decode = decode
+        self.num_threads = num_threads
+        self.depth = depth
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._producer: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    # -- batch assembly ------------------------------------------------------
+    def _fetch_batch(self, indices: np.ndarray) -> object:
+        out: List[Optional[bytes]] = [None] * len(indices)
+        if self.num_threads <= 1:
+            for i, idx in enumerate(indices):
+                out[i] = self.fetch(int(idx))
+        else:
+            cursor = iter(range(len(indices)))
+            lock = threading.Lock()
+            errors: List[BaseException] = []
+
+            def worker():
+                while True:
+                    with lock:
+                        if errors:
+                            return
+                        i = next(cursor, None)
+                    if i is None:
+                        return
+                    try:
+                        out[i] = self.fetch(int(indices[i]))
+                    except BaseException as e:
+                        with lock:
+                            errors.append(e)
+                        return
+
+            threads = [threading.Thread(target=worker)
+                       for _ in range(self.num_threads)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if errors:
+                raise errors[0]
+        return self.decode(out)  # type: ignore[arg-type]
+
+    def _produce(self, num_batches: int) -> None:
+        try:
+            for _ in range(num_batches):
+                if self._stop.is_set():
+                    return
+                batch = self._fetch_batch(self.sampler.next_batch())
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(batch, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:   # surfaced on the consumer side
+            self._err = e
+        finally:
+            self._q.put(None)
+
+    # -- public API ------------------------------------------------------------
+    def batches(self, num_batches: int) -> Iterator[object]:
+        """Yield ``num_batches`` decoded batches with prefetch overlap."""
+        self._stop.clear()
+        self._producer = threading.Thread(
+            target=self._produce, args=(num_batches,), daemon=True)
+        self._producer.start()
+        served = 0
+        while served < num_batches:
+            item = self._q.get()
+            if item is None:
+                break
+            yield item
+            served += 1
+        self._producer.join()
+        if self._err is not None:
+            raise self._err
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+    @property
+    def cursor(self):
+        return self.sampler.state

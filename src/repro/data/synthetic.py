@@ -1,0 +1,67 @@
+"""Synthetic datasets for benchmarks, tests, and examples.
+
+Shapes mirror the paper's workloads: many small files (ImageNet-like blobs),
+medium image pairs (SRGAN-like), and shot files (FRNN-like), plus LM token
+sequences for the assigned-architecture training path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def small_file_dataset(num_files: int, size_range: Tuple[int, int] = (1_000, 200_000),
+                       *, num_dirs: int = 10, seed: int = 0,
+                       entropy_bits: float = 4.0) -> Dict[str, bytes]:
+    """ImageNet-1k-like: many small files across class directories."""
+    rng = np.random.default_rng(seed)
+    hi = int(2 ** entropy_bits)
+    out: Dict[str, bytes] = {}
+    for i in range(num_files):
+        n = int(rng.integers(size_range[0], size_range[1] + 1))
+        out[f"train/cls_{i % num_dirs:04d}/img_{i:07d}.bin"] = \
+            bytes(rng.integers(0, hi, n, dtype=np.uint8))
+    return out
+
+
+def fixed_size_files(file_size: int, count: int, *, seed: int = 0,
+                     entropy_bits: float = 8.0, prefix: str = "bench"
+                     ) -> Dict[str, bytes]:
+    """The paper's §6.2 benchmark layout: uniform file size, one directory."""
+    rng = np.random.default_rng(seed)
+    hi = int(2 ** entropy_bits)
+    return {f"{prefix}/f_{i:06d}.bin":
+            bytes(rng.integers(0, hi, file_size, dtype=np.uint8).tobytes())
+            for i in range(count)}
+
+
+def token_dataset(num_samples: int, seq_len: int, vocab: int, *, seed: int = 0
+                  ) -> np.ndarray:
+    """LM training corpus: (num_samples, seq_len) int32 token ids.
+
+    Generated from a tiny order-1 Markov chain so a model can actually learn
+    structure (loss decreases) in the end-to-end example.
+    """
+    rng = np.random.default_rng(seed)
+    k = min(vocab, 64)
+    trans = rng.dirichlet(np.ones(k) * 0.2, size=k)
+    out = np.empty((num_samples, seq_len), dtype=np.int32)
+    state = rng.integers(0, k, num_samples)
+    for t in range(seq_len):
+        out[:, t] = state
+        u = rng.random(num_samples)
+        cdf = np.cumsum(trans[state], axis=1)
+        state = (u[:, None] < cdf).argmax(axis=1)
+    return out % vocab
+
+
+def tokens_to_files(tokens: np.ndarray, *, prefix: str = "lm") -> Dict[str, bytes]:
+    """Serialize each sequence as one little-endian int32 'file'."""
+    return {f"{prefix}/seq_{i:07d}.bin": tokens[i].astype("<i4").tobytes()
+            for i in range(tokens.shape[0])}
+
+
+def files_to_tokens(blobs, seq_len: int) -> np.ndarray:
+    """Decode a list of int32-token files into a (B, seq_len) batch."""
+    return np.stack([np.frombuffer(b, dtype="<i4", count=seq_len) for b in blobs])

@@ -1,0 +1,25 @@
+"""FanStore host tier — the faithful reproduction of the paper's runtime FS.
+
+Layers:
+  layout     Table-3 partition binary format
+  lzss       LZSS compression codec (the paper uses LZSSE8)
+  metadata   stat records, replicated input metadata, consistent-hash ring
+  store      per-node store: partitions, refcount cache, write buffers
+  cluster    simulated multi-node deployment with an interconnect model
+  fs         POSIX-style file API under a /fanstore mount prefix
+  intercept  optional builtins.open/os.stat/os.listdir interception
+  prepare    the data-preparation program (files -> partitions)
+"""
+from repro.fanstore.layout import Partition, pack_partition, iter_partition, FileRecord
+from repro.fanstore.metadata import StatRecord, ConsistentHashRing, MetadataTable
+from repro.fanstore.store import NodeStore
+from repro.fanstore.cluster import FanStoreCluster, InterconnectModel
+from repro.fanstore.fs import FanStoreFS
+from repro.fanstore.prepare import prepare_dataset
+
+__all__ = [
+    "Partition", "pack_partition", "iter_partition", "FileRecord",
+    "StatRecord", "ConsistentHashRing", "MetadataTable",
+    "NodeStore", "FanStoreCluster", "InterconnectModel", "FanStoreFS",
+    "prepare_dataset",
+]

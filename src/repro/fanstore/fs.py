@@ -1,0 +1,146 @@
+"""POSIX-style interface over a FanStore cluster (paper §5.5).
+
+The real FanStore detours glibc ``open/read/close/stat/...`` with binary
+interception; there is no Python analogue of patching compiled libc calls, so
+this layer exposes the same surface as a file-object API rooted at a mount
+prefix (default ``/fanstore``), and :mod:`repro.fanstore.intercept` optionally
+monkeypatches ``builtins.open`` / ``os.stat`` / ``os.listdir`` so unmodified
+user code that touches ``/fanstore/...`` paths transparently hits the store —
+the closest user-space equivalent of the paper's detours.
+
+Consistency surface (paper §3.5): multi-read / single-write. Reads are
+whole-file-sequential but ``seek``/partial ``read`` work (the cache holds the
+full decompressed payload). Writes go to new paths only and become visible
+on ``close()``.
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import List, Optional
+
+from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.metadata import StatRecord
+
+MOUNT = "/fanstore"
+
+
+class FanStoreFile(io.RawIOBase):
+    """A read- or write-mode descriptor against the store."""
+
+    def __init__(self, fs: "FanStoreFS", path: str, mode: str):
+        super().__init__()
+        self._fs = fs
+        self._path = path
+        self._mode = mode
+        self._pos = 0
+        if "r" in mode:
+            self._data: Optional[bytes] = fs.cluster.read(fs.node_id, path)
+            self._buf: Optional[List[bytes]] = None
+        elif "w" in mode or "x" in mode:
+            self._data = None
+            self._buf = []
+            fs.cluster.nodes[fs.node_id].write_begin(path)
+        else:
+            raise ValueError(f"unsupported mode {mode!r}")
+
+    # -- reads --
+    def readable(self) -> bool:
+        return self._data is not None
+
+    def read(self, size: int = -1) -> bytes:
+        if self._data is None:
+            raise io.UnsupportedOperation("not open for reading")
+        if size is None or size < 0:
+            out = self._data[self._pos:]
+            self._pos = len(self._data)
+        else:
+            out = self._data[self._pos: self._pos + size]
+            self._pos += len(out)
+        return out
+
+    def seekable(self) -> bool:
+        return self._data is not None
+
+    def seek(self, offset: int, whence: int = os.SEEK_SET) -> int:
+        base = {os.SEEK_SET: 0, os.SEEK_CUR: self._pos,
+                os.SEEK_END: len(self._data or b"")}[whence]
+        self._pos = max(0, base + offset)
+        return self._pos
+
+    # -- writes --
+    def writable(self) -> bool:
+        return self._buf is not None
+
+    def write(self, data) -> int:
+        if self._buf is None:
+            raise io.UnsupportedOperation("not open for writing")
+        b = bytes(data)
+        self._fs.cluster.nodes[self._fs.node_id].write_append(self._path, b)
+        self._buf.append(b)
+        return len(b)
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        if self._buf is not None:
+            node = self._fs.cluster.nodes[self._fs.node_id]
+            st, payload = node.write_finish(self._path)
+            from repro.fanstore.metadata import modulo_placement
+            owner = modulo_placement(self._path, self._fs.cluster.num_nodes)
+            with self._fs.cluster._lock:
+                self._fs.cluster.output_data[self._path] = (self._fs.node_id, payload)
+                self._fs.cluster.output_meta[owner][self._path] = st
+        super().close()
+
+
+class FanStoreFS:
+    """The per-process client: node-local view of the global namespace."""
+
+    def __init__(self, cluster: FanStoreCluster, node_id: int, *,
+                 mount: str = MOUNT):
+        self.cluster = cluster
+        self.node_id = node_id
+        self.mount = mount.rstrip("/")
+
+    def resolve(self, path: str) -> str:
+        """Strip the mount prefix; reject paths outside the mount."""
+        if not path.startswith(self.mount + "/") and path != self.mount:
+            raise FileNotFoundError(f"{path}: outside FanStore mount {self.mount}")
+        return path[len(self.mount):].strip("/")
+
+    def owns(self, path: str) -> bool:
+        return path == self.mount or path.startswith(self.mount + "/")
+
+    def open(self, path: str, mode: str = "rb") -> FanStoreFile:
+        if "b" not in mode:
+            raise ValueError("FanStore is a binary store; use 'rb'/'wb'")
+        return FanStoreFile(self, self.resolve(path), mode.replace("b", ""))
+
+    def stat(self, path: str) -> StatRecord:
+        return self.cluster.stat(self.resolve(path))
+
+    def listdir(self, path: str) -> List[str]:
+        return self.cluster.readdir(self.resolve(path))
+
+    def exists(self, path: str) -> bool:
+        try:
+            self.stat(path)
+            return True
+        except FileNotFoundError:
+            return False
+
+    def walk_count(self, path: str = "") -> int:
+        """The start-of-training metadata traversal (paper §3.3): count files."""
+        rel = self.resolve(path) if path else ""
+        todo = [rel]
+        n = 0
+        while todo:
+            d = todo.pop()
+            for name in self.cluster.readdir(d):
+                child = f"{d}/{name}" if d else name
+                if self.cluster.metadata.is_dir(child):
+                    todo.append(child)
+                else:
+                    n += 1
+        return n

@@ -1,0 +1,65 @@
+"""User-space call interception (paper §5.5, Python-idiomatic equivalent).
+
+The paper detours glibc entry points so unmodified binaries hit FanStore.
+In-process Python the analogous seam is the callable itself: we patch
+``builtins.open``, ``os.stat``, ``os.listdir`` and ``os.path.exists`` to
+route any path under the mount prefix into a :class:`FanStoreFS`, and fall
+through to the real implementations otherwise. Use as a context manager::
+
+    with intercept(fs):
+        data = open("/fanstore/train/img_000.bin", "rb").read()
+
+DESIGN.md §2 records why the binary-detour mechanism itself has no TPU or
+Python analogue; this is the closest faithful seam.
+"""
+from __future__ import annotations
+
+import builtins
+import contextlib
+import os
+from typing import Iterator
+
+from repro.fanstore.fs import FanStoreFS
+
+
+@contextlib.contextmanager
+def intercept(fs: FanStoreFS) -> Iterator[FanStoreFS]:
+    real_open = builtins.open
+    real_stat = os.stat
+    real_listdir = os.listdir
+    real_exists = os.path.exists
+
+    def _open(path, mode="r", *a, **kw):
+        if isinstance(path, (str, os.PathLike)) and fs.owns(os.fspath(path)):
+            return fs.open(os.fspath(path), mode if "b" in mode else mode + "b")
+        return real_open(path, mode, *a, **kw)
+
+    def _stat(path, *a, **kw):
+        if isinstance(path, (str, os.PathLike)) and fs.owns(os.fspath(path)):
+            st = fs.stat(os.fspath(path))
+            return os.stat_result((st.st_mode, st.st_ino, st.st_dev, st.st_nlink,
+                                   st.st_uid, st.st_gid, st.st_size,
+                                   int(st.st_atime), int(st.st_mtime), int(st.st_ctime)))
+        return real_stat(path, *a, **kw)
+
+    def _listdir(path=".", *a, **kw):
+        if isinstance(path, (str, os.PathLike)) and fs.owns(os.fspath(path)):
+            return fs.listdir(os.fspath(path))
+        return real_listdir(path, *a, **kw)
+
+    def _exists(path):
+        if isinstance(path, (str, os.PathLike)) and fs.owns(os.fspath(path)):
+            return fs.exists(os.fspath(path))
+        return real_exists(path)
+
+    builtins.open = _open
+    os.stat = _stat
+    os.listdir = _listdir
+    os.path.exists = _exists
+    try:
+        yield fs
+    finally:
+        builtins.open = real_open
+        os.stat = real_stat
+        os.listdir = real_listdir
+        os.path.exists = real_exists

@@ -1,0 +1,128 @@
+"""LZSS codec — Lempel–Ziv–Storer–Szymanski textual substitution.
+
+The paper compresses partitions with LZSSE8 (an SSE-accelerated LZSS variant).
+This is a faithful, dependency-free LZSS with the classic parameters:
+
+  * 4 KiB sliding window (12-bit match offset)
+  * match lengths 3..18 (4-bit length field, bias 3)
+  * token stream framed by flag bytes, 8 tokens per flag (bit=1 -> literal)
+
+Format:  [u32 original_size] [flag byte] [8 tokens] [flag byte] ...
+A match token is two bytes: ``oooooooo oooollll`` (12-bit offset back from the
+current position, 1-based; 4-bit length-3).
+
+The encoder is greedy with a 3-byte hash chain, like LZSSE's fast levels.
+Pure Python keeps it portable; throughput is adequate for the partition sizes
+used in tests/benchmarks, and the benchmark harness also exposes zstd as the
+"production speed" codec (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import struct
+
+WINDOW = 1 << 12          # 4096
+MIN_MATCH = 3
+MAX_MATCH = MIN_MATCH + 15  # 18
+_CHAIN = 32               # max hash-chain probes (compression/speed tradeoff)
+
+
+def compress(data: bytes, *, max_probes: int = _CHAIN) -> bytes:
+    """Greedy LZSS encode. Returns header + token stream."""
+    n = len(data)
+    out = bytearray(struct.pack("<I", n))
+    if n == 0:
+        return bytes(out)
+    # hash of 3-byte prefix -> list of recent positions (most recent last)
+    table: dict = {}
+    i = 0
+    flags_pos = -1
+    flag = 0
+    nbits = 0
+
+    def _flush_flag():
+        nonlocal flags_pos, flag, nbits
+        if flags_pos >= 0:
+            out[flags_pos] = flag
+        flags_pos = len(out)
+        out.append(0)
+        flag = 0
+        nbits = 0
+
+    _flush_flag()
+    while i < n:
+        best_len = 0
+        best_off = 0
+        if i + MIN_MATCH <= n:
+            key = data[i: i + MIN_MATCH]
+            chain = table.get(key)
+            if chain:
+                lo = i - WINDOW
+                probes = 0
+                for j in reversed(chain):
+                    if j < lo or probes >= max_probes:
+                        break
+                    probes += 1
+                    # extend match
+                    k = 0
+                    maxk = min(MAX_MATCH, n - i)
+                    while k < maxk and data[j + k] == data[i + k]:
+                        k += 1
+                    if k > best_len:
+                        best_len, best_off = k, i - j
+                        if k == MAX_MATCH:
+                            break
+        if best_len >= MIN_MATCH:
+            token = ((best_off - 1) << 4) | (best_len - MIN_MATCH)
+            out += struct.pack("<H", token)
+            # index every covered position (bounded chains)
+            end = i + best_len
+            while i < end and i + MIN_MATCH <= n:
+                key = data[i: i + MIN_MATCH]
+                chain = table.setdefault(key, [])
+                chain.append(i)
+                if len(chain) > 4 * max_probes:
+                    del chain[: 2 * max_probes]
+                i += 1
+            i = end
+        else:
+            flag |= 1 << nbits
+            out.append(data[i])
+            if i + MIN_MATCH <= n:
+                key = data[i: i + MIN_MATCH]
+                chain = table.setdefault(key, [])
+                chain.append(i)
+                if len(chain) > 4 * max_probes:
+                    del chain[: 2 * max_probes]
+            i += 1
+        nbits += 1
+        if nbits == 8:
+            _flush_flag()
+    out[flags_pos] = flag
+    return bytes(out)
+
+
+def decompress(blob: bytes) -> bytes:
+    """Decode a :func:`compress` stream back to the original bytes."""
+    (n,) = struct.unpack_from("<I", blob, 0)
+    pos = 4
+    out = bytearray()
+    while len(out) < n:
+        flag = blob[pos]
+        pos += 1
+        for bit in range(8):
+            if len(out) >= n:
+                break
+            if flag & (1 << bit):
+                out.append(blob[pos])
+                pos += 1
+            else:
+                (token,) = struct.unpack_from("<H", blob, pos)
+                pos += 2
+                off = (token >> 4) + 1
+                length = (token & 0xF) + MIN_MATCH
+                start = len(out) - off
+                if start < 0:
+                    raise IOError("corrupt LZSS stream: offset before start")
+                for k in range(length):      # may self-overlap (RLE-style)
+                    out.append(out[start + k])
+    return bytes(out)

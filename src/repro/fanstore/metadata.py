@@ -1,0 +1,215 @@
+"""Metadata management (paper §5.3).
+
+* ``StatRecord`` — the 144-byte per-file stat stored inline in partitions,
+  laid out like glibc's x86-64 ``struct stat``.
+* ``MetadataTable`` — the RAM hashtable replicated on every node for *input*
+  files (path -> record + location), with a per-directory children cache so
+  ``readdir()`` returns immediately (paper: "preprocessed and cached in a hash
+  table to allow readdir() to return immediately").
+* Output-file placement: the paper maps a path to a node with
+  ``hash(path) % node_count`` (it calls this a consistent hash). We provide
+  that faithful ``modulo_placement`` plus a true ``ConsistentHashRing`` with
+  virtual nodes — the ring is what makes elastic membership changes cheap
+  (O(moved/total) instead of full reshuffle) and is used by
+  :mod:`repro.train.elastic`.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import hashlib
+import struct
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+S_IFREG = 0o100000
+S_IFDIR = 0o040000
+
+# glibc x86-64 struct stat: dev ino nlink | mode uid gid pad | rdev size
+# blksize blocks | atim mtim ctim (sec,nsec each) | 3x u64 reserved == 144 B
+_STAT_FMT = "<QQQ IIiI Q q qq qq qq qq QQQ"
+assert struct.calcsize(_STAT_FMT) == 144
+
+
+@dataclass(frozen=True)
+class StatRecord:
+    st_dev: int = 0
+    st_ino: int = 0
+    st_nlink: int = 1
+    st_mode: int = S_IFREG | 0o644
+    st_uid: int = 0
+    st_gid: int = 0
+    st_rdev: int = 0
+    st_size: int = 0
+    st_blksize: int = 4096
+    st_blocks: int = 0
+    st_atime: float = 0.0
+    st_mtime: float = 0.0
+    st_ctime: float = 0.0
+
+    @staticmethod
+    def for_data(size: int, *, mode: int = S_IFREG | 0o644) -> "StatRecord":
+        now = 0.0  # deterministic by default; callers may stamp real time
+        return StatRecord(st_size=size, st_mode=mode,
+                          st_blocks=(size + 511) // 512,
+                          st_atime=now, st_mtime=now, st_ctime=now)
+
+    def replace(self, **kw) -> "StatRecord":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def is_dir(self) -> bool:
+        return bool(self.st_mode & S_IFDIR)
+
+    def pack(self) -> bytes:
+        def ts(t: float) -> Tuple[int, int]:
+            sec = int(t)
+            return sec, int((t - sec) * 1e9)
+        a, m, c = ts(self.st_atime), ts(self.st_mtime), ts(self.st_ctime)
+        return struct.pack(
+            _STAT_FMT, self.st_dev, self.st_ino, self.st_nlink,
+            self.st_mode, self.st_uid, self.st_gid, 0, self.st_rdev,
+            self.st_size, self.st_blksize, self.st_blocks,
+            a[0], a[1], m[0], m[1], c[0], c[1], 0, 0, 0)
+
+    @staticmethod
+    def unpack(raw: bytes) -> "StatRecord":
+        (dev, ino, nlink, mode, uid, gid, _pad, rdev, size, blksize, blocks,
+         asec, ans, msec, mns, csec, cns, _r0, _r1, _r2) = struct.unpack(_STAT_FMT, raw)
+        return StatRecord(st_dev=dev, st_ino=ino, st_nlink=nlink, st_mode=mode,
+                          st_uid=uid, st_gid=gid, st_rdev=rdev, st_size=size,
+                          st_blksize=blksize, st_blocks=blocks,
+                          st_atime=asec + ans / 1e9, st_mtime=msec + mns / 1e9,
+                          st_ctime=csec + cns / 1e9)
+
+
+@dataclass(frozen=True)
+class FileLocation:
+    """Where a file's bytes live: owning node + partition + record index."""
+    node_id: int
+    partition_id: int
+    record_index: int
+    replicas: Tuple[int, ...] = ()   # other nodes holding a copy
+
+    @property
+    def all_owners(self) -> Tuple[int, ...]:
+        return (self.node_id,) + self.replicas
+
+
+def path_hash(path: str) -> int:
+    """Stable 64-bit path hash (the paper's placement hash)."""
+    return int.from_bytes(hashlib.blake2b(path.encode(), digest_size=8).digest(), "little")
+
+
+def modulo_placement(path: str, node_count: int) -> int:
+    """The paper's output-metadata placement: hash(path) % node_count."""
+    return path_hash(path) % node_count
+
+
+class ConsistentHashRing:
+    """True consistent hashing with virtual nodes (beyond-paper, for elasticity)."""
+
+    def __init__(self, node_ids: Iterable[int], *, vnodes: int = 64):
+        self.vnodes = vnodes
+        self._ring: List[Tuple[int, int]] = []
+        self._nodes: set = set()
+        for nid in node_ids:
+            self.add_node(nid)
+
+    def _vhash(self, node_id: int, replica: int) -> int:
+        return path_hash(f"node:{node_id}:v{replica}")
+
+    def add_node(self, node_id: int) -> None:
+        if node_id in self._nodes:
+            return
+        self._nodes.add(node_id)
+        for r in range(self.vnodes):
+            bisect.insort(self._ring, (self._vhash(node_id, r), node_id))
+
+    def remove_node(self, node_id: int) -> None:
+        if node_id not in self._nodes:
+            return
+        self._nodes.discard(node_id)
+        self._ring = [(h, n) for (h, n) in self._ring if n != node_id]
+
+    @property
+    def nodes(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._nodes))
+
+    def owner(self, path: str) -> int:
+        if not self._ring:
+            raise RuntimeError("empty hash ring")
+        h = path_hash(path)
+        idx = bisect.bisect_right(self._ring, (h, 1 << 62)) % len(self._ring)
+        return self._ring[idx][1]
+
+    def owners(self, path: str, k: int) -> List[int]:
+        """First k distinct nodes clockwise from the path's point (replica set)."""
+        if k > len(self._nodes):
+            raise ValueError("k exceeds live node count")
+        h = path_hash(path)
+        idx = bisect.bisect_right(self._ring, (h, 1 << 62))
+        picked: List[int] = []
+        for step in range(len(self._ring)):
+            nid = self._ring[(idx + step) % len(self._ring)][1]
+            if nid not in picked:
+                picked.append(nid)
+                if len(picked) == k:
+                    break
+        return picked
+
+
+class MetadataTable:
+    """Replicated input-file metadata: path -> (StatRecord, FileLocation).
+
+    Also maintains the directory -> children index that backs ``readdir()``.
+    All mutating ops are idempotent inserts; inputs are immutable during
+    training (paper §3.5), so no locking is needed for readers.
+    """
+
+    def __init__(self) -> None:
+        self._files: Dict[str, Tuple[StatRecord, FileLocation]] = {}
+        self._dirs: Dict[str, List[str]] = {"": []}
+
+    def __len__(self) -> int:
+        return len(self._files)
+
+    @staticmethod
+    def _parents(path: str) -> List[str]:
+        parts = path.strip("/").split("/")
+        return ["/".join(parts[:i]) for i in range(len(parts))]
+
+    def insert(self, path: str, st: StatRecord, loc: FileLocation) -> None:
+        path = path.strip("/")
+        self._files[path] = (st, loc)
+        # materialize parent dirs + child links
+        child = path
+        for parent in reversed(self._parents(path)):
+            kids = self._dirs.setdefault(parent, [])
+            name = child[len(parent):].lstrip("/") if parent else child.split("/")[0]
+            if name not in kids:
+                kids.append(name)
+            child = parent
+
+    def lookup(self, path: str) -> Optional[Tuple[StatRecord, FileLocation]]:
+        return self._files.get(path.strip("/"))
+
+    def stat(self, path: str) -> Optional[StatRecord]:
+        path = path.strip("/")
+        hit = self._files.get(path)
+        if hit:
+            return hit[0]
+        if path in self._dirs:
+            return StatRecord(st_mode=S_IFDIR | 0o755, st_nlink=2)
+        return None
+
+    def readdir(self, path: str) -> Optional[List[str]]:
+        kids = self._dirs.get(path.strip("/"))
+        return sorted(kids) if kids is not None else None
+
+    def is_dir(self, path: str) -> bool:
+        return path.strip("/") in self._dirs
+
+    def paths(self) -> Iterable[str]:
+        return self._files.keys()

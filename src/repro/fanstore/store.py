@@ -1,0 +1,169 @@
+"""Per-node FanStore store (paper §5.4).
+
+Each compute node runs one ``NodeStore`` holding:
+  * the partitions assigned to it ("local SSD" tier — kept in RAM here, with
+    an optional spill directory to model the on-disk layout),
+  * an index path -> (partition_id, record) for its local files,
+  * the refcount file cache: a file's decompressed bytes stay cached while any
+    open descriptor refers to it and are evicted when the count reaches zero
+    (paper: uniform random access defeats LRU; evict-on-last-close instead),
+  * write buffers for output files: bytes are concatenated in RAM and the
+    metadata becomes visible only when ``close()`` forwards it to the node
+    chosen by the placement hash (visible-until-finish consistency).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.fanstore.layout import FileRecord, iter_partition
+from repro.fanstore.metadata import StatRecord
+
+
+@dataclass
+class _CacheEntry:
+    data: bytes
+    refcount: int = 0
+
+
+@dataclass
+class _WriteBuffer:
+    chunks: List[bytes] = field(default_factory=list)
+
+    def append(self, data: bytes) -> int:
+        self.chunks.append(bytes(data))
+        return len(data)
+
+    def getvalue(self) -> bytes:
+        return b"".join(self.chunks)
+
+
+class NodeStore:
+    """One node's slice of the transient store."""
+
+    def __init__(self, node_id: int, *, codec: str = "lzss",
+                 spill_dir: Optional[str] = None) -> None:
+        self.node_id = node_id
+        self.codec = codec
+        self.spill_dir = spill_dir
+        self._partitions: Dict[int, bytes] = {}
+        self._index: Dict[str, Tuple[int, FileRecord]] = {}
+        self._cache: Dict[str, _CacheEntry] = {}
+        self._writes: Dict[str, _WriteBuffer] = {}
+        # counters for benchmarks / tests
+        self.stats = {"local_opens": 0, "cache_hits": 0, "evictions": 0,
+                      "bytes_read": 0, "bytes_served": 0, "decompressed": 0}
+
+    # ---- partition loading -------------------------------------------------
+    def load_partition(self, partition_id: int, blob: bytes) -> List[str]:
+        """Install a partition; returns the paths it contributes."""
+        if self.spill_dir is not None:
+            os.makedirs(self.spill_dir, exist_ok=True)
+            fn = os.path.join(self.spill_dir, f"part_{partition_id:06d}.fst")
+            with open(fn, "wb") as f:
+                f.write(blob)
+        self._partitions[partition_id] = blob
+        paths = []
+        for rec in iter_partition(blob, codec=self.codec):
+            self._index[rec.path] = (partition_id, rec)
+            paths.append(rec.path)
+        return paths
+
+    def drop_partition(self, partition_id: int) -> None:
+        self._partitions.pop(partition_id, None)
+        self._index = {p: (pid, r) for p, (pid, r) in self._index.items()
+                       if pid != partition_id}
+
+    @property
+    def partition_ids(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._partitions))
+
+    def has(self, path: str) -> bool:
+        return path in self._index
+
+    def local_paths(self) -> List[str]:
+        return list(self._index)
+
+    def record_for(self, path: str) -> Optional[FileRecord]:
+        hit = self._index.get(path)
+        return hit[1] if hit else None
+
+    # ---- reads (local tier) ------------------------------------------------
+    def open_local(self, path: str) -> bytes:
+        """Open+read a local file: refcount++ and return (cached) bytes."""
+        entry = self._cache.get(path)
+        if entry is not None:
+            entry.refcount += 1
+            self.stats["cache_hits"] += 1
+            return entry.data
+        hit = self._index.get(path)
+        if hit is None:
+            raise FileNotFoundError(path)
+        pid, rec = hit
+        blob = self._partitions[pid]
+        raw = blob[rec.data_offset: rec.data_offset + rec.stored_size]
+        if rec.compressed_size:
+            from repro.fanstore.layout import _decompress
+            data = _decompress(self.codec, bytes(raw), rec.stat.st_size)
+            self.stats["decompressed"] += 1
+        else:
+            data = bytes(raw)
+        self._cache[path] = _CacheEntry(data=data, refcount=1)
+        self.stats["local_opens"] += 1
+        self.stats["bytes_read"] += len(data)
+        return data
+
+    def release(self, path: str) -> None:
+        """close(): refcount--; evict at zero (paper's counter table)."""
+        entry = self._cache.get(path)
+        if entry is None:
+            return
+        entry.refcount -= 1
+        if entry.refcount <= 0:
+            del self._cache[path]
+            self.stats["evictions"] += 1
+
+    def serve_remote(self, path: str) -> bytes:
+        """Handle a peer's round-trip read request (no cache interaction)."""
+        data = self.open_local(path)
+        # the serving side does not hold a descriptor; release immediately
+        self.release(path)
+        self.stats["bytes_served"] += len(data)
+        return data
+
+    @property
+    def cached_bytes(self) -> int:
+        return sum(len(e.data) for e in self._cache.values())
+
+    @property
+    def open_files(self) -> int:
+        return sum(e.refcount for e in self._cache.values())
+
+    # ---- writes (output tier) ----------------------------------------------
+    def write_begin(self, path: str) -> None:
+        if path in self._index:
+            raise PermissionError(f"{path}: input files are immutable (single-write)")
+        self._writes.setdefault(path, _WriteBuffer())
+
+    def write_append(self, path: str, data: bytes) -> int:
+        buf = self._writes.get(path)
+        if buf is None:
+            raise IOError(f"{path}: not open for write")
+        return buf.append(data)
+
+    def write_finish(self, path: str) -> Tuple[StatRecord, bytes]:
+        """close() on a written file: returns the final stat + payload.
+
+        The caller (cluster) forwards the metadata entry to the placement-hash
+        owner; only then does the file become visible.
+        """
+        buf = self._writes.pop(path, None)
+        if buf is None:
+            raise IOError(f"{path}: not open for write")
+        data = buf.getvalue()
+        return StatRecord.for_data(len(data)), data
+
+    @property
+    def pending_writes(self) -> int:
+        return len(self._writes)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots FanStore touches.
+
+  dequant     the fetch path's "decompression" (block-dequant at HBM bw)
+  ssm_scan    chunked selective scan for the mamba/hybrid architectures
+  flash_attn  causal GQA attention for the prefill/training path
+
+Each kernel is pl.pallas_call + explicit BlockSpec VMEM tiling, validated on
+CPU with interpret=True against the pure-jnp oracles in ref.py.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

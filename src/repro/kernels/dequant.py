@@ -1,0 +1,59 @@
+"""Blockwise int8 -> bf16 dequantization kernel (the FanStore decode path).
+
+This is the TPU stand-in for the paper's LZSS decompression (DESIGN.md §2):
+fetched sample records arrive as per-block-scaled int8; this kernel widens
+them at HBM bandwidth right after the all_to_all, so "decompression" costs
+one VPU pass — the same compute-for-bandwidth trade the paper measures in
+its Fig 10/11, but with a dense fixed-rate codec that the VPU likes.
+
+Tiling: grid (N/bn, F/bf); each program dequantizes a (bn, bf) VMEM tile of
+payload against its (bn, bf/QBLOCK) scale tile. bf is a multiple of QBLOCK
+and of 128 lanes; int8 loads use (32, 128) packing on TPU, so bn defaults
+to a multiple of 32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 256     # elements per quantization scale block
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, qblock: int):
+    q = q_ref[...].astype(jnp.float32)              # (bn, bf)
+    s = s_ref[...].astype(jnp.float32)              # (bn, bf//qblock)
+    bn, bf = q.shape
+    s_wide = jnp.repeat(s, qblock, axis=1)          # (bn, bf)
+    o_ref[...] = (q * s_wide).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_f", "qblock",
+                                    "out_dtype", "interpret"))
+def dequant(q: jnp.ndarray, scales: jnp.ndarray, *, block_n: int = 256,
+            block_f: int = 512, qblock: int = QBLOCK,
+            out_dtype=jnp.bfloat16, interpret: bool = False) -> jnp.ndarray:
+    """q: (N, F) int8, scales: (N, F//qblock) -> (N, F) out_dtype."""
+    n, f = q.shape
+    if f % qblock:
+        raise ValueError(f"F={f} must divide qblock={qblock}")
+    bn = min(block_n, n)
+    bf = min(block_f, f)
+    bf = max(qblock, (bf // qblock) * qblock)
+    if n % bn or f % bf:
+        raise ValueError(f"shape ({n},{f}) must tile by ({bn},{bf})")
+    grid = (n // bn, f // bf)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, qblock=qblock),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bf), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bf // qblock), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, f), out_dtype),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,58 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the compiled kernels run natively; on CPU
+(this container) ``interpret=True`` executes the kernel bodies through the
+Pallas interpreter so tests validate the real kernel logic, and the
+``*_auto`` wrappers fall back to the pure-jnp references for speed-sensitive
+paths (dry-run lowering uses the references — see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dequant import dequant as dequant_kernel
+from repro.kernels.flash_attn import flash_attention as flash_kernel
+from repro.kernels.ssm_scan import ssm_scan as ssm_kernel
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def dequant(q, scales, *, qblock: int = 256, out_dtype=jnp.bfloat16,
+            impl: Optional[str] = None):
+    """impl: 'kernel' | 'interpret' | 'ref' | None (auto)."""
+    impl = impl or ("kernel" if on_tpu() else "ref")
+    if impl == "ref":
+        return ref.dequant_ref(q, scales, block=qblock, out_dtype=out_dtype)
+    return dequant_kernel(q, scales, qblock=qblock, out_dtype=out_dtype,
+                          interpret=(impl == "interpret"))
+
+
+def ssm_scan(u, dt, b_in, c_in, a_log, d_skip, *, impl: Optional[str] = None,
+             block_d: int = 512, time_chunk: int = 256):
+    impl = impl or ("kernel" if on_tpu() else "ref")
+    if impl == "ref":
+        return ref.ssm_scan_ref(u, dt, b_in, c_in, a_log, d_skip)
+    return ssm_kernel(u, dt, b_in, c_in, a_log, d_skip,
+                      block_d=min(block_d, u.shape[-1]),
+                      time_chunk=min(time_chunk, u.shape[1]),
+                      interpret=(impl == "interpret"))
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              scale: Optional[float] = None, impl: Optional[str] = None,
+              block_q: int = 128, block_k: int = 128):
+    impl = impl or ("kernel" if on_tpu() else "ref")
+    if impl == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 scale=scale)
+    return flash_kernel(q, k, v, causal=causal, window=window, scale=scale,
+                        block_q=min(block_q, q.shape[1]),
+                        block_k=min(block_k, k.shape[1]),
+                        interpret=(impl == "interpret"))

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately naive — small-shape clarity over performance — and
+are what the kernel tests sweep against with assert_allclose.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_ref(q: jnp.ndarray, scales: jnp.ndarray, *, block: int = 256,
+                out_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """q: (N, F) int8; scales: (N, F//block) f16/f32 -> (N, F) out_dtype."""
+    n, f = q.shape
+    xb = q.reshape(n, f // block, block).astype(jnp.float32)
+    out = xb * scales.astype(jnp.float32)[..., None]
+    return out.reshape(n, f).astype(out_dtype)
+
+
+def ssm_scan_ref(u, dt, b_in, c_in, a_log, d_skip,
+                 h0: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential selective scan (fp32 state).
+
+    u, dt: (B, T, D); b_in, c_in: (B, T, S); a_log: (D, S); d_skip: (D,).
+    Returns (y (B, T, D) fp32, h_final (B, D, S) fp32).
+    """
+    bsz, t, d = u.shape
+    s = b_in.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, s), jnp.float32)
+
+    def step(h, xs):
+        ut, dtt, bt, ct = xs                     # (B,D),(B,D),(B,S),(B,S)
+        a_bar = jnp.exp(dtt.astype(jnp.float32)[..., None] * a)
+        bu = (dtt * ut).astype(jnp.float32)[..., None] * \
+            bt.astype(jnp.float32)[:, None, :]
+        h = a_bar * h + bu
+        y = jnp.einsum("bds,bs->bd", h, ct.astype(jnp.float32))
+        return h, y
+
+    xs = (u.swapaxes(0, 1), dt.swapaxes(0, 1),
+          b_in.swapaxes(0, 1), c_in.swapaxes(0, 1))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + u.astype(jnp.float32) * d_skip.astype(jnp.float32)
+    return y, h_fin
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Naive softmax attention. q: (B,Tq,H,dh); k,v: (B,Tk,KV,*)."""
+    b, tq, h, dh = q.shape
+    tk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, tq, kv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(tq)[:, None]
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos + (tk - tq)     # align ends if tq != tk
+    if window is not None:
+        mask &= (qpos + (tk - tq) - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(b, tq, h, v.shape[-1])

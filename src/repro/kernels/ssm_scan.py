@@ -1,0 +1,99 @@
+"""Chunked selective-scan (Mamba-1) Pallas kernel.
+
+Grid: (B, D/bd, T/tc) — the time axis is the *last* (sequential on TPU)
+grid dimension, so the (bd, S) recurrent state lives in a VMEM scratch
+buffer that persists across time-chunk iterations: zeroed at t_idx == 0,
+carried forward otherwise, exactly the chunked recurrence of
+repro.models.mamba.selective_scan but with explicit tiles.
+
+Within a chunk the recurrence is a sequential fori_loop over tc steps —
+on TPU each step is a (bd, S) VPU op; tc trades VMEM residency (inputs
+(tc, bd)) against grid overhead. State math is fp32 regardless of input
+dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(u_ref, dt_ref, b_ref, c_ref, alog_ref, dskip_ref,
+                y_ref, hout_ref, h_scratch, *, tc: int):
+    t_idx = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    a = -jnp.exp(alog_ref[...].astype(jnp.float32))      # (bd, S)
+    u = u_ref[...].astype(jnp.float32)                    # (1, tc, bd)
+    dt = dt_ref[...].astype(jnp.float32)
+    b_in = b_ref[...].astype(jnp.float32)                 # (1, tc, S)
+    c_in = c_ref[...].astype(jnp.float32)
+    dskip = dskip_ref[...].astype(jnp.float32)            # (bd,)
+
+    def step(i, carry):
+        h, ys = carry
+        dti = dt[0, i][:, None]                           # (bd, 1)
+        a_bar = jnp.exp(dti * a)                          # (bd, S)
+        bu = (dti[:, 0] * u[0, i])[:, None] * b_in[0, i][None, :]
+        h = a_bar * h + bu
+        y = (h * c_in[0, i][None, :]).sum(axis=1)         # (bd,)
+        y = y + u[0, i] * dskip
+        ys = jax.lax.dynamic_update_slice(ys, y[None, :], (i, 0))
+        return h, ys
+
+    h0 = h_scratch[...]
+    ys0 = jnp.zeros((tc, u.shape[2]), jnp.float32)
+    h_fin, ys = jax.lax.fori_loop(0, tc, step, (h0, ys0))
+    h_scratch[...] = h_fin
+    y_ref[...] = ys[None].astype(y_ref.dtype)
+
+    @pl.when(t_idx == nt - 1)
+    def _emit_state():
+        hout_ref[...] = h_fin[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "time_chunk", "interpret"))
+def ssm_scan(u, dt, b_in, c_in, a_log, d_skip, *, block_d: int = 512,
+             time_chunk: int = 256, interpret: bool = False):
+    """u, dt: (B, T, D); b_in, c_in: (B, T, S); a_log: (D, S); d_skip: (D,).
+
+    Returns (y (B, T, D) fp32, h_final (B, D, S) fp32).
+    """
+    bsz, t, d = u.shape
+    s = b_in.shape[-1]
+    bd = min(block_d, d)
+    tc = min(time_chunk, t)
+    if d % bd or t % tc:
+        raise ValueError(f"(T={t}, D={d}) must tile by (tc={tc}, bd={bd})")
+    grid = (bsz, d // bd, t // tc)
+    y, h_fin = pl.pallas_call(
+        functools.partial(_ssm_kernel, tc=tc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tc, bd), lambda b, j, ti: (b, ti, j)),   # u
+            pl.BlockSpec((1, tc, bd), lambda b, j, ti: (b, ti, j)),   # dt
+            pl.BlockSpec((1, tc, s), lambda b, j, ti: (b, ti, 0)),    # B
+            pl.BlockSpec((1, tc, s), lambda b, j, ti: (b, ti, 0)),    # C
+            pl.BlockSpec((bd, s), lambda b, j, ti: (j, 0)),           # a_log
+            pl.BlockSpec((bd,), lambda b, j, ti: (j,)),               # d_skip
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tc, bd), lambda b, j, ti: (b, ti, j)),   # y
+            pl.BlockSpec((1, bd, s), lambda b, j, ti: (b, j, 0)),     # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, d, s), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, s), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, b_in, c_in, a_log, d_skip)
+    return y, h_fin

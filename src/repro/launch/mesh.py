@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (dry-runs must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips).
+
+    When the process exposes more placeholder devices than the mesh needs
+    (the dry-run forces 512), the single-pod mesh takes the first 256.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devices = jax.devices()
+    if len(devices) != need:
+        import numpy as np
+        if len(devices) < need:
+            raise RuntimeError(f"mesh needs {need} devices, have {len(devices)}")
+        from jax.sharding import Mesh
+        return Mesh(np.array(devices[:need]).reshape(shape), axes)
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 4, model: int = 2, *, pods: int = 0):
+    """Small mesh for subprocess tests (needs matching fake device count)."""
+    if pods:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

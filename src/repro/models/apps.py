@@ -1,0 +1,189 @@
+"""The paper's three applications as runnable JAX minis (§2, Table 1).
+
+These are the workloads FanStore was built for; the benchmark harness
+drives them through the data plane for the Fig 4/7/8/9 reproductions and
+the tests train them for a few steps:
+
+  ResNetMini — convolutional residual classifier (ResNet-50 stand-in)
+  SRGANMini  — super-resolution generator + discriminator (SRGAN stand-in),
+               trained with the paper's two stages (init = pixel loss,
+               train = pixel + adversarial)
+  FRNNMini   — LSTM disruption predictor over diagnostic-signal windows
+
+Pure JAX, same param-pytree conventions as the LM zoo.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    scale = 1.0 / math.sqrt(kh * kw * cin)
+    return jax.random.normal(key, (kh, kw, cin, cout)) * scale
+
+
+def conv2d(x, w, *, stride: int = 1, padding: str = "SAME"):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# ---------------------------------------------------------------------------
+# ResNet mini
+# ---------------------------------------------------------------------------
+
+class ResNetMini:
+    """[stem] -> n_blocks x [conv-relu-conv + skip] -> pool -> classifier."""
+
+    def __init__(self, *, num_classes: int = 10, width: int = 32,
+                 n_blocks: int = 4):
+        self.num_classes = num_classes
+        self.width = width
+        self.n_blocks = n_blocks
+
+    def init(self, key) -> Dict:
+        ks = jax.random.split(key, 2 + 2 * self.n_blocks)
+        w = self.width
+        p = {"stem": _conv_init(ks[0], 3, 3, 3, w), "blocks": []}
+        for i in range(self.n_blocks):
+            p["blocks"].append({
+                "c1": _conv_init(ks[1 + 2 * i], 3, 3, w, w),
+                "c2": _conv_init(ks[2 + 2 * i], 3, 3, w, w)})
+        p["head"] = jax.random.normal(ks[-1], (w, self.num_classes)) / math.sqrt(w)
+        return p
+
+    def apply(self, p, x) -> jnp.ndarray:
+        h = jax.nn.relu(conv2d(x, p["stem"]))
+        for blk in p["blocks"]:
+            r = jax.nn.relu(conv2d(h, blk["c1"]))
+            r = conv2d(r, blk["c2"])
+            h = jax.nn.relu(h + r)
+        h = h.mean(axis=(1, 2))                      # global average pool
+        return h @ p["head"]
+
+    def loss(self, p, batch) -> jnp.ndarray:
+        logits = self.apply(p, batch["image"])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["label"][:, None], 1)[:, 0]
+        return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# SRGAN mini
+# ---------------------------------------------------------------------------
+
+class SRGANMini:
+    """4x upscaling generator + patch discriminator (paper's SRGAN case)."""
+
+    def __init__(self, *, width: int = 32, n_blocks: int = 3):
+        self.width = width
+        self.n_blocks = n_blocks
+
+    def init(self, key) -> Dict:
+        kg, kd = jax.random.split(key)
+        w = self.width
+        ks = jax.random.split(kg, 3 + 2 * self.n_blocks)
+        gen = {"inp": _conv_init(ks[0], 3, 3, 3, w), "blocks": []}
+        for i in range(self.n_blocks):
+            gen["blocks"].append({
+                "c1": _conv_init(ks[1 + 2 * i], 3, 3, w, w),
+                "c2": _conv_init(ks[2 + 2 * i], 3, 3, w, w)})
+        gen["up"] = _conv_init(ks[-2], 3, 3, w, 16 * 3)   # pixel-shuffle 4x
+        kds = jax.random.split(kd, 3)
+        disc = {"c1": _conv_init(kds[0], 3, 3, 3, w),
+                "c2": _conv_init(kds[1], 3, 3, w, w),
+                "head": jax.random.normal(kds[2], (w, 1)) / math.sqrt(w)}
+        return {"gen": gen, "disc": disc}
+
+    def generate(self, g, lr_img) -> jnp.ndarray:
+        h = jax.nn.relu(conv2d(lr_img, g["inp"]))
+        for blk in g["blocks"]:
+            r = jax.nn.relu(conv2d(h, blk["c1"]))
+            h = h + conv2d(r, blk["c2"])
+        h = conv2d(h, g["up"])                        # (B, H, W, 48)
+        b, hh, ww, _ = h.shape
+        h = h.reshape(b, hh, ww, 4, 4, 3)
+        h = h.transpose(0, 1, 3, 2, 4, 5).reshape(b, hh * 4, ww * 4, 3)
+        return jnp.tanh(h)
+
+    def discriminate(self, d, img) -> jnp.ndarray:
+        h = jax.nn.leaky_relu(conv2d(img, d["c1"], stride=2))
+        h = jax.nn.leaky_relu(conv2d(h, d["c2"], stride=2))
+        return h.mean(axis=(1, 2)) @ d["head"]
+
+    def init_stage_loss(self, p, batch) -> jnp.ndarray:
+        """Stage 1 (paper's SRGAN-Init): pixel-wise L2 only."""
+        sr = self.generate(p["gen"], batch["lr"])
+        return jnp.mean((sr - batch["hr"]) ** 2)
+
+    def train_stage_losses(self, p, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Stage 2 (SRGAN-Train): (generator, discriminator) losses."""
+        sr = self.generate(p["gen"], batch["lr"])
+        pix = jnp.mean((sr - batch["hr"]) ** 2)
+        d_fake = self.discriminate(p["disc"], sr)
+        d_real = self.discriminate(p["disc"], batch["hr"])
+        g_adv = jnp.mean(jax.nn.softplus(-d_fake))
+        g_loss = pix + 1e-3 * g_adv
+        d_loss = jnp.mean(jax.nn.softplus(-d_real)) + \
+            jnp.mean(jax.nn.softplus(d_fake))
+        return g_loss, d_loss
+
+
+# ---------------------------------------------------------------------------
+# FRNN mini
+# ---------------------------------------------------------------------------
+
+class FRNNMini:
+    """Stacked LSTM over diagnostic windows -> per-shot disruption logit."""
+
+    def __init__(self, *, n_signals: int = 14, hidden: int = 64,
+                 layers: int = 2):
+        self.n_signals = n_signals
+        self.hidden = hidden
+        self.layers = layers
+
+    def _cell_init(self, key, nin, nh):
+        k1, k2 = jax.random.split(key)
+        return {"wx": jax.random.normal(k1, (nin, 4 * nh)) / math.sqrt(nin),
+                "wh": jax.random.normal(k2, (nh, 4 * nh)) / math.sqrt(nh),
+                "b": jnp.zeros((4 * nh,))}
+
+    def init(self, key) -> Dict:
+        ks = jax.random.split(key, self.layers + 1)
+        cells = [self._cell_init(ks[i],
+                                 self.n_signals if i == 0 else self.hidden,
+                                 self.hidden)
+                 for i in range(self.layers)]
+        head = jax.random.normal(ks[-1], (self.hidden, 1)) / math.sqrt(self.hidden)
+        return {"cells": cells, "head": head}
+
+    @staticmethod
+    def _lstm_step(cell, carry, x):
+        h, c = carry
+        z = x @ cell["wx"] + h @ cell["wh"] + cell["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    def apply(self, p, signals) -> jnp.ndarray:
+        """signals: (B, T, n_signals) -> disruption logits (B,)."""
+        b = signals.shape[0]
+        h = signals
+        for cell in p["cells"]:
+            init = (jnp.zeros((b, self.hidden)), jnp.zeros((b, self.hidden)))
+            (_, _), hs = lax.scan(
+                lambda carry, x: self._lstm_step(cell, carry, x),
+                init, h.swapaxes(0, 1))
+            h = hs.swapaxes(0, 1)
+        return (h[:, -1] @ p["head"])[:, 0]
+
+    def loss(self, p, batch) -> jnp.ndarray:
+        logit = self.apply(p, batch["signals"])
+        y = batch["disrupted"].astype(jnp.float32)
+        return jnp.mean(jax.nn.softplus(logit) - y * logit)

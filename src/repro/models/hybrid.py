@@ -1,0 +1,63 @@
+"""Hymba-style hybrid block: parallel attention + SSM heads.
+
+Both mixers read the same normalized input; their outputs are re-normalized
+(branch-specific scales) and averaged before the residual add — the fusion
+Hymba reports as better than interleaving. Most layers use sliding-window
+attention; cfg.global_layers (first / middle / last) keep full attention,
+which is what keeps the arch sub-quadratic at 500k context.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (apply_norm, attention_out, attention_params,
+                                 decode_attention, flash_attention_lax,
+                                 norm_init, qkv_project)
+from repro.models.mamba import (apply_mamba, apply_mamba_decode,
+                                mamba_decode_state, mamba_params)
+
+
+def hybrid_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {"attn": attention_params(k1, cfg, dtype=dtype),
+            "mixer": mamba_params(k2, cfg, dtype=dtype),
+            "norm_a": norm_init(cfg), "norm_s": norm_init(cfg)}
+
+
+def apply_hybrid(p, h, cfg: ModelConfig, positions,
+                 window: Optional[int]) -> jnp.ndarray:
+    """h: already-normalized input (B, T, d) -> mixer output (B, T, d)."""
+    q, k, v = qkv_project(p["attn"], h, cfg, positions)
+    attn = flash_attention_lax(q, k, v, causal=True, window=window,
+                               unroll=cfg.unroll,
+                               scale_in_q=cfg.attn_scale_in_q,
+                               probs_bf16=cfg.attn_probs_bf16)
+    a = attention_out(p["attn"], attn, h.dtype)
+    s = apply_mamba(p["mixer"], h, cfg)
+    return 0.5 * (apply_norm(p["norm_a"], a, cfg)
+                  + apply_norm(p["norm_s"], s, cfg))
+
+
+def apply_hybrid_decode(p, h, cfg: ModelConfig, cache: Dict, cache_len,
+                        window: Optional[int]) -> Tuple[jnp.ndarray, Dict]:
+    """h: (B, 1, d). cache: {k, v, h, conv}; SWA caches are ring buffers."""
+    pos = jnp.full((h.shape[0], 1), cache_len, jnp.int32)
+    q, k, v = qkv_project(p["attn"], h, cfg, pos)
+    size = cache["k"].shape[1]
+    slot = cache_len % size if window is not None else cache_len
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    n_valid = jnp.minimum(cache_len + 1, size)
+    attn = decode_attention(q, kc, vc, n_valid)   # ring: window by construction
+    a = attention_out(p["attn"], attn, h.dtype)
+    s, state = apply_mamba_decode(p["mixer"], h, {"h": cache["h"],
+                                                  "conv": cache["conv"]}, cfg)
+    out = 0.5 * (apply_norm(p["norm_a"], a, cfg)
+                 + apply_norm(p["norm_s"], s, cfg))
+    return out, {"k": kc, "v": vc, "h": state["h"], "conv": state["conv"]}

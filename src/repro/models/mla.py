@@ -1,0 +1,128 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Projections:
+  q: d -> q_lora -> norm -> H x (qk_nope + qk_rope)
+  kv: d -> (kv_lora latent || shared k_rope) ; latent -> norm -> per-head
+      k_nope and v.
+
+Train/prefill expand the latent; decode uses the *absorbed* form, attending
+in latent space against a (kv_lora + qk_rope)-wide cache — 576 B-equiv per
+token instead of H*(dk+dv), the paper-grade KV-cache compression that makes
+deepseek-v2's decode_32k cell memory-light.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (_dense_init, apply_norm, apply_rope,
+                                 flash_attention_lax, norm_init)
+
+
+def mla_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    p = {
+        "kv_down": _dense_init(ks[2], (d, cfg.kv_lora_rank + dr), dtype=dtype),
+        "kv_norm": norm_init(cfg, cfg.kv_lora_rank),
+        "k_up": _dense_init(ks[3], (cfg.kv_lora_rank, h, dn), dtype=dtype),
+        "v_up": _dense_init(ks[4], (cfg.kv_lora_rank, h, dv), dtype=dtype),
+        "wo": _dense_init(ks[5], (h, dv, d), scale=1.0 / math.sqrt(h * dv),
+                          dtype=dtype),
+    }
+    if cfg.q_lora_rank:
+        p["q_down"] = _dense_init(ks[0], (d, cfg.q_lora_rank), dtype=dtype)
+        p["q_norm"] = norm_init(cfg, cfg.q_lora_rank)
+        p["q_up"] = _dense_init(ks[1], (cfg.q_lora_rank, h, dn + dr), dtype=dtype)
+    else:
+        p["q_proj"] = _dense_init(ks[1], (d, h, dn + dr), dtype=dtype)
+    return p
+
+
+def _q_heads(p, x, cfg: ModelConfig, positions):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        ql = apply_norm(p["q_norm"], x @ p["q_down"].astype(x.dtype), cfg)
+        q = jnp.einsum("btl,lhk->bthk", ql, p["q_up"].astype(x.dtype))
+    else:
+        q = jnp.einsum("btd,dhk->bthk", x, p["q_proj"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg)
+    return q_nope, q_rope
+
+
+def _kv_latent(p, x, cfg: ModelConfig, positions):
+    dr = cfg.qk_rope_dim
+    kv = x @ p["kv_down"].astype(x.dtype)
+    c_kv, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = apply_norm(p["kv_norm"], c_kv, cfg)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg)[:, :, 0]  # (B,T,dr)
+    return c_kv, k_rope
+
+
+def apply_mla(p, x, cfg: ModelConfig, positions) -> jnp.ndarray:
+    """Full-sequence MLA (training/prefill compute path). x: (B,T,d)."""
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _q_heads(p, x, cfg, positions)
+    c_kv, k_rope = _kv_latent(p, x, cfg, positions)
+    k_nope = jnp.einsum("btl,lhk->bthk", c_kv, p["k_up"].astype(x.dtype))
+    v = jnp.einsum("btl,lhk->bthk", c_kv, p["v_up"].astype(x.dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          k_nope.shape[:3] + (dr,))], axis=-1)
+    scale = 1.0 / math.sqrt(dn + dr)
+    attn = flash_attention_lax(q, k, v, causal=True, scale=scale,
+                               unroll=cfg.unroll,
+                               scale_in_q=cfg.attn_scale_in_q,
+                               probs_bf16=cfg.attn_probs_bf16)
+    return jnp.einsum("bthk,hkd->btd", attn, p["wo"].astype(x.dtype))
+
+
+def mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+
+
+def apply_mla_prefill(p, x, cfg: ModelConfig, positions, max_len: int
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    out = apply_mla(p, x, cfg, positions)
+    c_kv, k_rope = _kv_latent(p, x, cfg, positions)
+    t = x.shape[1]
+    cache = mla_cache(cfg, x.shape[0], max_len, x.dtype)
+    cache["c_kv"] = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, 0, 0))
+    cache["k_rope"] = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope,
+                                                   (0, 0, 0))
+    return out, cache
+
+
+def apply_mla_decode(p, x, cfg: ModelConfig, cache: Dict, cache_len
+                     ) -> Tuple[jnp.ndarray, Dict]:
+    """Absorbed single-token decode. x: (B, 1, d); cache_len: int32 scalar."""
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+    q_nope, q_rope = _q_heads(p, x, cfg, positions)          # (B,1,H,*)
+    c_new, r_new = _kv_latent(p, x, cfg, positions)          # (B,1,l),(B,1,dr)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, cache_len, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], r_new.astype(cache["k_rope"].dtype), (0, cache_len, 0))
+    # absorb k_up into q: q_lat (B,1,H,kv_lora)
+    q_lat = jnp.einsum("bthk,lhk->bthl", q_nope, p["k_up"].astype(x.dtype))
+    s = jnp.einsum("bthl,bsl->bths", q_lat, c_kv) \
+        + jnp.einsum("bthk,bsk->bths", q_rope, k_rope)
+    s = s.astype(jnp.float32) / math.sqrt(dn + dr)
+    pos = jnp.arange(c_kv.shape[1])
+    valid = pos[None, :] <= cache_len
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bths,bsl->bthl", probs, c_kv)          # latent context
+    heads = jnp.einsum("bthl,lhk->bthk", ctx, p["v_up"].astype(x.dtype))
+    out = jnp.einsum("bthk,hkd->btd", heads, p["wo"].astype(x.dtype))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts layer: token-choice top-k with capacity, index dispatch.
+
+Dispatch is index-based (gather/scatter), not one-hot-einsum: for a token
+block of n tokens with E experts, capacity C per expert,
+
+  1. router logits -> top-k experts + gate weights per token,
+  2. position-in-expert by cumulative count over the flattened (n*k)
+     assignments (tokens beyond capacity C are dropped, as in Switch/GShard;
+     capacity_factor sizes C),
+  3. gather tokens into (E, C, d), run the expert FFN batched over E,
+  4. scatter-add weighted outputs back to token order.
+
+The token dimension is processed in blocks (cfg.moe_block_tokens) under
+lax.scan so peak memory stays O(block) — the same blocking MaxText uses.
+
+Sharding: expert-stacked weights (E, d, f). deepseek (160 experts) shards E
+over the model axis (EP); granite (40 experts, 16-way mesh) shards f (TP
+inside expert) — rules in repro.dist.sharding pick by divisibility.
+Aux losses: load-balance (Switch) loss + router z-loss, returned for logging.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+
+def moe_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, e), scale=0.02, dtype=dtype),
+        "wi": _dense_init(ks[1], (e, d, f), dtype=dtype),
+        "wg": _dense_init(ks[2], (e, d, f), dtype=dtype),
+        "wo": _dense_init(ks[3], (e, f, d), dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {"wi": _dense_init(kss[0], (d, fs), dtype=dtype),
+                       "wg": _dense_init(kss[1], (d, fs), dtype=dtype),
+                       "wo": _dense_init(kss[2], (fs, d), dtype=dtype)}
+    return p
+
+
+def _expert_ffn(wi, wg, wo, x):
+    # x: (E, C, d); weights (E, d, f) / (E, f, d)
+    h = jnp.einsum("ecd,edf->ecf", x, wi)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", x, wg)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def _moe_block(p, x, cfg: ModelConfig, ep_act=None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One token block: x (n, d) -> (out (n, d), lb_loss, z_loss)."""
+    n, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_top_k
+    cap = max(1, int(math.ceil(cfg.moe_capacity_factor * n * k / e)))
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)   # (n, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = lax.top_k(probs, k)                               # (n, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each assignment within its expert, via stable sort (the
+    # cumsum-of-one-hot formulation lowers to an O(N*window) reduce-window —
+    # both slow and absurdly costed; sort is O(N log N) and TPU-friendly)
+    flat_e = expert.reshape(-1)                                      # (n*k,)
+    nk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = jnp.take(flat_e, order)
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e, dtype=flat_e.dtype),
+                              side="left")
+    pos_sorted = jnp.arange(nk, dtype=jnp.int32) - \
+        jnp.take(starts, sorted_e).astype(jnp.int32)
+    my_pos = jnp.zeros((nk,), jnp.int32).at[order].set(pos_sorted)
+    keep = my_pos < cap
+    slot_e = jnp.where(keep, flat_e, e)            # drop -> expert id e
+    slot_c = jnp.where(keep, my_pos, 0)
+
+    # gather_idx[e, c] = flattened token index (n*k space), n*k = sentinel
+    gather = jnp.full((e + 1, cap), n, jnp.int32)  # sentinel token id n
+    tok_of_flat = jnp.arange(n * k, dtype=jnp.int32) // k
+    gather = gather.at[slot_e, slot_c].set(tok_of_flat, mode="drop")
+    gather = gather[:e]                            # (e, cap)
+
+    xpad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xin = xpad[gather]                             # (e, cap, d)
+    if ep_act is not None:                         # pin EP sharding (see
+        xin = ep_act(xin)                          # ShardingRules.expert_constraint)
+    y = _expert_ffn(p["wi"].astype(x.dtype), p["wg"].astype(x.dtype),
+                    p["wo"].astype(x.dtype), xin)  # (e, cap, d)
+    if ep_act is not None:
+        y = ep_act(y)
+
+    # scatter back with gate weights
+    flat_gate = gate.reshape(-1)
+    out = jnp.zeros((n + 1, d), x.dtype)
+    w = jnp.zeros((e + 1, cap), x.dtype)
+    w = w.at[slot_e, slot_c].set(flat_gate.astype(x.dtype), mode="drop")
+    w = w[:e]
+    out = out.at[gather.reshape(-1)].add((y * w[..., None]).reshape(-1, d),
+                                         mode="drop")
+    out = out[:n]
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(x @ sp["wi"].astype(x.dtype)) * (x @ sp["wg"].astype(x.dtype))
+        out = out + h @ sp["wo"].astype(x.dtype)
+
+    # aux losses (Switch load-balance + z-loss)
+    frac_tokens = jax.nn.one_hot(expert, e, dtype=jnp.float32).sum((0, 1)) / (n * k)
+    frac_prob = probs.mean(0)
+    lb = e * jnp.sum(frac_tokens * frac_prob)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, lb, z
+
+
+def apply_moe(p, x, cfg: ModelConfig, ep_act=None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, d) -> (out, aux_loss). Blocked over tokens via lax.scan."""
+    b, t, d = x.shape
+    n = b * t
+    block = n if cfg.unroll else min(cfg.moe_block_tokens, n)
+    flat = x.reshape(n, d)
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    blocks = flat.reshape(-1, block, d)
+
+    def step(carry, xb):
+        yb, lb, z = _moe_block(p, xb, cfg, ep_act)
+        return (carry[0] + lb, carry[1] + z), yb
+
+    (lb, z), ys = lax.scan(step, (jnp.zeros(()), jnp.zeros(())), blocks)
+    nb = blocks.shape[0]
+    out = ys.reshape(-1, d)[:n].reshape(b, t, d)
+    aux = cfg.router_aux_coef * (lb / nb) + 1e-4 * (z / nb)
+    return out, aux

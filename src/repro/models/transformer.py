@@ -1,0 +1,513 @@
+"""Decoder-LM assembly for all six architecture families.
+
+The layer stack is grouped into *segments* of consecutive layers with
+identical static structure (kind, window); each segment's params are stacked
+on a leading layer axis and applied with ``lax.scan`` (+ optional remat), so
+HLO size and compile time are depth-independent — an 80-layer qwen2 compiles
+like a 1-layer model plus the scan body.
+
+Batch contract (all int32/bf16 arrays):
+  dense/moe/ssm/hybrid: {"tokens": (B, T)}                     next-token LM
+  audio (musicgen):     {"tokens": (B, T, C)}   C codebooks, per-codebook CE
+  vlm (internvl):       {"tokens": (B, T_text), "patches": (B, P, d_model)}
+                        patches are STUB frontend outputs (DESIGN.md §6)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid as hybrid_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (apply_mlp, apply_norm, attention_out,
+                                 attention_params, chunked_cross_entropy,
+                                 decode_attention, embed_init,
+                                 flash_attention_lax, mlp_params, norm_init,
+                                 qkv_project)
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Segment:
+    kind: str                  # dense | moe | mla_dense | mla_moe | mamba | hybrid
+    n_layers: int
+    window: Optional[int]      # None => global attention
+
+    @property
+    def has_ffn(self) -> bool:
+        return self.kind != "mamba"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.kind in ("moe", "mla_moe")
+
+
+def _layer_spec(cfg: ModelConfig, i: int) -> Tuple[str, Optional[int]]:
+    if cfg.family == "ssm":
+        return "mamba", None
+    if cfg.family == "hybrid":
+        win = None if i in cfg.global_layers else cfg.window
+        return "hybrid", win
+    win = None if (cfg.window is None or i in cfg.global_layers) else cfg.window
+    if cfg.uses_moe and cfg.mla:
+        return ("mla_dense" if i < cfg.first_dense_layers else "mla_moe"), win
+    if cfg.uses_moe:
+        return ("dense" if i < cfg.first_dense_layers else "moe"), win
+    return "dense", win
+
+
+def build_segments(cfg: ModelConfig) -> List[Segment]:
+    segs: List[Segment] = []
+    for i in range(cfg.num_layers):
+        kind, win = _layer_spec(cfg, i)
+        if segs and segs[-1].kind == kind and segs[-1].window == win:
+            segs[-1] = dataclasses.replace(segs[-1], n_layers=segs[-1].n_layers + 1)
+        else:
+            segs.append(Segment(kind, 1, win))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, kind: str) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg)}
+    if kind in ("dense", "moe"):
+        p["attn"] = attention_params(ks[0], cfg)
+    elif kind in ("mla_dense", "mla_moe"):
+        p["attn"] = mla_mod.mla_params(ks[0], cfg)
+    elif kind == "mamba":
+        p["mixer"] = mamba_mod.mamba_params(ks[0], cfg)
+        return p
+    elif kind == "hybrid":
+        p.update(hybrid_mod.hybrid_params(ks[0], cfg))
+    else:
+        raise ValueError(kind)
+    p["norm2"] = norm_init(cfg)
+    if kind in ("moe", "mla_moe"):
+        p["moe"] = moe_mod.moe_params(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_params(ks[1], cfg)
+    return p
+
+
+def _block_apply(p, x, cfg: ModelConfig, seg: Segment, positions,
+                 act: Callable, ep_act=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg)
+    if seg.kind == "mamba":
+        return act(x + mamba_mod.apply_mamba(p["mixer"], h, cfg)), aux
+    if seg.kind == "hybrid":
+        x = x + hybrid_mod.apply_hybrid(p, h, cfg, positions, seg.window)
+    elif seg.kind in ("mla_dense", "mla_moe"):
+        x = x + mla_mod.apply_mla(p["attn"], h, cfg, positions)
+    else:
+        q, k, v = qkv_project(p["attn"], h, cfg, positions)
+        a = flash_attention_lax(q, k, v, causal=True, window=seg.window,
+                                unroll=cfg.unroll,
+                                scale_in_q=cfg.attn_scale_in_q,
+                                probs_bf16=cfg.attn_probs_bf16)
+        x = x + attention_out(p["attn"], a, x.dtype)
+    x = act(x)
+    h2 = apply_norm(p["norm2"], x, cfg)
+    if seg.is_moe:
+        y, aux = moe_mod.apply_moe(p["moe"], h2, cfg, ep_act)
+    else:
+        y = apply_mlp(p["mlp"], h2, cfg)
+    return act(x + y), aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _segment_cache(cfg: ModelConfig, seg: Segment, batch: int, max_len: int,
+                   dtype) -> Dict:
+    """Zero cache for one segment (leading layer axis L)."""
+    L = seg.n_layers
+    size = max_len if seg.window is None else min(max_len, seg.window)
+    c: Dict[str, jnp.ndarray] = {}
+    if seg.kind in ("dense", "moe"):
+        kv, dh = cfg.num_kv_heads, cfg.head_dim
+        c["k"] = jnp.zeros((L, batch, size, kv, dh), dtype)
+        c["v"] = jnp.zeros((L, batch, size, kv, dh), dtype)
+    elif seg.kind in ("mla_dense", "mla_moe"):
+        c["c_kv"] = jnp.zeros((L, batch, size, cfg.kv_lora_rank), dtype)
+        c["k_rope"] = jnp.zeros((L, batch, size, cfg.qk_rope_dim), dtype)
+    elif seg.kind == "mamba":
+        c["h"] = jnp.zeros((L, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        c["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype)
+    elif seg.kind == "hybrid":
+        kv, dh = cfg.num_kv_heads, cfg.head_dim
+        c["k"] = jnp.zeros((L, batch, size, kv, dh), dtype)
+        c["v"] = jnp.zeros((L, batch, size, kv, dh), dtype)
+        c["h"] = jnp.zeros((L, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        c["conv"] = jnp.zeros((L, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype)
+    return c
+
+
+def _block_prefill(p, x, cfg: ModelConfig, seg: Segment, positions, max_len,
+                   act: Callable, ep_act=None) -> Tuple[jnp.ndarray, Dict]:
+    """Full-seq forward that also emits this layer's cache entry (no aux)."""
+    h = apply_norm(p["norm1"], x, cfg)
+    t = x.shape[1]
+    size = max_len if seg.window is None else min(max_len, seg.window)
+    cache: Dict[str, jnp.ndarray] = {}
+    if seg.kind == "mamba":
+        x2, cache = _mamba_prefill(p["mixer"], h, cfg)
+        cache.pop("y")
+        return act(x + x2), cache
+    if seg.kind == "hybrid":
+        q, k, v = qkv_project(p["attn"], h, cfg, positions)
+        a = flash_attention_lax(q, k, v, causal=True, window=seg.window,
+                                unroll=cfg.unroll,
+                                scale_in_q=cfg.attn_scale_in_q,
+                                probs_bf16=cfg.attn_probs_bf16)
+        a = attention_out(p["attn"], a, x.dtype)
+        s, mcache = _mamba_prefill(p["mixer"], h, cfg)
+        mcache.pop("y")
+        x = x + 0.5 * (apply_norm(p["norm_a"], a, cfg)
+                       + apply_norm(p["norm_s"], s, cfg))
+        cache.update(_ring_fill(k, v, size, x.dtype))
+        cache.update(mcache)
+    elif seg.kind in ("mla_dense", "mla_moe"):
+        out, mc = mla_mod.apply_mla_prefill(p["attn"], h, cfg, positions, size)
+        x = x + out
+        cache.update(mc)
+    else:
+        q, k, v = qkv_project(p["attn"], h, cfg, positions)
+        a = flash_attention_lax(q, k, v, causal=True, window=seg.window,
+                                unroll=cfg.unroll,
+                                scale_in_q=cfg.attn_scale_in_q,
+                                probs_bf16=cfg.attn_probs_bf16)
+        x = x + attention_out(p["attn"], a, x.dtype)
+        cache.update(_ring_fill(k, v, size, x.dtype))
+    x = act(x)
+    h2 = apply_norm(p["norm2"], x, cfg)
+    if seg.is_moe:
+        y, _ = moe_mod.apply_moe(p["moe"], h2, cfg, ep_act)
+    else:
+        y = apply_mlp(p["mlp"], h2, cfg)
+    return act(x + y), cache
+
+
+def _ring_fill(k, v, size: int, dtype) -> Dict:
+    """Write the last ``size`` positions of prefilled K/V into a cache."""
+    t = k.shape[1]
+    if t >= size:
+        kc, vc = k[:, t - size:], v[:, t - size:]
+        # ring alignment: position p sits at slot p % size
+        shift = (t - size) % size
+        kc = jnp.roll(kc, shift=shift, axis=1)
+        vc = jnp.roll(vc, shift=shift, axis=1)
+    else:
+        pad = ((0, 0), (0, size - t), (0, 0), (0, 0))
+        kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
+    return {"k": kc.astype(dtype), "v": vc.astype(dtype)}
+
+
+def _mamba_prefill(p, h, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Run the mamba mixer over the prompt, keeping final (h, conv) state."""
+    di = p["in_proj"].shape[1] // 2
+    uz = h @ p["in_proj"].astype(h.dtype)
+    u, z = jnp.split(uz, 2, axis=-1)
+    conv_tail = u[:, -(cfg.ssm_conv - 1):]                      # pre-activation
+    u, _ = mamba_mod._causal_conv(u, p["conv_w"], p["conv_b"])
+    u = jax.nn.silu(u)
+    dtr = p["dt_proj"].shape[0]
+    proj = u @ p["x_proj"].astype(u.dtype)
+    dt_lr, b_in, c_in = jnp.split(proj, [dtr, dtr + cfg.ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt_lr @ p["dt_proj"].astype(u.dtype)
+                         + p["dt_bias"].astype(u.dtype))
+    y, h_fin = mamba_mod.selective_scan(u, dt, b_in, c_in, p["a_log"],
+                                        p["d_skip"], unroll=cfg.unroll)
+    y = y.astype(h.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(h.dtype)
+    t = h.shape[1]
+    if t < cfg.ssm_conv - 1:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (cfg.ssm_conv - 1 - t, 0), (0, 0)))
+    return out, {"h": h_fin, "conv": conv_tail, "y": out}
+
+
+def _block_decode(p, x, cfg: ModelConfig, seg: Segment, cache: Dict,
+                  cache_len, ep_act=None) -> Tuple[jnp.ndarray, Dict]:
+    h = apply_norm(p["norm1"], x, cfg)
+    new_cache = dict(cache)
+    if seg.kind == "mamba":
+        y, st = mamba_mod.apply_mamba_decode(p["mixer"], h, cache, cfg)
+        return x + y, st
+    if seg.kind == "hybrid":
+        y, new_cache = hybrid_mod.apply_hybrid_decode(p, h, cfg, cache,
+                                                      cache_len, seg.window)
+        x = x + y
+    elif seg.kind in ("mla_dense", "mla_moe"):
+        y, mc = mla_mod.apply_mla_decode(p["attn"], h, cfg, cache, cache_len)
+        x = x + y
+        new_cache = mc
+    else:
+        pos = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+        q, k, v = qkv_project(p["attn"], h, cfg, pos)
+        size = cache["k"].shape[1]
+        slot = cache_len % size if seg.window is not None else cache_len
+        kc = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+        vc = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+        n_valid = jnp.minimum(cache_len + 1, size)
+        a = decode_attention(q, kc, vc, n_valid)
+        x = x + attention_out(p["attn"], a, x.dtype)
+        new_cache = {"k": kc, "v": vc}
+    h2 = apply_norm(p["norm2"], x, cfg)
+    if seg.is_moe:
+        y, _ = moe_mod.apply_moe(p["moe"], h2, cfg, ep_act)
+    else:
+        y = apply_mlp(p["mlp"], h2, cfg)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+class Model:
+    """Config-driven LM with train / prefill / decode entry points."""
+
+    def __init__(self, cfg: ModelConfig,
+                 act_constraint: Optional[Callable] = None,
+                 rules: Optional[Any] = None):
+        self.cfg = cfg
+        self.segments = build_segments(cfg)
+        if rules is not None and act_constraint is None:
+            act_constraint = rules.act_constraint
+        self.act = act_constraint or (lambda x: x)
+        self.ep_act = rules.expert_constraint if rules is not None else None
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.segments) + 4)
+        params: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            params["embed"] = embed_init(keys[0], cfg.num_codebooks * cfg.vocab_size,
+                                         cfg.d_model)
+            params["out_embed"] = embed_init(keys[1], cfg.num_codebooks * cfg.vocab_size,
+                                             cfg.d_model)
+        else:
+            params["embed"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model)
+            if not cfg.tie_embeddings:
+                params["out_embed"] = embed_init(keys[1], cfg.vocab_size,
+                                                 cfg.d_model)
+        if cfg.family == "vlm":
+            params["connector"] = (jax.random.normal(
+                keys[2], (cfg.d_model, cfg.d_model)) / math.sqrt(cfg.d_model)
+            ).astype(jnp.float32)
+        params["final_norm"] = norm_init(cfg)
+        segs = []
+        for si, seg in enumerate(self.segments):
+            lkeys = jax.random.split(keys[3 + si], seg.n_layers)
+            segs.append(jax.vmap(lambda k: _block_init(k, cfg, seg.kind))(lkeys))
+        params["segments"] = segs
+        return params
+
+    # -- embedding helpers ------------------------------------------------------
+    def _embed_tokens(self, params, tokens) -> jnp.ndarray:
+        cfg = self.cfg
+        emb = params["embed"].astype(self.dtype)
+        if cfg.family == "audio":
+            # tokens (B, T, C); codebook c uses rows [c*V, (c+1)*V)
+            offs = (jnp.arange(cfg.num_codebooks, dtype=jnp.int32)
+                    * cfg.vocab_size)
+            x = jnp.take(emb, tokens + offs[None, None, :], axis=0).sum(axis=2)
+            return x
+        return jnp.take(emb, tokens, axis=0)
+
+    def _unembed(self, params) -> jnp.ndarray:
+        if self.cfg.tie_embeddings or "out_embed" not in params:
+            return params["embed"]
+        return params["out_embed"]
+
+    def _stack(self, params, x, positions, mode: str, caches=None,
+               cache_len=None, max_len: int = 0):
+        """Run all segments; returns (x, aux) or (x, caches)."""
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for si, seg in enumerate(self.segments):
+            sp = params["segments"][si]
+            if mode == "train":
+                def body(carry, lp, seg=seg):
+                    xx, aux = carry
+                    xx, a = _block_apply(lp, xx, cfg, seg, positions,
+                                         self.act, self.ep_act)
+                    return (xx, aux + a), None
+                if cfg.remat:
+                    body = jax.checkpoint(body,
+                                          policy=jax.checkpoint_policies.nothing_saveable)
+                (x, aux_total), _ = lax.scan(
+                    body, (x, aux_total), sp,
+                    unroll=seg.n_layers if cfg.unroll else 1)
+            elif mode == "prefill":
+                def body_p(xx, lp, seg=seg):
+                    xx, cache = _block_prefill(lp, xx, cfg, seg, positions,
+                                               max_len, self.act, self.ep_act)
+                    return xx, cache
+                if cfg.remat:
+                    body_p = jax.checkpoint(body_p,
+                                            policy=jax.checkpoint_policies.nothing_saveable)
+                x, cache = lax.scan(body_p, x, sp,
+                                    unroll=seg.n_layers if cfg.unroll else 1)
+                new_caches.append(cache)
+            else:  # decode
+                def body_d(xx, inp, seg=seg):
+                    lp, cl = inp
+                    xx, nc = _block_decode(lp, xx, cfg, seg, cl, cache_len,
+                                           self.ep_act)
+                    return xx, nc
+                x, nc = lax.scan(body_d, x, (sp, caches[si]),
+                                 unroll=seg.n_layers if cfg.unroll else 1)
+                new_caches.append(nc)
+        if mode == "train":
+            return x, aux_total
+        return x, new_caches
+
+    # -- entry points ------------------------------------------------------------
+    def _forward_hidden(self, params, batch: Dict
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+        """Shared train-mode trunk: returns (hidden, aux, n_prefix)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = self._embed_tokens(params, tokens)
+        n_prefix = 0
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(self.dtype)
+            patches = patches @ params["connector"].astype(self.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            n_prefix = patches.shape[1]
+        x = self.act(x)
+        t = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+        x, aux = self._stack(params, x, positions, "train")
+        x = apply_norm(params["final_norm"], x, cfg)
+        return x, aux, n_prefix
+
+    def logits_full(self, params, batch: Dict) -> jnp.ndarray:
+        """Teacher-forced logits for every position (tests/small shapes)."""
+        x, _, n_prefix = self._forward_hidden(params, batch)
+        return self._logits(params, x[:, n_prefix:])
+
+    def loss(self, params, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        """Next-token LM loss. Returns (loss, metrics)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x, aux, n_prefix = self._forward_hidden(params, batch)
+        out_emb = self._unembed(params)
+        if cfg.family == "audio":
+            # per-codebook CE against the shared (C*V, d) output table
+            losses = []
+            for c in range(cfg.num_codebooks):
+                emb_c = lax.dynamic_slice_in_dim(out_emb, c * cfg.vocab_size,
+                                                 cfg.vocab_size, axis=0)
+                labels = tokens[:, 1:, c]
+                mask = jnp.ones_like(labels, jnp.float32)
+                losses.append(chunked_cross_entropy(
+                    x[:, :-1], emb_c, labels, chunk=cfg.loss_chunk, mask=mask,
+                    unroll=cfg.unroll))
+            ce = jnp.mean(jnp.stack(losses))
+        else:
+            if cfg.family == "vlm":
+                hid = x[:, n_prefix:]
+                lm_tokens = tokens
+            else:
+                hid = x
+                lm_tokens = tokens
+            labels = lm_tokens[:, 1:]
+            ce = chunked_cross_entropy(hid[:, :-1], out_emb, labels,
+                                       chunk=cfg.loss_chunk, unroll=cfg.unroll)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def init_cache(self, batch: int, max_len: int) -> List[Dict]:
+        return [_segment_cache(self.cfg, seg, batch, max_len, self.dtype)
+                for seg in self.segments]
+
+    def prefill(self, params, batch: Dict, max_len: int
+                ) -> Tuple[jnp.ndarray, List[Dict]]:
+        """Returns (last-position logits (B, V[, C]), caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = self._embed_tokens(params, tokens)
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(self.dtype)
+            patches = patches @ params["connector"].astype(self.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        x = self.act(x)
+        t = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+        x, caches = self._stack(params, x, positions, "prefill", max_len=max_len)
+        x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+        logits = self._logits(params, x)[:, 0]
+        return logits, caches
+
+    def decode_step(self, params, tokens, caches: List[Dict], cache_len
+                    ) -> Tuple[jnp.ndarray, List[Dict]]:
+        """tokens: (B, 1[, C]); cache_len: int32 scalar = cache entries so
+        far (for vlm this INCLUDES the patch prefix positions)."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens)
+        x = self.act(x)
+        x, new_caches = self._stack(params, x, None, "decode", caches=caches,
+                                    cache_len=cache_len)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_caches
+
+    def _logits(self, params, x) -> jnp.ndarray:
+        cfg = self.cfg
+        emb = self._unembed(params).astype(x.dtype)
+        logits = jnp.einsum("btd,vd->btv", x, emb)
+        if cfg.family == "audio":
+            b, t, _ = logits.shape
+            return logits.reshape(b, t, cfg.num_codebooks, cfg.vocab_size)
+        return logits
+
+    # -- parameter census ----------------------------------------------------
+    def param_count(self, params) -> int:
+        return sum(int(p.size) for p in jax.tree.leaves(params))
+
+    def active_param_count(self, params) -> int:
+        """MoE-aware: routed experts count at top_k/E of their size."""
+        cfg = self.cfg
+        if not cfg.uses_moe:
+            return self.param_count(params)
+        total = 0
+        frac = cfg.experts_top_k / cfg.num_experts
+        for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+            keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+            if "moe" in keys and any(k in ("wi", "wg", "wo") for k in keys):
+                total += int(leaf.size * frac)
+            else:
+                total += int(leaf.size)
+        return total
+
+
+def build_model(cfg: ModelConfig, act_constraint: Optional[Callable] = None,
+                rules: Optional[Any] = None) -> Model:
+    return Model(cfg, act_constraint, rules=rules)

@@ -1,0 +1,5 @@
+from repro.serve.serve_step import make_prefill_step, make_decode_step, generate
+from repro.serve.kvcache import cache_specs, cache_shardings
+
+__all__ = ["make_prefill_step", "make_decode_step", "generate",
+           "cache_specs", "cache_shardings"]

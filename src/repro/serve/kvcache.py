@@ -1,0 +1,59 @@
+"""Cache placement: ShapeDtypeStructs + shardings for every cache family.
+
+Four cache layouts exist across the assigned archs (DESIGN.md §6):
+  full KV        (L, B, S, KV, dh)   dense/moe attention
+  sliding KV     ring buffer, S=window
+  MLA latent     (L, B, S, kv_lora) + (L, B, S, qk_rope)
+  SSM state      (L, B, d_inner, ssm_state) + conv window
+
+Sharding policy: batch over the data axes when divisible; otherwise the
+sequence dim of seq-bearing caches takes the data axes (the long_500k,
+batch=1 case). Head/channel dims take the model axis when divisible.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingRules
+
+
+def cache_specs(model, batch: int, max_len: int) -> List[Dict]:
+    """ShapeDtypeStruct pytree matching model.init_cache (no allocation)."""
+    caches = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    return caches
+
+
+def _spec_for(key: str, shape, rules: ShardingRules) -> P:
+    dp, tp = rules.dp_axes, rules.tp_axis
+    bdiv = shape[1] % rules.dp_size == 0
+    def tp_if(n):
+        return tp if n % rules.tp_size == 0 else None
+    if key in ("k", "v"):                      # (L, B, S, KV, dh)
+        if bdiv:
+            return P(None, dp, None, tp_if(shape[3]), None)
+        return P(None, None, dp, tp_if(shape[3]), None)
+    if key in ("c_kv", "k_rope"):              # (L, B, S, R)
+        if bdiv:
+            return P(None, dp, None, None)
+        return P(None, None, dp, None)
+    if key == "h":                             # (L, B, di, st)
+        return P(None, dp if bdiv else None, tp_if(shape[2]), None)
+    if key == "conv":                          # (L, B, K-1, di)
+        return P(None, dp if bdiv else None, None, tp_if(shape[3]))
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(model, batch: int, max_len: int, rules: ShardingRules
+                    ) -> List[Dict]:
+    """NamedSharding pytree aligned with init_cache's structure."""
+    shapes = cache_specs(model, batch, max_len)
+    out: List[Dict] = []
+    for seg in shapes:
+        out.append({k: NamedSharding(rules.mesh, _spec_for(k, v.shape, rules))
+                    for k, v in seg.items()})
+    return out

@@ -1,0 +1,71 @@
+"""Serving entry points: prefill / decode step factories + a generate loop.
+
+``decode_*`` input shapes lower these (not train_step): decode is one new
+token against a cache of seq_len entries. The decode step is memory-bound
+(reads the whole cache + all params per token) — the roofline table shows
+its memory term dominating for every dense arch, and the MLA/SSM caches
+shrinking it; that contrast is one of the three §Perf hillclimb cells.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+def make_prefill_step(model: Model, max_len: int) -> Callable:
+    """(params, batch) -> (last-position logits, caches)."""
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill
+
+
+def make_decode_step(model: Model, *, sample: str = "greedy",
+                     temperature: float = 1.0) -> Callable:
+    """(params, tokens, caches, cache_len[, key]) -> (next_token, logits, caches)."""
+    def decode(params, tokens, caches, cache_len, key=None):
+        logits, caches = model.decode_step(params, tokens, caches, cache_len)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                key, logits.astype(jnp.float32) / temperature, axis=-1
+            ).astype(jnp.int32)
+        return nxt, logits, caches
+    return decode
+
+
+def generate(model: Model, params, prompt: Dict, *, steps: int,
+             max_len: Optional[int] = None, sample: str = "greedy",
+             key=None) -> jnp.ndarray:
+    """Batched greedy/sampled generation. Returns (B, steps[, C]) tokens."""
+    cfg = model.cfg
+    tokens = prompt["tokens"]
+    b, t = tokens.shape[0], tokens.shape[1]
+    prefix = cfg.num_patches if cfg.family == "vlm" else 0
+    max_len = max_len or (prefix + t + steps)
+    prefill = jax.jit(make_prefill_step(model, max_len))
+    decode = jax.jit(make_decode_step(model, sample=sample))
+    logits, caches = prefill(params, prompt)
+    if cfg.family == "audio":
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, C)
+        nxt = nxt[:, None, :]
+    else:
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [nxt]
+    cache_len = prefix + t
+    for s in range(steps - 1):
+        if key is not None:
+            key, sub = jax.random.split(key)
+        else:
+            sub = None
+        tok, logits, caches = decode(params, nxt, caches,
+                                     jnp.int32(cache_len), sub)
+        nxt = tok[:, None, :] if cfg.family == "audio" else tok[:, None]
+        out.append(nxt)
+        cache_len += 1
+    return jnp.concatenate(out, axis=1)

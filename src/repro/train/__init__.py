@@ -1,0 +1,9 @@
+from repro.train.optimizer import adamw_init, adamw_update, OptimizerConfig, lr_schedule
+from repro.train.train_step import make_train_step, TrainState
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint, CheckpointManager
+from repro.train.grad_comm import compressed_psum, quantize_ef
+
+__all__ = ["adamw_init", "adamw_update", "OptimizerConfig", "lr_schedule",
+           "make_train_step", "TrainState", "save_checkpoint",
+           "restore_checkpoint", "CheckpointManager", "compressed_psum",
+           "quantize_ef"]

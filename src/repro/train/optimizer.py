@@ -1,0 +1,115 @@
+"""AdamW + LR schedules, built from scratch (no optax in this environment).
+
+State is a pytree mirroring params: {m, v} fp32 + scalar step. ZeRO-1 is a
+sharding decision, not an algorithm change: ``zero1_shardings`` further
+shards the (m, v) trees over the data axis where divisible, which is what
+drops optimizer HBM by the DP degree at 512 chips.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"        # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(1, cfg.warmup_steps))
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+    else:
+        decay = jnp.asarray(1.0)
+    return cfg.lr * warm * decay
+
+
+def adamw_init(params: Any) -> Dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptimizerConfig, params: Any, grads: Any,
+                 state: Dict) -> Tuple[Any, Dict, Dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else jnp.asarray(1.0)
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.betas
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def zero1_leaf_sharding(mesh, dp_axes: Tuple[str, ...]):
+    """ZeRO-1: returns f(param_named_sharding, leaf) -> opt-state sharding.
+
+    Keeps the parameter's TP spec and additionally shards the first free,
+    divisible dim over the data axes — optimizer HBM drops by the DP degree.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in dp_axes:
+        dp *= sizes[a]
+
+    def per_leaf(ns: NamedSharding, leaf) -> NamedSharding:
+        spec = list(ns.spec)
+        spec += [None] * (leaf.ndim - len(spec))
+        for i, s in enumerate(spec):
+            if s is None and leaf.shape[i] % dp == 0 and leaf.shape[i] >= dp:
+                spec[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return per_leaf

@@ -1,0 +1,134 @@
+"""FanStore cluster: global view, caching, writes, failover, broadcast."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import small_file_dataset
+from repro.fanstore.cluster import FanStoreCluster, InterconnectModel
+from repro.fanstore.fs import FanStoreFS
+from repro.fanstore.intercept import intercept
+from repro.fanstore.prepare import prepare_dataset
+from repro.fanstore.store import NodeStore
+
+
+@pytest.fixture
+def small_cluster(rng):
+    files = small_file_dataset(120, (100, 2_000), num_dirs=4, seed=1)
+    blobs, _ = prepare_dataset(files, 8, compress=True)
+    cluster = FanStoreCluster(4)
+    cluster.load_partitions(blobs, replication=2)
+    return cluster, files
+
+
+def test_global_view_reads(small_cluster):
+    cluster, files = small_cluster
+    for nid in range(4):
+        for path in list(files)[::17]:
+            assert cluster.read(nid, path) == files[path]
+
+
+def test_metadata_replicated_readdir(small_cluster):
+    cluster, files = small_cluster
+    dirs = cluster.readdir("train")
+    assert sorted(dirs) == sorted({p.split("/")[1] for p in files})
+
+
+def test_refcount_cache_eviction():
+    store = NodeStore(0, codec="none")
+    from repro.fanstore.layout import pack_partition
+    store.load_partition(0, pack_partition([("f.bin", b"x" * 100)]))
+    d1 = store.open_local("f.bin")
+    d2 = store.open_local("f.bin")
+    assert store.open_files == 2 and store.stats["cache_hits"] == 1
+    store.release("f.bin")
+    assert store.cached_bytes == 100          # still referenced
+    store.release("f.bin")
+    assert store.cached_bytes == 0            # evicted at refcount 0
+    assert store.stats["evictions"] == 1
+
+
+def test_write_visible_on_close_and_single_write(small_cluster):
+    cluster, _ = small_cluster
+    cluster.write_file(1, "out/model_ep1.ckpt", b"W" * 500)
+    # visible from every node, metadata on the hash-mapped node only
+    for nid in range(4):
+        assert cluster.read(nid, "out/model_ep1.ckpt") == b"W" * 500
+    assert cluster.stat("out/model_ep1.ckpt").st_size == 500
+    with pytest.raises(PermissionError):
+        cluster.write_file(2, "out/model_ep1.ckpt", b"again")
+
+
+def test_input_files_immutable(small_cluster):
+    cluster, files = small_cluster
+    path = next(iter(files))
+    with pytest.raises(PermissionError):
+        cluster.nodes[0].write_begin(path) if cluster.nodes[0].has(path) else \
+            (_ for _ in ()).throw(PermissionError)
+
+
+def test_failover_with_replication(small_cluster):
+    cluster, files = small_cluster
+    cluster.fail_node(2)
+    assert cluster.unreachable_paths() == []
+    for path in list(files)[::23]:
+        assert cluster.read(0, path) == files[path]
+    with pytest.raises(IOError):
+        cluster.read(2, next(iter(files)))
+
+
+def test_unreachable_without_replication(rng):
+    files = small_file_dataset(40, (100, 500), seed=2)
+    blobs, _ = prepare_dataset(files, 4, compress=False)
+    cluster = FanStoreCluster(4)
+    cluster.load_partitions(blobs, replication=1)
+    cluster.fail_node(0)
+    lost = cluster.unreachable_paths()
+    assert lost                                # R=1 -> data loss on failure
+    assert all(cluster.nodes[0].has(p) for p in lost)
+
+
+def test_broadcast_directory_serves_locally(rng):
+    files = {f"val/v{i}.bin": bytes(rng.integers(0, 9, 300, dtype=np.uint8))
+             for i in range(12)}
+    blobs, _ = prepare_dataset(files, 4, compress=False)
+    cluster = FanStoreCluster(4)
+    cluster.load_partitions(blobs, replication=1)
+    assert cluster.broadcast_directory("val") == 12
+    cluster.reset_clocks()
+    for nid in range(4):
+        for p in files:
+            assert cluster.read(nid, p) == files[p]
+    assert cluster.local_hit_rate() == 1.0     # all reads local after bcast
+
+
+def test_fs_api_and_interception(small_cluster):
+    cluster, files = small_cluster
+    fs = FanStoreFS(cluster, node_id=0)
+    assert fs.walk_count("/fanstore") == len(files)
+    path = next(iter(files))
+    with fs.open(f"/fanstore/{path}") as f:
+        assert f.read() == files[path]
+        f.seek(0)
+        assert f.read(10) == files[path][:10]
+    with intercept(fs):
+        import os
+        assert open(f"/fanstore/{path}", "rb").read() == files[path]
+        assert os.path.exists(f"/fanstore/{path}")
+        assert not os.path.exists("/fanstore/nope.bin")
+        with open("/fanstore/out/gen.bin", "wb") as f:
+            f.write(b"generated")
+        assert open("/fanstore/out/gen.bin", "rb").read() == b"generated"
+
+
+def test_least_loaded_replica_choice(rng):
+    """Straggler mitigation: remote reads spread across the replica set."""
+    files = {f"d/f{i}.bin": b"z" * 1000 for i in range(64)}
+    blobs, _ = prepare_dataset(files, 8, compress=False)
+    cluster = FanStoreCluster(4)
+    cluster.load_partitions(blobs, replication=2)
+    for p in files:               # node 3 reads everything
+        cluster.read(3, p)
+    # node 3's remote reads hit partitions whose replica set is {0, 2}
+    # (placement: replicas at pid%4 and (pid+2)%4) — both should serve.
+    s0, s2 = cluster.clocks[0].serve_s, cluster.clocks[2].serve_s
+    assert s0 > 0 and s2 > 0
+    assert max(s0, s2) < 2.0 * min(s0, s2) + 1e-9

@@ -1,0 +1,65 @@
+"""Elasticity: rebalance planning, replica repair, batch rescale."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import small_file_dataset
+from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.prepare import prepare_dataset
+from repro.train.elastic import (apply_rebalance, plan_rebalance,
+                                 rescale_batch)
+
+
+def _cluster(nodes=6, parts=12, replication=2, seed=0):
+    files = small_file_dataset(60, (50, 400), seed=seed)
+    blobs, _ = prepare_dataset(files, parts, compress=False)
+    c = FanStoreCluster(nodes)
+    c.load_partitions(blobs, replication=replication)
+    return c, files
+
+
+def test_plan_noop_when_healthy():
+    c, _ = _cluster()
+    plan = plan_rebalance(c, target_replication=2)
+    assert plan.re_replicate == [] and plan.lost_partitions == []
+
+
+def test_repair_after_failure_restores_reads():
+    c, files = _cluster()
+    c.fail_node(1)
+    plan = plan_rebalance(c, target_replication=2)
+    assert plan.lost_partitions == []
+    assert plan.re_replicate                       # deficit exists
+    assert all(dst != 1 for _, dst in plan.re_replicate)
+    made = apply_rebalance(c, plan)
+    assert made == len(plan.re_replicate)
+    # now fail a second node: R=2 restored means still zero unreachable
+    c.fail_node(2)
+    assert c.unreachable_paths() == []
+    for p in list(files)[::13]:
+        assert c.read(0, p) == files[p]
+
+
+def test_lost_partition_detected():
+    c, _ = _cluster(replication=1)
+    c.fail_node(0)
+    plan = plan_rebalance(c, target_replication=1)
+    assert plan.lost_partitions                    # R=1 cannot self-heal
+
+
+def test_rescale_batch_shrink_keeps_global():
+    plan = rescale_batch(256, old_workers=32, new_workers=16,
+                         old_microbatches=1)
+    assert plan.effective_batch == 256
+    assert plan.microbatches == 2                  # grad accumulation doubles
+
+
+def test_rescale_batch_grow():
+    plan = rescale_batch(256, old_workers=16, new_workers=32,
+                         old_microbatches=2)
+    assert plan.effective_batch == 256
+    assert plan.num_workers == 32
+
+
+def test_rescale_indivisible_raises():
+    with pytest.raises(ValueError):
+        rescale_batch(100, old_workers=4, new_workers=7)

@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import block_dequantize_host, block_quantize
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# dequant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,f,qblock,bn,bf", [
+    (8, 256, 256, 8, 256),
+    (64, 1024, 256, 32, 512),
+    (32, 512, 128, 16, 256),
+    (128, 2048, 256, 128, 2048),
+])
+def test_dequant_shapes(rng, n, f, qblock, bn, bf):
+    x = rng.standard_normal((n, f)).astype(np.float32) * 3
+    q, s = block_quantize(x, block=qblock)
+    from repro.kernels.dequant import dequant
+    out = dequant(jnp.asarray(q), jnp.asarray(s), block_n=bn, block_f=bf,
+                  qblock=qblock, out_dtype=jnp.float32, interpret=True)
+    host = block_dequantize_host(q, s, block=qblock)
+    np.testing.assert_allclose(np.asarray(out), host, rtol=1e-5, atol=1e-5)
+    # quantization error bounded by scale/2 per element
+    scales = np.repeat(s.astype(np.float32), qblock, axis=1)
+    assert (np.abs(host - x) <= scales * 0.5 + 1e-6).all()
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.bfloat16, jnp.float32])
+def test_dequant_dtypes(rng, out_dtype):
+    x = rng.standard_normal((16, 512)).astype(np.float32)
+    q, s = block_quantize(x)
+    out = ops.dequant(jnp.asarray(q), jnp.asarray(s), impl="interpret",
+                      out_dtype=out_dtype)
+    assert out.dtype == out_dtype
+    ref_out = ref.dequant_ref(jnp.asarray(q), jnp.asarray(s),
+                              out_dtype=out_dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_out, np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_int4_host_codec(rng):
+    x = rng.standard_normal((8, 512)).astype(np.float32)
+    q4, s = block_quantize(x, bits=4)
+    assert q4.shape == (8, 256)
+    out = block_dequantize_host(q4, s, bits=4)
+    scales = np.repeat(s.astype(np.float32), 256, axis=1)
+    assert (np.abs(out - x) <= scales * 0.5 + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,d,s,bd,tc", [
+    (1, 32, 16, 8, 16, 32),
+    (2, 64, 32, 8, 16, 16),
+    (2, 128, 64, 16, 32, 32),
+])
+def test_ssm_scan_shapes(rng, b, t, d, s, bd, tc):
+    u = rng.standard_normal((b, t, d)).astype(np.float32)
+    dt = (rng.random((b, t, d)) * 0.3).astype(np.float32)
+    b_in = rng.standard_normal((b, t, s)).astype(np.float32)
+    c_in = rng.standard_normal((b, t, s)).astype(np.float32)
+    a_log = np.log(np.tile(np.arange(1, s + 1, dtype=np.float32)[None],
+                           (d, 1)))
+    d_skip = rng.standard_normal(d).astype(np.float32)
+    args = list(map(jnp.asarray, (u, dt, b_in, c_in, a_log, d_skip)))
+    yk, hk = ops.ssm_scan(*args, impl="interpret", block_d=bd, time_chunk=tc)
+    yr, hr = ref.ssm_scan_ref(*args)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_ssm_scan_bf16_inputs(rng):
+    b, t, d, s = 1, 32, 16, 8
+    u = jnp.asarray(rng.standard_normal((b, t, d)), jnp.bfloat16)
+    dt = jnp.asarray(rng.random((b, t, d)) * 0.2, jnp.bfloat16)
+    b_in = jnp.asarray(rng.standard_normal((b, t, s)), jnp.bfloat16)
+    c_in = jnp.asarray(rng.standard_normal((b, t, s)), jnp.bfloat16)
+    a_log = jnp.asarray(np.zeros((d, s)), jnp.float32)
+    d_skip = jnp.ones((d,), jnp.float32)
+    yk, hk = ops.ssm_scan(u, dt, b_in, c_in, a_log, d_skip, impl="interpret",
+                          block_d=16, time_chunk=16)
+    yr, hr = ref.ssm_scan_ref(u, dt, b_in, c_in, a_log, d_skip)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               rtol=2e-2, atol=2e-2)
+
+
+# also cross-check the lax chunked scan used by the models
+def test_selective_scan_lax_vs_ref(rng):
+    from repro.models.mamba import selective_scan
+    b, t, d, s = 2, 96, 24, 8
+    u = rng.standard_normal((b, t, d)).astype(np.float32)
+    dt = (rng.random((b, t, d)) * 0.3).astype(np.float32)
+    b_in = rng.standard_normal((b, t, s)).astype(np.float32)
+    c_in = rng.standard_normal((b, t, s)).astype(np.float32)
+    a_log = np.zeros((d, s), np.float32)
+    d_skip = np.ones(d, np.float32)
+    args = list(map(jnp.asarray, (u, dt, b_in, c_in, a_log, d_skip)))
+    y1, h1 = selective_scan(*args, chunk=32)
+    y2, h2 = ref.ssm_scan_ref(*args)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,kv,dh,dv,win,bq,bk", [
+    (2, 128, 4, 2, 32, 32, None, 64, 64),
+    (1, 256, 4, 4, 64, 64, 64, 64, 64),
+    (2, 128, 8, 2, 48, 24, None, 64, 64),   # MLA-style dv != dh
+    (1, 128, 2, 1, 32, 32, 32, 32, 32),     # tight window
+    (1, 64, 4, 4, 128, 128, None, 64, 64),
+])
+def test_flash_attn_sweep(rng, b, t, h, kv, dh, dv, win, bq, bk):
+    q = rng.standard_normal((b, t, h, dh)).astype(np.float32)
+    k = rng.standard_normal((b, t, kv, dh)).astype(np.float32)
+    v = rng.standard_normal((b, t, kv, dv)).astype(np.float32)
+    out = ops.attention(*map(jnp.asarray, (q, k, v)), causal=True, window=win,
+                        impl="interpret", block_q=bq, block_k=bk)
+    expect = ref.attention_ref(*map(jnp.asarray, (q, k, v)), causal=True,
+                               window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attn_bf16(rng):
+    q = jnp.asarray(rng.standard_normal((1, 128, 4, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 128, 2, 32)), jnp.bfloat16)
+    out = ops.attention(q, k, v, impl="interpret", block_q=64, block_k=64)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_lax_matches_ref(rng):
+    from repro.models.layers import flash_attention_lax
+    for win in (None, 40):
+        q = rng.standard_normal((2, 96, 4, 32)).astype(np.float32)
+        k = rng.standard_normal((2, 96, 2, 32)).astype(np.float32)
+        v = rng.standard_normal((2, 96, 2, 32)).astype(np.float32)
+        a1 = flash_attention_lax(*map(jnp.asarray, (q, k, v)), causal=True,
+                                 window=win, block_q=32, block_k=32)
+        a2 = ref.attention_ref(*map(jnp.asarray, (q, k, v)), causal=True,
+                               window=win)
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                                   rtol=2e-4, atol=2e-4)

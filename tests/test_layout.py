@@ -1,0 +1,83 @@
+"""Partition binary format (paper Table 3): pack / iterate / read."""
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fanstore.layout import (NAME_LEN, STAT_LEN, iter_partition,
+                                   load_partition, pack_partition)
+from repro.fanstore.metadata import StatRecord
+
+
+def test_table3_offsets(rng):
+    files = [("a/b.bin", b"hello world")]
+    blob = pack_partition(files)
+    (num,) = struct.unpack_from("<I", blob, 0)
+    assert num == 1
+    name = blob[4:4 + NAME_LEN].rstrip(b"\0").decode()
+    assert name == "a/b.bin"
+    st_ = StatRecord.unpack(blob[4 + NAME_LEN: 4 + NAME_LEN + STAT_LEN])
+    assert st_.st_size == 11
+    (csize,) = struct.unpack_from("<Q", blob, 4 + NAME_LEN + STAT_LEN)
+    assert csize == 0                     # uncompressed
+    off = 4 + NAME_LEN + STAT_LEN + 8
+    assert blob[off: off + 11] == b"hello world"
+
+
+def test_roundtrip_multi(rng):
+    files = [(f"d{i % 3}/f{i}.bin",
+              bytes(rng.integers(0, 8, int(rng.integers(0, 3000)),
+                                 dtype=np.uint8)))
+             for i in range(50)]
+    blob = pack_partition(files, compress=True)
+    part = load_partition(blob)
+    assert part.num_files == 50
+    for rec, (path, data) in zip(part.records, files):
+        assert rec.path == path
+        assert rec.stat.st_size == len(data)
+        assert part.read_file(rec) == data
+
+
+def test_adaptive_compression(rng):
+    compressible = bytes(rng.integers(0, 2, 4000, dtype=np.uint8))
+    incompressible = bytes(rng.integers(0, 256, 4000, dtype=np.uint8))
+    blob = pack_partition([("c.bin", compressible), ("i.bin", incompressible)],
+                          compress=True)
+    recs = list(iter_partition(blob))
+    assert recs[0].compressed_size > 0          # stored compressed
+    assert recs[1].compressed_size == 0         # stored raw (paper semantics)
+    part = load_partition(blob)
+    assert part.read_file(recs[0]) == compressible
+    assert part.read_file(recs[1]) == incompressible
+
+
+def test_long_path_rejected():
+    with pytest.raises(ValueError):
+        pack_partition([("x" * 300, b"data")])
+
+
+def test_trailing_bytes_detected():
+    blob = pack_partition([("a.bin", b"12345")]) + b"JUNK"
+    with pytest.raises(IOError):
+        list(iter_partition(blob))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 10 ** 6), st.binary(max_size=500)),
+                min_size=0, max_size=12, unique_by=lambda t: t[0]))
+def test_roundtrip_property(items):
+    files = [(f"p/f{i}.bin", data) for i, data in items]
+    blob = pack_partition(files, compress=True)
+    part = load_partition(blob)
+    assert [(r.path, part.read_file(r)) for r in part.records] == files
+
+
+def test_stat_record_roundtrip():
+    st_ = StatRecord.for_data(12345).replace(st_mtime=1234.5, st_uid=7)
+    packed = st_.pack()
+    assert len(packed) == STAT_LEN
+    out = StatRecord.unpack(packed)
+    assert out.st_size == 12345
+    assert out.st_uid == 7
+    assert abs(out.st_mtime - 1234.5) < 1e-6

@@ -1,0 +1,49 @@
+"""LZSS codec: exact roundtrip (unit + property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fanstore import lzss
+
+
+def test_empty():
+    assert lzss.decompress(lzss.compress(b"")) == b""
+
+
+def test_single_byte():
+    assert lzss.decompress(lzss.compress(b"x")) == b"x"
+
+
+def test_rle_overlap():
+    # overlapping match (classic LZSS self-reference)
+    data = b"a" * 1000
+    c = lzss.compress(data)
+    assert len(c) < 200
+    assert lzss.decompress(c) == data
+
+
+def test_structured(rng):
+    base = bytes(rng.integers(0, 4, 64, dtype=np.uint8))
+    data = base * 100
+    c = lzss.compress(data)
+    assert len(c) < len(data) // 2
+    assert lzss.decompress(c) == data
+
+
+def test_incompressible(rng):
+    data = bytes(rng.integers(0, 256, 4096, dtype=np.uint8))
+    assert lzss.decompress(lzss.compress(data)) == data
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.binary(min_size=0, max_size=2000))
+def test_roundtrip_property(data):
+    assert lzss.decompress(lzss.compress(data)) == data
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 7), st.integers(1, 3000), st.integers(0, 2 ** 31 - 1))
+def test_roundtrip_low_entropy(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    data = bytes(rng.integers(0, 2 ** bits + 1, n, dtype=np.uint8))
+    assert lzss.decompress(lzss.compress(data)) == data

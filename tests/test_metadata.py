@@ -1,0 +1,75 @@
+"""Metadata: stat packing, tables, readdir, placement hashing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fanstore.metadata import (ConsistentHashRing, FileLocation,
+                                     MetadataTable, StatRecord,
+                                     modulo_placement, path_hash)
+
+
+def _loc(n=0):
+    return FileLocation(node_id=n, partition_id=0, record_index=0)
+
+
+def test_insert_lookup_stat_readdir():
+    t = MetadataTable()
+    t.insert("train/cls_0/img0.bin", StatRecord.for_data(10), _loc())
+    t.insert("train/cls_0/img1.bin", StatRecord.for_data(20), _loc(1))
+    t.insert("train/cls_1/img2.bin", StatRecord.for_data(30), _loc())
+    t.insert("val/v.bin", StatRecord.for_data(5), _loc())
+    assert len(t) == 4
+    assert t.stat("train/cls_0/img1.bin").st_size == 20
+    assert t.stat("train").is_dir
+    assert t.readdir("train") == ["cls_0", "cls_1"]
+    assert t.readdir("train/cls_0") == ["img0.bin", "img1.bin"]
+    assert t.readdir("") == ["train", "val"]
+    assert t.readdir("nope") is None
+    assert t.stat("missing.bin") is None
+
+
+def test_modulo_placement_stable():
+    assert modulo_placement("out/x.ckpt", 16) == modulo_placement("out/x.ckpt", 16)
+    # spread across nodes
+    owners = {modulo_placement(f"out/f{i}", 16) for i in range(200)}
+    assert len(owners) == 16
+
+
+def test_ring_basic():
+    ring = ConsistentHashRing(range(8))
+    assert ring.owner("a/b") in range(8)
+    assert ring.owners("a/b", 3) == ring.owners("a/b", 3)
+    assert len(set(ring.owners("a/b", 3))) == 3
+
+
+def test_ring_minimal_movement():
+    """Consistent hashing's point: removing one node moves only its keys."""
+    ring = ConsistentHashRing(range(16))
+    keys = [f"part/{i}" for i in range(2000)]
+    before = {k: ring.owner(k) for k in keys}
+    ring.remove_node(7)
+    after = {k: ring.owner(k) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    # only keys owned by node 7 move
+    assert all(before[k] == 7 for k in moved)
+    assert all(after[k] != 7 for k in keys)
+    # approximately 1/16 of keys lived on node 7
+    assert len(moved) < 2000 * 3 / 16
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(min_size=1, max_size=64), st.integers(1, 512))
+def test_modulo_in_range(path, n):
+    assert 0 <= modulo_placement(path, n) < n
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sets(st.integers(0, 1000), min_size=2, max_size=40),
+       st.text(min_size=1, max_size=32), st.integers(1, 5))
+def test_ring_owner_properties(nodes, key, k):
+    ring = ConsistentHashRing(nodes)
+    k = min(k, len(nodes))
+    owners = ring.owners(key, k)
+    assert len(owners) == k == len(set(owners))
+    assert all(o in nodes for o in owners)
+    assert ring.owner(key) == owners[0]

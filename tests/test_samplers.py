@@ -1,0 +1,63 @@
+"""Samplers: global view, epoch coverage, stratified balance (property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.sampler import (GlobalUniformSampler, PartitionedViewSampler,
+                                StratifiedSampler)
+
+
+def test_uniform_epoch_coverage():
+    s = GlobalUniformSampler(128, 16, seed=3)
+    seen = np.concatenate([s.next_batch() for _ in range(s.steps_per_epoch)])
+    assert sorted(seen.tolist()) == list(range(128))
+
+
+def test_uniform_reshuffles_across_epochs():
+    s = GlobalUniformSampler(64, 64, seed=3)
+    e0 = s.next_batch()
+    e1 = s.next_batch()
+    assert sorted(e0.tolist()) == sorted(e1.tolist())
+    assert e0.tolist() != e1.tolist()
+
+
+def test_stratified_epoch_coverage():
+    s = StratifiedSampler(128, 32, num_shards=4, seed=5)
+    seen = np.concatenate([s.next_batch() for _ in range(s.steps_per_epoch)])
+    assert sorted(seen.tolist()) == list(range(128))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 6), st.integers(1, 4),
+       st.integers(0, 99))
+def test_stratified_per_requester_balance(d, per_pair, epochs_unused, seed):
+    """Every requester slice holds exactly per_pair ids from every owner."""
+    num_samples = d * d * per_pair * 4
+    g = d * d * per_pair
+    s = StratifiedSampler(num_samples, g, num_shards=d, seed=seed)
+    per_shard = num_samples // d
+    for _ in range(3):
+        batch = s.next_batch().reshape(d, g // d)
+        owners = batch // per_shard
+        for r in range(d):
+            counts = np.bincount(owners[r], minlength=d)
+            assert (counts == per_pair).all()
+
+
+def test_partitioned_view_restricts_workers():
+    s = PartitionedViewSampler(100, 20, num_workers=4, seed=0)
+    for _ in range(5):
+        batch = s.next_batch().reshape(4, 5)
+        for w in range(4):
+            assert ((batch[w] >= w * 25) & (batch[w] < (w + 1) * 25)).all()
+
+
+def test_sampler_state_restore():
+    a = GlobalUniformSampler(64, 8, seed=9)
+    for _ in range(5):
+        a.next_batch()
+    cursor = type(a.state)(**vars(a.state))
+    nxt = a.next_batch()
+    b = GlobalUniformSampler(64, 8, seed=9)
+    b.restore(cursor)
+    assert (b.next_batch() == nxt).all()

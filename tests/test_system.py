@@ -1,0 +1,56 @@
+"""End-to-end behaviour test for the paper's system: the full FanStore
+story in one scenario — prepare, distribute, read through POSIX surface,
+train, fail a node, keep training."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.data.pipeline import PrefetchLoader
+from repro.data.sampler import GlobalUniformSampler
+from repro.data.synthetic import files_to_tokens, token_dataset, tokens_to_files
+from repro.fanstore import FanStoreCluster, FanStoreFS, prepare_dataset
+from repro.models import build_model
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import init_state, make_train_step
+
+
+def test_fanstore_system_end_to_end():
+    seq, vocab, n_files = 32, 128, 96
+    tokens = token_dataset(n_files, seq, vocab, seed=7)
+    files = tokens_to_files(tokens)
+    blobs, report = prepare_dataset(files, 6, compress=True)
+    assert report.num_files == n_files
+
+    cluster = FanStoreCluster(3, codec="lzss")
+    cluster.load_partitions(blobs, replication=2)
+    fs = FanStoreFS(cluster, node_id=0)
+    assert fs.walk_count("/fanstore") == n_files          # global namespace
+
+    cfg = get_smoke("qwen2-72b").scaled(vocab_size=vocab)
+    model = build_model(cfg)
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=20)
+    state = init_state(model, jax.random.key(0), ocfg)
+    step = jax.jit(make_train_step(model, ocfg))
+    paths = sorted(files)
+    sampler = GlobalUniformSampler(n_files, 16, seed=0)
+    def fetch(i):
+        live = cluster.live_nodes()          # failed readers are rerouted
+        return cluster.read(live[i % len(live)], paths[i])
+
+    loader = PrefetchLoader(
+        sampler, fetch=fetch,
+        decode=lambda bl: {"tokens": jnp.asarray(files_to_tokens(bl, seq))},
+        num_threads=4)
+    losses = []
+    for i, batch in enumerate(loader.batches(10)):
+        if i == 5:
+            cluster.fail_node(2)      # mid-training failure; replicas cover
+            assert cluster.unreachable_paths() == []
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+    # output write path: visible-on-close, single-write
+    cluster.write_file(0, "out/final.ckpt", b"\x01" * 256)
+    assert cluster.read(1, "out/final.ckpt") == b"\x01" * 256

@@ -1,0 +1,106 @@
+"""Integration: full data plane -> train loop; loss decreases; grad comm."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.data.pipeline import PrefetchLoader
+from repro.data.sampler import GlobalUniformSampler
+from repro.data.synthetic import files_to_tokens, token_dataset, tokens_to_files
+from repro.fanstore import FanStoreCluster, prepare_dataset
+from repro.models import build_model
+from repro.train.grad_comm import quantize_ef
+from repro.train.optimizer import (OptimizerConfig, adamw_init, adamw_update,
+                                   global_norm, lr_schedule)
+from repro.train.train_step import init_state, make_train_step
+
+
+def test_end_to_end_fanstore_training(rng):
+    seq, vocab = 32, 128
+    tokens = token_dataset(128, seq, vocab, seed=0)
+    files = tokens_to_files(tokens)
+    blobs, _ = prepare_dataset(files, 8, compress=True)
+    cluster = FanStoreCluster(4, codec="lzss")
+    cluster.load_partitions(blobs, replication=2)
+    paths = sorted(files)
+
+    cfg = get_smoke("chatglm3-6b").scaled(vocab_size=vocab)
+    model = build_model(cfg)
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=30)
+    state = init_state(model, jax.random.key(0), ocfg)
+    step = jax.jit(make_train_step(model, ocfg))
+    sampler = GlobalUniformSampler(len(paths), 16, seed=0)
+    loader = PrefetchLoader(
+        sampler, fetch=lambda i: cluster.read(i % 4, paths[i]),
+        decode=lambda bl: {"tokens": jnp.asarray(files_to_tokens(bl, seq))},
+        num_threads=4)
+    losses = []
+    for batch in loader.batches(15):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1
+    assert cluster.local_hit_rate() > 0.3       # replication=2 on 4 nodes
+
+
+def test_microbatching_equivalence(rng):
+    """2-way grad accumulation == single big batch (same loss trajectory)."""
+    cfg = get_smoke("qwen2-72b").scaled(remat=False)
+    model = build_model(cfg)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10,
+                           grad_clip=0.0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (8, 32)).astype(np.int32))}
+    s1 = init_state(model, jax.random.key(0), ocfg)
+    s2 = init_state(model, jax.random.key(0), ocfg)
+    f1 = jax.jit(make_train_step(model, ocfg, microbatches=1))
+    f2 = jax.jit(make_train_step(model, ocfg, microbatches=2))
+    for _ in range(3):
+        s1, m1 = f1(s1, batch)
+        s2, m2 = f2(s2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), abs=5e-3)
+
+
+def test_lr_schedule_shapes():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          schedule="cosine", min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < 0.2                      # warmup start
+    assert max(lrs) == pytest.approx(1.0, abs=1e-3)
+    assert lrs[-1] == pytest.approx(0.1, abs=0.05)
+    assert np.argmax(lrs) <= 10
+
+
+def test_grad_clip_bounds_update():
+    cfg = OptimizerConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.ones((4, 4))}
+    opt = adamw_init(params)
+    grads = {"w": jnp.full((4, 4), 100.0)}
+    _, _, metrics = adamw_update(cfg, params, grads, opt)
+    assert float(metrics["grad_norm"]) == pytest.approx(400.0)
+
+
+def test_quantize_ef_unbiased_over_time(rng):
+    """Error feedback: accumulated quantized sum tracks the true sum."""
+    x = jnp.asarray(rng.standard_normal((4, 256)) * 0.01)
+    res = jnp.zeros_like(x)
+    q_sum = np.zeros(x.shape, np.float32)
+    for t in range(50):
+        q, scale, res = quantize_ef(x, res)
+        q_sum += np.asarray(q, np.float32) * np.asarray(scale)
+    true_sum = np.asarray(x) * 50
+    # per-element error stays bounded by one quantization step, not 50
+    step = np.asarray(jnp.max(jnp.abs(x), axis=-1, keepdims=True)) / 127
+    assert (np.abs(q_sum - true_sum) <= step * 1.5 + 1e-7).all()
+
+
+def test_zero1_shardings_api():
+    from repro.train.optimizer import zero1_leaf_sharding
+    import jax.sharding as shd
+    # single-device "mesh" exercise of the spec logic
+    mesh = jax.make_mesh((1,), ("data",))
+    fn = zero1_leaf_sharding(mesh, ("data",))
+    ns = shd.NamedSharding(mesh, shd.PartitionSpec(None, None))
+    leaf = jax.ShapeDtypeStruct((8, 4), jnp.float32)
+    out = fn(ns, leaf)
+    assert isinstance(out, shd.NamedSharding)
