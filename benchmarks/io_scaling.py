@@ -7,10 +7,19 @@ every file once (the paper's benchmark), files striped once across nodes
 (R=1), so the local hit rate falls as 1/N — exactly the regime Figs 5-6
 measure. Reported: aggregated bandwidth, throughput, scaling efficiency vs
 the paper's chosen baselines (4 nodes GPU / 64 nodes CPU).
+
+Beyond the paper, two engine axes::
+
+    --batched      route reads through ``read_many`` so all requests for one
+                   owner ride a single modeled round trip; reports makespan
+                   for both paths and the speedup
+    --cache-mb M   per-node client LRU read cache of M MiB (2 epochs so the
+                   second pass can hit), reporting cache hit rate
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import argparse
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -25,39 +34,68 @@ GPU_NET = InterconnectModel(latency_s=1.0e-6, bandwidth_Bps=56e9 / 8,
 CPU_NET = InterconnectModel(latency_s=1.5e-6, bandwidth_Bps=100e9 / 8,
                             disk_bw_Bps=2.0e9)
 
+BATCH = 32      # samples per coalesced read_many call (one training step)
+
+
+def _build_cluster(nodes: int, file_size: int, count: int,
+                   net: InterconnectModel, *, replication: int,
+                   cache_mb: int) -> FanStoreCluster:
+    # one shared payload per size: content is timing-irrelevant here and
+    # generating count x file_size of RNG bytes dominated the wall time
+    payload = bytes(np.random.default_rng(1).integers(
+        0, 256, file_size, dtype=np.uint8))
+    files = {f"bench/f_{i:06d}.bin": payload for i in range(count)}
+    blobs, _ = prepare_dataset(files, max(nodes, 8), compress=False)
+    cluster = FanStoreCluster(nodes, interconnect=net,
+                              cache_bytes=cache_mb * 1024 * 1024)
+    cluster.load_partitions(blobs, replication=replication)
+    return cluster
+
 
 def run_one(nodes: int, file_size: int, count: int,
             net: InterconnectModel, *, replication: int = 1,
-            reads_per_node: int = 128) -> Dict:
-    # one shared payload per size: content is timing-irrelevant here and
-    # generating count x file_size of RNG bytes dominated the wall time
-    import numpy as _np0
-    payload = bytes(_np0.random.default_rng(1).integers(
-        0, 256, file_size, dtype=_np0.uint8))
-    files = {f"bench/f_{i:06d}.bin": payload for i in range(count)}
-    blobs, _ = prepare_dataset(files, max(nodes, 8), compress=False)
-    cluster = FanStoreCluster(nodes, interconnect=net)
-    cluster.load_partitions(blobs, replication=replication)
-    paths = sorted(files)
+            reads_per_node: int = 128, batched: bool = False,
+            cache_mb: int = 0, epochs: int = 1,
+            cluster: Optional[FanStoreCluster] = None) -> Dict:
+    if cluster is None:
+        cluster = _build_cluster(nodes, file_size, count, net,
+                                 replication=replication, cache_mb=cache_mb)
+    paths = sorted(f"bench/f_{i:06d}.bin" for i in range(count))
     cluster.reset_clocks()
+    for c in cluster.caches.values():
+        c.clear()
     # each node reads a uniform sample of the directory: the per-node
     # timeline statistics match the paper's read-everything benchmark in
     # expectation while bounding the python-loop cost at 512 nodes
-    import numpy as _np
-    rng = _np.random.default_rng(nodes)
+    rng = np.random.default_rng(nodes)
     m = min(reads_per_node, len(paths))
-    for nid in range(nodes):
-        for i in rng.choice(len(paths), size=m, replace=False):
-            cluster.read(nid, paths[int(i)], materialize=False)
+    reads = 0
+    for _ in range(epochs):
+        for nid in range(nodes):
+            chosen = [paths[int(i)]
+                      for i in rng.choice(len(paths), size=m, replace=False)]
+            reads += len(chosen)
+            if batched:
+                for s in range(0, len(chosen), BATCH):
+                    cluster.read_many(nid, chosen[s:s + BATCH],
+                                      materialize=False)
+            else:
+                for p in chosen:
+                    cluster.read(nid, p, materialize=False)
     bw = cluster.aggregate_bandwidth()
     t = cluster.makespan_s()
     return {"nodes": nodes, "file_size": file_size,
             "agg_MBps": bw / 1e6,
-            "files_s": nodes * m / t,
-            "hit_rate": cluster.local_hit_rate()}
+            "files_s": reads / t,
+            "hit_rate": cluster.local_hit_rate(),
+            "cache_hit_rate": cluster.cache_hit_rate(),
+            "cache_mb": cache_mb,
+            "makespan_s": t,
+            "batched": batched}
 
 
-def run(arm: str = "cpu", *, count: int = None) -> List[Dict]:
+def run(arm: str = "cpu", *, count: int = None, batched: bool = False,
+        cache_mb: int = 0, epochs: int = 1) -> List[Dict]:
     if arm == "gpu":
         scales, net = [1, 4, 8, 16], GPU_NET
         count = count or 128
@@ -72,7 +110,22 @@ def run(arm: str = "cpu", *, count: int = None) -> List[Dict]:
             # F >= 2N keeps the benchmark in the scaling (not hot-owner)
             # regime while bounding the python-loop cost at large N
             c = min(count, max(256, 2 * n))
-            rows.append(run_one(n, size, c, net))
+            cluster = _build_cluster(n, size, c, net, replication=1,
+                                     cache_mb=cache_mb)
+            row = run_one(n, size, c, net, batched=batched,
+                          cache_mb=cache_mb, epochs=epochs, cluster=cluster)
+            if batched:
+                # same workload through per-file round trips on the same
+                # cluster (clocks + caches reset): the coalescing win is the
+                # makespan ratio, without paying the dataset build twice
+                base = run_one(n, size, c, net, batched=False,
+                               cache_mb=cache_mb, epochs=epochs,
+                               cluster=cluster)
+                row["makespan_perfile_s"] = base["makespan_s"]
+                row["batched_speedup"] = (
+                    base["makespan_s"] / row["makespan_s"]
+                    if row["makespan_s"] > 0 else 1.0)
+            rows.append(row)
     # efficiency vs the paper's baselines
     base_n = 4 if arm == "gpu" else 64
     for size in FILE_SIZES:
@@ -85,19 +138,53 @@ def run(arm: str = "cpu", *, count: int = None) -> List[Dict]:
     return rows
 
 
-def main() -> List[str]:
+def format_rows(arm: str, fig: str, rows: List[Dict]) -> List[str]:
+    out = []
+    for r in rows:
+        eff = r.get("efficiency_vs_base")
+        line = (
+            f"{fig},arm={arm},nodes={r['nodes']},"
+            f"size={r['file_size']//1024}KB,agg_bw={r['agg_MBps']:.0f}MB/s,"
+            f"files_s={r['files_s']:.0f},hit={r['hit_rate']:.3f}")
+        if r.get("batched"):
+            line += (f",makespan_batched={r['makespan_s']:.6f}s,"
+                     f"makespan_perfile={r['makespan_perfile_s']:.6f}s,"
+                     f"batched_speedup={r['batched_speedup']:.3f}")
+        if r.get("cache_mb"):       # cache enabled: report even a 0.0 rate
+            line += f",cache_hit={r['cache_hit_rate']:.3f}"
+        if eff:
+            line += f",scale_eff={eff:.3f}"
+        out.append(line)
+    return out
+
+
+def main(*, batched: bool = False, cache_mb: int = 0,
+         epochs: Optional[int] = None, arms: Optional[List[str]] = None
+         ) -> List[str]:
+    if epochs is None:
+        epochs = 2 if cache_mb else 1
     out = []
     for arm, fig in (("gpu", "fig5"), ("cpu", "fig6")):
-        for r in run(arm):
-            eff = r.get("efficiency_vs_base")
-            out.append(
-                f"{fig},arm={arm},nodes={r['nodes']},"
-                f"size={r['file_size']//1024}KB,agg_bw={r['agg_MBps']:.0f}MB/s,"
-                f"files_s={r['files_s']:.0f},hit={r['hit_rate']:.3f}"
-                + (f",scale_eff={eff:.3f}" if eff else ""))
+        if arms and arm not in arms:
+            continue
+        rows = run(arm, batched=batched, cache_mb=cache_mb, epochs=epochs)
+        out.extend(format_rows(arm, fig, rows))
     return out
 
 
 if __name__ == "__main__":
-    for line in main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batched", action="store_true",
+                    help="read through read_many (coalesced round trips) and "
+                         "report the makespan win over the per-file path")
+    ap.add_argument("--cache-mb", type=int, default=0,
+                    help="per-node client LRU read cache budget in MiB")
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="read passes per node (default 1; 2 when caching)")
+    ap.add_argument("--arm", choices=["gpu", "cpu"], default=None,
+                    help="run a single arm instead of both")
+    args = ap.parse_args()
+    for line in main(batched=args.batched, cache_mb=args.cache_mb,
+                     epochs=args.epochs,
+                     arms=[args.arm] if args.arm else None):
         print(line)

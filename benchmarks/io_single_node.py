@@ -8,9 +8,15 @@ time. "SSD" here is the container's filesystem via direct open/read;
 "SFS" uses the interconnect model's shared-filesystem path (single metadata
 server + shared bandwidth). FanStore reads go through the real Python
 store (partition index + refcount cache + decompress-if-packed).
+
+Engine axes (beyond the paper): ``--batched`` drives the reads through the
+``read_many`` batched API in training-step-sized chunks, and ``--cache-mb``
+enables the per-node client LRU read cache with a second epoch so repeated
+reads are served from RAM instead of the partition store.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import shutil
 import tempfile
@@ -31,17 +37,28 @@ SFS_LATENCY_S = 450e-6       # shared-FS per-op metadata+RPC cost (Lustre-ish)
 SFS_BW = 1.2e9               # shared-FS client bandwidth
 
 
-def bench_fanstore(files: Dict[str, bytes]) -> Tuple[float, float]:
+BATCH = 32      # samples per read_many call in --batched mode
+
+
+def bench_fanstore(files: Dict[str, bytes], *, batched: bool = False,
+                   cache_mb: int = 0, epochs: int = 1
+                   ) -> Tuple[float, float]:
     blobs, _ = prepare_dataset(files, 4, compress=False)
-    cluster = FanStoreCluster(1)
+    cluster = FanStoreCluster(1, cache_bytes=cache_mb * 1024 * 1024)
     cluster.load_partitions(blobs, replication=1)
     paths = sorted(files)
     t0 = time.perf_counter()
     total = 0
-    for p in paths:
-        total += len(cluster.read(0, p))
+    for _ in range(epochs):
+        if batched:
+            for s in range(0, len(paths), BATCH):
+                for data in cluster.read_many(0, paths[s:s + BATCH]):
+                    total += len(data)
+        else:
+            for p in paths:
+                total += len(cluster.read(0, p))
     dt = time.perf_counter() - t0
-    return total / dt, len(paths) / dt
+    return total / dt, epochs * len(paths) / dt
 
 
 def bench_disk(files: Dict[str, bytes], *, crossing_s: float = 0.0
@@ -76,12 +93,14 @@ def bench_sfs_model(files: Dict[str, bytes]) -> Tuple[float, float]:
     return nbytes / dt, nops / dt
 
 
-def run(scale: float = 1.0) -> List[Dict]:
+def run(scale: float = 1.0, *, batched: bool = False, cache_mb: int = 0,
+        epochs: int = 1) -> List[Dict]:
     rows = []
     for size, count in zip(FILE_SIZES, BASE_COUNTS):
         count = max(4, int(count * scale))
         files = fixed_size_files(size, count, entropy_bits=8)
-        fs_bw, fs_tp = bench_fanstore(files)
+        fs_bw, fs_tp = bench_fanstore(files, batched=batched,
+                                      cache_mb=cache_mb, epochs=epochs)
         ssd_bw, ssd_tp = bench_disk(files)
         fuse_bw, fuse_tp = bench_disk(files, crossing_s=FUSE_CROSSING_S)
         sfs_bw, sfs_tp = bench_sfs_model(files)
@@ -98,9 +117,12 @@ def run(scale: float = 1.0) -> List[Dict]:
     return rows
 
 
-def main(scale: float = 0.25) -> List[str]:
+def main(scale: float = 0.25, *, batched: bool = False, cache_mb: int = 0,
+         epochs: int = None) -> List[str]:
+    if epochs is None:
+        epochs = 2 if cache_mb else 1
     out = ["table=fig3_single_node"]
-    for r in run(scale):
+    for r in run(scale, batched=batched, cache_mb=cache_mb, epochs=epochs):
         out.append(
             f"fig3,size={r['file_size']//1024}KB,"
             f"fanstore={r['fanstore_MBps']:.0f}MB/s,"
@@ -108,10 +130,22 @@ def main(scale: float = 0.25) -> List[str]:
             f"sfs={r['sfs_MBps']:.0f}MB/s,"
             f"vs_ssd={r['fanstore_vs_ssd']:.2f},"
             f"vs_fuse={r['fanstore_vs_fuse']:.2f},"
-            f"vs_sfs={r['fanstore_vs_sfs']:.2f}")
+            f"vs_sfs={r['fanstore_vs_sfs']:.2f}"
+            + (f",batched=1" if batched else "")
+            + (f",cache_mb={cache_mb}" if cache_mb else ""))
     return out
 
 
 if __name__ == "__main__":
-    for line in main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--batched", action="store_true",
+                    help="read through the batched read_many API")
+    ap.add_argument("--cache-mb", type=int, default=0,
+                    help="client LRU read cache budget in MiB")
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="read passes (default 1; 2 when caching)")
+    args = ap.parse_args()
+    for line in main(args.scale, batched=args.batched,
+                     cache_mb=args.cache_mb, epochs=args.epochs):
         print(line)

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI entry point. Two lanes:
+#   scripts/ci.sh fast   -> tier-1 command minus tests marked slow
+#   scripts/ci.sh full   -> the tier-1 command (ROADMAP.md)
+# pytest.ini provides pythonpath=src, so no PYTHONPATH dance is needed;
+# it is still exported for subprocess-spawning tests.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+lane="${1:-full}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+case "$lane" in
+  fast)
+    python -m pytest -x -q -m "not slow"
+    ;;
+  full)
+    python -m pytest -x -q
+    ;;
+  *)
+    echo "usage: $0 [fast|full]" >&2
+    exit 2
+    ;;
+esac

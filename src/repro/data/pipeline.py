@@ -33,15 +33,28 @@ class PrefetchLoader:
       sampler: object with ``next_batch() -> np.ndarray[int32]`` and ``state``.
       fetch: maps one sample index -> bytes (e.g. a FanStore read).
       decode: maps list-of-bytes for a batch -> model-ready arrays.
-      num_threads: I/O threads *per batch* fetching samples concurrently.
+      fetch_many: optional batched fetch mapping a list of sample indices ->
+        list of bytes in order (e.g. ``FanStoreCluster.read_many``). When
+        given, each batch is ONE coalesced call — the engine groups requests
+        per owner node and pays one round trip per owner instead of one per
+        sample — and the per-sample thread fan-out is skipped.
+      num_threads: I/O threads *per batch* fetching samples concurrently
+        (per-sample path only).
       depth: batches staged ahead of compute.
     """
 
-    def __init__(self, sampler, fetch: Callable[[int], bytes],
-                 decode: Callable[[List[bytes]], object], *,
+    def __init__(self, sampler, fetch: Callable[[int], bytes] = None,
+                 decode: Callable[[List[bytes]], object] = None, *,
+                 fetch_many: Optional[
+                     Callable[[List[int]], List[bytes]]] = None,
                  num_threads: int = 4, depth: int = 2):
+        if fetch is None and fetch_many is None:
+            raise ValueError("need fetch or fetch_many")
+        if decode is None:
+            raise ValueError("decode is required")
         self.sampler = sampler
         self.fetch = fetch
+        self.fetch_many = fetch_many
         self.decode = decode
         self.num_threads = num_threads
         self.depth = depth
@@ -52,6 +65,8 @@ class PrefetchLoader:
 
     # -- batch assembly ------------------------------------------------------
     def _fetch_batch(self, indices: np.ndarray) -> object:
+        if self.fetch_many is not None:
+            return self.decode(self.fetch_many([int(i) for i in indices]))
         out: List[Optional[bytes]] = [None] * len(indices)
         if self.num_threads <= 1:
             for i, idx in enumerate(indices):

@@ -1,0 +1,10 @@
+"""Distribution layer: sharding rules + pipeline parallelism.
+
+  sharding      ShardingRules / make_rules — divisibility-driven specs for
+                batches, activations, expert blocks, and parameter trees
+  pipeline_par  GPipe-style microbatch pipelining over a 'stage' mesh axis
+"""
+from repro.dist.sharding import ShardingRules, make_rules
+from repro.dist.pipeline_par import pipeline_apply, split_stages
+
+__all__ = ["ShardingRules", "make_rules", "pipeline_apply", "split_stages"]

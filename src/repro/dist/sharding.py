@@ -1,0 +1,115 @@
+"""Sharding rules: divisibility-driven placement for batches, activations,
+expert blocks, and parameter trees.
+
+One policy object serves every (arch x shape x mesh) cell of the dry-run
+grid, so nothing here is arch-specific: every decision is made from shapes
+and mesh-axis divisibility at trace time.
+
+  * batch dim takes the data axes when divisible; otherwise the sequence
+    dim does (the long-context, batch=1 case) — mirroring the cache policy
+    in :mod:`repro.serve.kvcache`;
+  * activation hidden dim takes the model axis when divisible;
+  * expert blocks (E, cap, D) are expert-parallel over the model axis when
+    E divides, else model-parallel inside the expert FFN (see
+    repro.models.moe);
+  * parameter leaves shard exactly one dim on the model axis — the last
+    divisible one, skipping the scan-over-layers leading dim — and stay
+    replicated over the data axes (grads are synced by the train step).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]
+    tp_axis: str = "model"
+    seq_shard: bool = False
+
+    @property
+    def dp_size(self) -> int:
+        size = 1
+        for a in self.dp_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape.get(self.tp_axis, 1)
+
+    # ---- batches -----------------------------------------------------------
+    def batch_spec(self, kind: str, global_batch: int,
+                   seq_len: Optional[int] = None) -> P:
+        """Spec for a (B, T, ...) input batch."""
+        if not self.dp_axes or self.dp_size == 1:
+            return P()
+        if self.seq_shard and seq_len and seq_len % self.dp_size == 0 \
+                and kind != "decode":
+            return P(None, self.dp_axes)
+        if global_batch % self.dp_size == 0:
+            return P(self.dp_axes)
+        if seq_len and seq_len % self.dp_size == 0 and kind != "decode":
+            return P(None, self.dp_axes)
+        return P()
+
+    # ---- activations -------------------------------------------------------
+    def _tp_if(self, n: int):
+        return self.tp_axis if self.tp_size > 1 and n % self.tp_size == 0 \
+            else None
+
+    def act_constraint(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Pin (B, ..., D) activations: batch on data, hidden on model."""
+        if x.ndim < 2:
+            return x
+        dp = self.dp_axes if (self.dp_axes and
+                              x.shape[0] % self.dp_size == 0) else None
+        spec = [dp] + [None] * (x.ndim - 2) + [self._tp_if(x.shape[-1])]
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def expert_constraint(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Pin (E, cap, D) expert blocks: EP over model when E divides."""
+        if x.ndim != 3:
+            return x
+        if self.tp_size > 1 and x.shape[0] % self.tp_size == 0:
+            spec = P(self.tp_axis, None, None)
+        else:
+            spec = P(None, None, self._tp_if(x.shape[-1]))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    # ---- parameters --------------------------------------------------------
+    def _param_spec(self, shape: Tuple[int, ...]) -> P:
+        spec = [None] * len(shape)
+        if self.tp_size <= 1 or not shape:
+            return P(*spec)
+        # skip the leading dim of scanned stacks (rank >= 3: (L, ..., ...));
+        # shard the last dim divisible by the model-axis size
+        first = 1 if len(shape) >= 3 else 0
+        for d in range(len(shape) - 1, first - 1, -1):
+            if shape[d] % self.tp_size == 0 and shape[d] >= self.tp_size:
+                spec[d] = self.tp_axis
+                break
+        return P(*spec)
+
+    def params_shardings(self, shapes: Any, cfg: Any = None) -> Any:
+        """NamedSharding pytree aligned with a ShapeDtypeStruct pytree."""
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, self._param_spec(s.shape)),
+            shapes)
+
+
+def make_rules(mesh: Mesh, *, seq_shard: bool = False,
+               tp_axis: str = "model") -> ShardingRules:
+    """Data axes = every mesh axis except the model axis (pod included)."""
+    dp = tuple(a for a in mesh.axis_names if a != tp_axis)
+    return ShardingRules(mesh=mesh, dp_axes=dp, tp_axis=tp_axis,
+                         seq_shard=seq_shard)

@@ -1,25 +1,40 @@
 """FanStore host tier — the faithful reproduction of the paper's runtime FS.
 
 Layers:
-  layout     Table-3 partition binary format
-  lzss       LZSS compression codec (the paper uses LZSSE8)
-  metadata   stat records, replicated input metadata, consistent-hash ring
-  store      per-node store: partitions, refcount cache, write buffers
-  cluster    simulated multi-node deployment with an interconnect model
-  fs         POSIX-style file API under a /fanstore mount prefix
-  intercept  optional builtins.open/os.stat/os.listdir interception
-  prepare    the data-preparation program (files -> partitions)
+  layout      Table-3 partition binary format
+  lzss        LZSS compression codec (the paper uses LZSSE8)
+  metadata    stat records, replicated input metadata tables
+  placement   path -> owner policies (modulo / consistent-hash ring) and
+              replica selection (least-loaded / power-of-two-choices)
+  store       per-node store: partitions, refcount cache, write buffers
+  transport   interconnect cost model + payload movement (per-file and
+              batched round trips, thread-pool async futures)
+  cache       optional per-node byte-budget LRU read cache
+  accounting  per-node clocks + cluster aggregates for the benchmarks
+  cluster     the composition of the above behind one deployment object
+  fs          POSIX-style file API under a /fanstore mount prefix
+  intercept   optional builtins.open/os.stat/os.listdir interception
+  prepare     the data-preparation program (files -> partitions)
 """
 from repro.fanstore.layout import Partition, pack_partition, iter_partition, FileRecord
-from repro.fanstore.metadata import StatRecord, ConsistentHashRing, MetadataTable
+from repro.fanstore.metadata import StatRecord, MetadataTable
+from repro.fanstore.placement import (ConsistentHashRing, ModuloPlacement,
+                                      RingPlacement, LeastLoadedSelector,
+                                      PowerOfTwoSelector)
 from repro.fanstore.store import NodeStore
-from repro.fanstore.cluster import FanStoreCluster, InterconnectModel
+from repro.fanstore.accounting import ClusterAccounting, NodeClock
+from repro.fanstore.transport import FetchItem, InterconnectModel, Transport
+from repro.fanstore.cache import ByteLRUCache, CacheStats
+from repro.fanstore.cluster import FanStoreCluster
 from repro.fanstore.fs import FanStoreFS
 from repro.fanstore.prepare import prepare_dataset
 
 __all__ = [
     "Partition", "pack_partition", "iter_partition", "FileRecord",
     "StatRecord", "ConsistentHashRing", "MetadataTable",
+    "ModuloPlacement", "RingPlacement", "LeastLoadedSelector",
+    "PowerOfTwoSelector", "ClusterAccounting", "NodeClock",
+    "FetchItem", "Transport", "ByteLRUCache", "CacheStats",
     "NodeStore", "FanStoreCluster", "InterconnectModel", "FanStoreFS",
     "prepare_dataset",
 ]

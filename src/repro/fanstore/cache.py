@@ -1,0 +1,135 @@
+"""Client-side read cache layer (beyond-paper; Hoard-style).
+
+The paper evicts a file's decompressed bytes the moment its refcount hits
+zero (uniform random access defeats LRU *within one epoch over a dataset
+larger than RAM*). But at cluster scale the dominant win — per Hoard
+(Pinto et al., 2018) — is a client-side cache absorbing repeated remote
+reads: hot validation files, small shared metadata, and any skewed access
+pattern. ``ByteLRUCache`` is that tier: a per-node, byte-budgeted LRU that
+sits in front of the transport. Hits, misses, and evictions are reported
+through the node's ``NodeClock`` (see :mod:`repro.fanstore.accounting`) so
+benchmarks can plot hit rate against the byte budget.
+
+The cache is OFF by default (``capacity_bytes=0`` disabled) so the paper-
+faithful read path is unchanged unless a deployment opts in.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class CachedEntry:
+    """One cache slot. ``data is None`` marks a size-only entry: benchmarks
+    running with ``materialize=False`` model cache behavior without holding
+    payload copies, so only the byte budget and timeline are exercised."""
+    data: Optional[bytes]
+    size: int
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    insertions: int = 0
+    hit_bytes: int = 0
+    evicted_bytes: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class ByteLRUCache:
+    """Byte-budgeted LRU over immutable payloads (input files never change,
+    so entries are never invalidated — only evicted for space).
+
+    Two event ledgers exist by design: ``self.stats`` is the cache's own
+    lifetime view (survives ``FanStoreCluster.reset_clocks``), while the
+    cluster mirrors the same events onto the reading node's ``NodeClock``
+    (per-benchmark-run timeline). The cluster's ``read_many`` is the single
+    call site responsible for keeping the mirror in step."""
+
+    def __init__(self, capacity_bytes: int):
+        if capacity_bytes < 0:
+            raise ValueError("capacity_bytes must be >= 0")
+        self.capacity_bytes = capacity_bytes
+        self._entries: "OrderedDict[str, CachedEntry]" = OrderedDict()
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    @property
+    def enabled(self) -> bool:
+        return self.capacity_bytes > 0
+
+    @property
+    def used_bytes(self) -> int:
+        return self._bytes
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, path: str) -> bool:
+        with self._lock:
+            return path in self._entries
+
+    def get(self, path: str, *,
+            require_data: bool = False) -> Optional[CachedEntry]:
+        """Return the cached entry (marking it most-recent) or None on miss.
+
+        ``require_data=True`` treats size-only entries as misses (no hit
+        stats, no MRU promotion): a materializing read cannot be served by
+        a modeling placeholder and will refetch-and-replace it.
+        """
+        if not self.enabled:
+            return None
+        with self._lock:
+            entry = self._entries.get(path)
+            if entry is None or (require_data and entry.data is None):
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(path)
+            self.stats.hits += 1
+            self.stats.hit_bytes += entry.size
+            return entry
+
+    def put(self, path: str, data: Optional[bytes], *,
+            size: Optional[int] = None) -> int:
+        """Insert a payload, evicting LRU entries past the byte budget.
+
+        ``data=None`` requires an explicit ``size`` (size-only modeling
+        entry). Returns the number of evictions this insert caused.
+        Payloads larger than the whole budget are not cached (they would
+        evict everything for a single-use entry).
+        """
+        nbytes = len(data) if data is not None else size
+        if nbytes is None:
+            raise ValueError("size is required for size-only entries")
+        if not self.enabled or nbytes > self.capacity_bytes:
+            return 0
+        evicted = 0
+        with self._lock:
+            old = self._entries.pop(path, None)
+            if old is not None:
+                self._bytes -= old.size
+            self._entries[path] = CachedEntry(data=data, size=nbytes)
+            self._bytes += nbytes
+            self.stats.insertions += 1
+            while self._bytes > self.capacity_bytes:
+                _, victim = self._entries.popitem(last=False)
+                self._bytes -= victim.size
+                self.stats.evictions += 1
+                self.stats.evicted_bytes += victim.size
+                evicted += 1
+        return evicted
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._bytes = 0

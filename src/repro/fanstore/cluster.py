@@ -1,80 +1,58 @@
-"""Multi-node FanStore deployment with a modeled interconnect (paper §5.1/§6).
+"""Multi-node FanStore deployment composed from the layered I/O engine.
 
 The container has one host, so multi-node behaviour is *simulated*: N
-``NodeStore`` instances plus an :class:`InterconnectModel` that accounts the
-cost of every remote round trip (latency + bytes/bandwidth) the way the
-paper's MPI transport would incur it. Benchmarks read the accounted
-timelines to produce the aggregate-bandwidth / scaling-efficiency curves of
-Figs 5-6; correctness tests exercise the same code paths with accounting
-ignored.
+``NodeStore`` instances wired together by four layers, each independently
+pluggable (paper §5.1/§6 plus the beyond-paper scaling seams):
+
+  placement   which node owns a path (ModuloPlacement = paper-faithful
+              ``hash % N``; RingPlacement = consistent hashing for
+              elasticity) and which replica serves a read
+              (least-loaded / power-of-two-choices)
+  transport   the InterconnectModel cost accounting + payload movement,
+              including the batched ``fetch_remote_batch`` that coalesces
+              all requests per (requester, owner) pair into one round trip,
+              and a thread-pool future API for async fetch
+  cache       optional per-node byte-budget LRU read cache in front of
+              both tiers (off by default; Hoard-style client caching)
+  accounting  per-node NodeClock timelines and the cluster aggregates the
+              scaling benchmarks plot
+
+``FanStoreCluster`` composes them behind the same public surface the seed
+monolith had (``read``/``stat``/``write_file``/...), plus the batched
+``read_many`` API the data pipeline and benchmarks use.
 
 Also implemented here, beyond the paper's §5.6 (which punts resilience to
-checkpoints):
-  * replica failover — with replication factor R>1, reads retry surviving
-    owners when a node is marked failed,
-  * straggler mitigation — replica choice uses least-loaded-of-owners
-    (power-of-two-choices degenerates to this with full knowledge),
-  * elastic membership — add/remove nodes and compute a minimal rebalance
-    plan (see repro.train.elastic for the planner).
+checkpoints): replica failover, straggler mitigation via replica selection,
+and elastic membership hooks (see repro.train.elastic for the planner).
 """
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.fanstore.accounting import ClusterAccounting, NodeClock
+from repro.fanstore.cache import ByteLRUCache
 from repro.fanstore.layout import iter_partition, pack_partition
 from repro.fanstore.metadata import (FileLocation, MetadataTable, StatRecord,
                                      modulo_placement, path_hash)
+from repro.fanstore.placement import (LeastLoadedSelector, ModuloPlacement,
+                                      Placement, ReplicaSelector)
 from repro.fanstore.store import NodeStore
+from repro.fanstore.transport import FetchItem, InterconnectModel, Transport
 
-
-@dataclass
-class InterconnectModel:
-    """First-order fabric model: per-message latency + per-byte cost.
-
-    Defaults approximate the paper's CPU cluster (100 Gb/s OPA, ~1.5 us):
-    latency_s per round trip, bandwidth_Bps per NIC direction. Local tier
-    is modeled with disk_bw_Bps (SSD) and a per-open syscall overhead.
-    """
-    latency_s: float = 1.5e-6
-    bandwidth_Bps: float = 100e9 / 8
-    disk_bw_Bps: float = 2.0e9
-    open_overhead_s: float = 3e-6
-    decompress_Bps: float = 1.5e9     # LZSS-class decode rate per core
-
-    def remote_cost(self, nbytes: int) -> float:
-        return self.latency_s + nbytes / self.bandwidth_Bps
-
-    def local_cost(self, nbytes: int, *, compressed: bool = False) -> float:
-        t = self.open_overhead_s + nbytes / self.disk_bw_Bps
-        if compressed:
-            t += nbytes / self.decompress_Bps
-        return t
-
-
-@dataclass
-class NodeClock:
-    """Per-node accounted timeline: what the node spent consuming vs serving."""
-    consume_s: float = 0.0
-    serve_s: float = 0.0
-    bytes_in: int = 0
-    bytes_out: int = 0
-    local_bytes: int = 0
-
-    @property
-    def busy_s(self) -> float:
-        # consumption and service contend for the same NIC/cores; a node's
-        # makespan is at least each and at most the sum — use max (full overlap)
-        # as the optimistic bound the paper's threaded workers approach.
-        return max(self.consume_s, self.serve_s)
+__all__ = ["FanStoreCluster", "InterconnectModel", "NodeClock"]
 
 
 class FanStoreCluster:
     """N-node transient store with replicated input metadata."""
 
     def __init__(self, num_nodes: int, *, codec: str = "lzss",
-                 interconnect: Optional[InterconnectModel] = None) -> None:
+                 interconnect: Optional[InterconnectModel] = None,
+                 placement: Optional[Placement] = None,
+                 selector: Optional[ReplicaSelector] = None,
+                 cache_bytes: int = 0,
+                 io_threads: int = 8) -> None:
         if num_nodes < 1:
             raise ValueError("need at least one node")
         self.codec = codec
@@ -85,12 +63,23 @@ class FanStoreCluster:
         self.output_meta: Dict[int, Dict[str, StatRecord]] = {
             i: {} for i in range(num_nodes)}   # distributed output metadata
         self.output_data: Dict[str, Tuple[int, bytes]] = {}
-        self.clocks: Dict[int, NodeClock] = {i: NodeClock() for i in range(num_nodes)}
+        self.accounting = ClusterAccounting(range(num_nodes))
+        self.placement: Placement = placement or ModuloPlacement(num_nodes)
+        self.selector: ReplicaSelector = selector or LeastLoadedSelector()
+        self.transport = Transport(self.net, self.nodes,
+                                   self.accounting.clocks,
+                                   num_threads=io_threads)
+        self.caches: Dict[int, ByteLRUCache] = {
+            i: ByteLRUCache(cache_bytes) for i in range(num_nodes)}
         self.failed: set = set()
         self._lock = threading.Lock()
         self._next_partition = 0
 
-    # ---- loading -----------------------------------------------------------
+    # ---- composition plumbing ----------------------------------------------
+    @property
+    def clocks(self) -> Dict[int, NodeClock]:
+        return self.accounting.clocks
+
     @property
     def num_nodes(self) -> int:
         return len(self.nodes)
@@ -98,6 +87,7 @@ class FanStoreCluster:
     def live_nodes(self) -> List[int]:
         return [i for i in self.nodes if i not in self.failed]
 
+    # ---- loading -----------------------------------------------------------
     def load_partitions(self, partitions: Sequence[bytes], *,
                         replication: int = 1) -> None:
         """Round-robin partitions over nodes with replication factor R.
@@ -167,13 +157,33 @@ class FanStoreCluster:
                 lost.append(path)
         return lost
 
-    # ---- reads ---------------------------------------------------------------
-    def _pick_owner(self, loc: FileLocation) -> int:
+    # ---- reads -------------------------------------------------------------
+    def _fetch_item(self, path: str, st: StatRecord,
+                    loc: FileLocation) -> FetchItem:
+        """Resolve the sizes the transport cost model needs for one file."""
+        rec = None
+        if self.nodes[loc.node_id].has(path):
+            rec = self.nodes[loc.node_id].record_for(path)
+        compressed = bool(rec and rec.compressed_size)
+        return FetchItem(path=path, size=st.st_size,
+                         stored=rec.stored_size if rec else st.st_size,
+                         compressed=compressed)
+
+    def _read_output(self, requester: int, path: str) -> bytes:
+        """Visible-until-finish: check distributed output metadata."""
+        owner = self.placement.owner(path)
+        st = self.output_meta[owner].get(path)
+        if st is None:
+            raise FileNotFoundError(path)
+        _, data = self.output_data[path]
+        self.transport.account_output_read(requester, len(data))
+        return data
+
+    def _live_owners(self, loc: FileLocation) -> List[int]:
         owners = [o for o in loc.all_owners if o not in self.failed]
         if not owners:
             raise IOError("all replicas failed")
-        # least-loaded replica (straggler mitigation)
-        return min(owners, key=lambda o: self.clocks[o].serve_s)
+        return owners
 
     def read(self, requester: int, path: str, *, materialize: bool = True
              ) -> bytes:
@@ -184,56 +194,91 @@ class FanStoreCluster:
         benchmarks, where 512 nodes x thousands of multi-MB reads would
         spend their wall time in host memcpy instead of the modeled fabric.
         """
+        return self.read_many(requester, [path], materialize=materialize,
+                              batched=False)[0]
+
+    def read_many(self, requester: int, paths: Sequence[str], *,
+                  materialize: bool = True, batched: bool = True
+                  ) -> List[bytes]:
+        """Batched read: all remote requests for one owner ride ONE round trip.
+
+        ``batched=False`` degrades to per-file round trips (the paper's
+        synchronous client), byte-for-byte identical to the seed ``read``
+        accounting — benchmarks compare the two to show the coalescing win.
+        Results are returned in input order.
+        """
         if requester in self.failed:
             raise IOError(f"node {requester} is failed")
-        path = path.strip("/")
-        hit = self.metadata.lookup(path)
-        clock = self.clocks[requester]
-        if hit is None:
-            # visible-until-finish: check distributed output metadata
-            owner = modulo_placement(path, self.num_nodes)
-            st = self.output_meta[owner].get(path)
-            if st is None:
-                raise FileNotFoundError(path)
-            _, data = self.output_data[path]
-            clock.consume_s += self.net.remote_cost(len(data))
-            return data
-        st, loc = hit
-        compressed = False
-        rec = None
-        if self.nodes[loc.node_id].has(path):
-            rec = self.nodes[loc.node_id].record_for(path)
-            compressed = bool(rec and rec.compressed_size)
-        size = st.st_size
-        stored = rec.stored_size if rec else size
-        if self.nodes[requester].has(path):
-            if materialize:
-                data = self.nodes[requester].open_local(path)
-                self.nodes[requester].release(path)
+        out: List[Optional[bytes]] = [None] * len(paths)
+        cache = self.caches[requester]
+        # (owner -> [(output slot, item)]) for the remote leg
+        groups: Dict[int, List[Tuple[int, FetchItem]]] = {}
+        pending_serve: Dict[int, float] = {}
+        for i, raw in enumerate(paths):
+            path = raw.strip("/")
+            hit = self.metadata.lookup(path)
+            if hit is None:
+                out[i] = self._read_output(requester, path)
+                continue
+            st, loc = hit
+            item = self._fetch_item(path, st, loc)
+            if cache.enabled:
+                entry = cache.get(path, require_data=materialize)
+                if entry is not None:
+                    self.transport.account_cache_hit(requester, item)
+                    out[i] = entry.data if materialize else b""
+                    continue
+                self.transport.account_cache_miss(requester)
+            if self.nodes[requester].has(path):
+                data = self.transport.fetch_local(requester, item,
+                                                  materialize=materialize)
+                out[i] = data
+                if cache.enabled:
+                    ev = cache.put(path, data if materialize else None,
+                                   size=item.size)
+                    self.transport.account_cache_eviction(requester, ev)
+                continue
+            owners = self._live_owners(loc)
+            load = {o: self.clocks[o].serve_s + pending_serve.get(o, 0.0)
+                    for o in owners}
+            owner = self.selector.choose(owners, load)
+            pending_serve[owner] = pending_serve.get(owner, 0.0) + (
+                self.net.local_cost(item.stored)
+                + item.stored / self.net.bandwidth_Bps)
+            groups.setdefault(owner, []).append((i, item))
+        for owner, entries in groups.items():
+            items = [it for _, it in entries]
+            if batched:
+                datas = self.transport.fetch_remote_batch(
+                    requester, owner, items, materialize=materialize)
             else:
-                data = b""
-            clock.consume_s += self.net.local_cost(size, compressed=compressed)
-            clock.local_bytes += size
-            return data
-        owner = self._pick_owner(loc)
-        if materialize:
-            data = self.nodes[owner].serve_remote(path)
-        else:
-            data = b""
-        clock.consume_s += self.net.remote_cost(stored)
-        if compressed:
-            clock.consume_s += size / self.net.decompress_Bps
-        clock.bytes_in += stored
-        oc = self.clocks[owner]
-        oc.serve_s += self.net.local_cost(stored) + stored / self.net.bandwidth_Bps
-        oc.bytes_out += stored
-        return data
+                datas = [self.transport.fetch_remote(
+                    requester, owner, it, materialize=materialize)
+                    for it in items]
+            for (i, item), data in zip(entries, datas):
+                out[i] = data
+                if cache.enabled:
+                    ev = cache.put(item.path,
+                                   data if materialize else None,
+                                   size=item.size)
+                    self.transport.account_cache_eviction(requester, ev)
+        return out  # type: ignore[return-value]
+
+    def read_many_async(self, requester: int, paths: Sequence[str], *,
+                        materialize: bool = True) -> "Future[List[bytes]]":
+        """Batched read on the transport's I/O pool; returns a Future."""
+        return self.transport.submit(self.read_many, requester, list(paths),
+                                     materialize=materialize)
+
+    def shutdown(self) -> None:
+        """Join the transport's I/O pool (spawned lazily by async reads)."""
+        self.transport.shutdown()
 
     def stat(self, path: str) -> StatRecord:
         st = self.metadata.stat(path)
         if st is not None:
             return st
-        owner = modulo_placement(path.strip("/"), self.num_nodes)
+        owner = self.placement.owner(path.strip("/"))
         st = self.output_meta[owner].get(path.strip("/"))
         if st is None:
             raise FileNotFoundError(path)
@@ -245,15 +290,22 @@ class FanStoreCluster:
             raise FileNotFoundError(path)
         return kids
 
-    # ---- writes ---------------------------------------------------------------
+    # ---- writes ------------------------------------------------------------
     def write_file(self, writer: int, path: str, data: bytes) -> None:
         """open-for-write + write + close, with visible-on-close semantics."""
         path = path.strip("/")
         node = self.nodes[writer]
         node.write_begin(path)
         node.write_append(path, data)
-        st, payload = node.write_finish(path)
-        owner = modulo_placement(path, self.num_nodes)
+        self.commit_write(writer, path)
+
+    def commit_write(self, writer: int, path: str) -> StatRecord:
+        """Close an open write: finish the buffer, enforce single-write,
+        publish the metadata to the placement-hash owner, account the
+        forward. Shared by ``write_file`` and the FS layer's ``close()``."""
+        path = path.strip("/")
+        st, payload = self.nodes[writer].write_finish(path)
+        owner = self.placement.owner(path)
         with self._lock:
             if path in self.output_data:
                 raise PermissionError(f"{path}: single-write violated")
@@ -263,20 +315,20 @@ class FanStoreCluster:
         if owner != writer:
             clock.consume_s += self.net.remote_cost(200)  # metadata forward
         clock.consume_s += len(payload) / self.net.disk_bw_Bps
+        return st
 
-    # ---- accounting -----------------------------------------------------------
+    # ---- accounting --------------------------------------------------------
     def reset_clocks(self) -> None:
-        self.clocks = {i: NodeClock() for i in self.nodes}
+        self.accounting.reset()
 
     def makespan_s(self) -> float:
-        return max((c.busy_s for c in self.clocks.values()), default=0.0)
+        return self.accounting.makespan_s()
 
     def aggregate_bandwidth(self) -> float:
-        total = sum(c.local_bytes + c.bytes_in for c in self.clocks.values())
-        t = self.makespan_s()
-        return total / t if t > 0 else 0.0
+        return self.accounting.aggregate_bandwidth()
 
     def local_hit_rate(self) -> float:
-        local = sum(c.local_bytes for c in self.clocks.values())
-        total = local + sum(c.bytes_in for c in self.clocks.values())
-        return local / total if total else 1.0
+        return self.accounting.local_hit_rate()
+
+    def cache_hit_rate(self) -> float:
+        return self.accounting.cache_hit_rate()

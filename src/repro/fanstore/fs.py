@@ -36,10 +36,10 @@ class FanStoreFile(io.RawIOBase):
         self._pos = 0
         if "r" in mode:
             self._data: Optional[bytes] = fs.cluster.read(fs.node_id, path)
-            self._buf: Optional[List[bytes]] = None
+            self._writing = False
         elif "w" in mode or "x" in mode:
             self._data = None
-            self._buf = []
+            self._writing = True        # bytes live in the NodeStore buffer
             fs.cluster.nodes[fs.node_id].write_begin(path)
         else:
             raise ValueError(f"unsupported mode {mode!r}")
@@ -70,28 +70,27 @@ class FanStoreFile(io.RawIOBase):
 
     # -- writes --
     def writable(self) -> bool:
-        return self._buf is not None
+        return self._writing
 
     def write(self, data) -> int:
-        if self._buf is None:
+        if not self._writing:
             raise io.UnsupportedOperation("not open for writing")
         b = bytes(data)
         self._fs.cluster.nodes[self._fs.node_id].write_append(self._path, b)
-        self._buf.append(b)
         return len(b)
 
     def close(self) -> None:
         if self.closed:
             return
-        if self._buf is not None:
-            node = self._fs.cluster.nodes[self._fs.node_id]
-            st, payload = node.write_finish(self._path)
-            from repro.fanstore.metadata import modulo_placement
-            owner = modulo_placement(self._path, self._fs.cluster.num_nodes)
-            with self._fs.cluster._lock:
-                self._fs.cluster.output_data[self._path] = (self._fs.node_id, payload)
-                self._fs.cluster.output_meta[owner][self._path] = st
-        super().close()
+        writing, self._writing = self._writing, False
+        try:
+            if writing:
+                # route through the cluster's commit helper so the FS layer
+                # gets the same single-write enforcement + metadata-forward
+                # accounting as cluster.write_file
+                self._fs.cluster.commit_write(self._fs.node_id, self._path)
+        finally:
+            super().close()
 
 
 class FanStoreFS:
@@ -116,6 +115,12 @@ class FanStoreFS:
         if "b" not in mode:
             raise ValueError("FanStore is a binary store; use 'rb'/'wb'")
         return FanStoreFile(self, self.resolve(path), mode.replace("b", ""))
+
+    def read_many(self, paths: List[str]) -> List[bytes]:
+        """Batched whole-file reads through the engine: one modeled round
+        trip per (this node, owner) pair instead of one per file."""
+        return self.cluster.read_many(self.node_id,
+                                      [self.resolve(p) for p in paths])
 
     def stat(self, path: str) -> StatRecord:
         return self.cluster.stat(self.resolve(path))

@@ -7,19 +7,17 @@
   ``readdir()`` returns immediately (paper: "preprocessed and cached in a hash
   table to allow readdir() to return immediately").
 * Output-file placement: the paper maps a path to a node with
-  ``hash(path) % node_count`` (it calls this a consistent hash). We provide
-  that faithful ``modulo_placement`` plus a true ``ConsistentHashRing`` with
-  virtual nodes — the ring is what makes elastic membership changes cheap
-  (O(moved/total) instead of full reshuffle) and is used by
-  :mod:`repro.train.elastic`.
+  ``hash(path) % node_count`` (it calls this a consistent hash). The faithful
+  ``modulo_placement`` lives here; the true ``ConsistentHashRing`` with
+  virtual nodes (cheap elastic membership, used by :mod:`repro.train.elastic`)
+  now lives in :mod:`repro.fanstore.placement` — a lazy re-export below keeps
+  old imports working.
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
 import hashlib
 import struct
-import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -107,57 +105,13 @@ def modulo_placement(path: str, node_count: int) -> int:
     return path_hash(path) % node_count
 
 
-class ConsistentHashRing:
-    """True consistent hashing with virtual nodes (beyond-paper, for elasticity)."""
-
-    def __init__(self, node_ids: Iterable[int], *, vnodes: int = 64):
-        self.vnodes = vnodes
-        self._ring: List[Tuple[int, int]] = []
-        self._nodes: set = set()
-        for nid in node_ids:
-            self.add_node(nid)
-
-    def _vhash(self, node_id: int, replica: int) -> int:
-        return path_hash(f"node:{node_id}:v{replica}")
-
-    def add_node(self, node_id: int) -> None:
-        if node_id in self._nodes:
-            return
-        self._nodes.add(node_id)
-        for r in range(self.vnodes):
-            bisect.insort(self._ring, (self._vhash(node_id, r), node_id))
-
-    def remove_node(self, node_id: int) -> None:
-        if node_id not in self._nodes:
-            return
-        self._nodes.discard(node_id)
-        self._ring = [(h, n) for (h, n) in self._ring if n != node_id]
-
-    @property
-    def nodes(self) -> Tuple[int, ...]:
-        return tuple(sorted(self._nodes))
-
-    def owner(self, path: str) -> int:
-        if not self._ring:
-            raise RuntimeError("empty hash ring")
-        h = path_hash(path)
-        idx = bisect.bisect_right(self._ring, (h, 1 << 62)) % len(self._ring)
-        return self._ring[idx][1]
-
-    def owners(self, path: str, k: int) -> List[int]:
-        """First k distinct nodes clockwise from the path's point (replica set)."""
-        if k > len(self._nodes):
-            raise ValueError("k exceeds live node count")
-        h = path_hash(path)
-        idx = bisect.bisect_right(self._ring, (h, 1 << 62))
-        picked: List[int] = []
-        for step in range(len(self._ring)):
-            nid = self._ring[(idx + step) % len(self._ring)][1]
-            if nid not in picked:
-                picked.append(nid)
-                if len(picked) == k:
-                    break
-        return picked
+def __getattr__(name: str):
+    # ConsistentHashRing moved to repro.fanstore.placement; resolve lazily so
+    # the two modules can import each other's stable halves without a cycle.
+    if name == "ConsistentHashRing":
+        from repro.fanstore.placement import ConsistentHashRing
+        return ConsistentHashRing
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class MetadataTable:

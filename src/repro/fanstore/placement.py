@@ -1,0 +1,168 @@
+"""Placement layer: where a path's bytes (or metadata) live, and which
+replica serves a given read.
+
+Two concerns, two pluggable protocols:
+
+* :class:`Placement` — path -> owning node. ``ModuloPlacement`` is the
+  paper's faithful ``hash(path) % node_count`` (§5.3 calls it a consistent
+  hash; it is not). ``RingPlacement`` wraps a true consistent-hash ring with
+  virtual nodes so membership changes move only O(changed/total) keys —
+  the property :mod:`repro.train.elastic` builds its rebalance plans on.
+* :class:`ReplicaSelector` — given the live owners of a file and the current
+  per-node load, pick who serves this read. ``LeastLoadedSelector`` is the
+  straggler mitigation the cluster has always used; ``PowerOfTwoSelector``
+  samples two owners and takes the lighter one, the classic low-coordination
+  approximation that behaves identically under full load knowledge but
+  models what a real client with stale load info would do.
+
+``ConsistentHashRing`` historically lived in :mod:`repro.fanstore.metadata`;
+it is defined here now (metadata keeps a lazy compatibility re-export).
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+from typing import Iterable, List, Mapping, Optional, Protocol, Sequence, Tuple
+
+from repro.fanstore.metadata import modulo_placement, path_hash
+
+
+class ConsistentHashRing:
+    """True consistent hashing with virtual nodes (beyond-paper, for elasticity)."""
+
+    def __init__(self, node_ids: Iterable[int], *, vnodes: int = 64):
+        self.vnodes = vnodes
+        self._ring: List[Tuple[int, int]] = []
+        self._nodes: set = set()
+        for nid in node_ids:
+            self.add_node(nid)
+
+    def _vhash(self, node_id: int, replica: int) -> int:
+        return path_hash(f"node:{node_id}:v{replica}")
+
+    def add_node(self, node_id: int) -> None:
+        if node_id in self._nodes:
+            return
+        self._nodes.add(node_id)
+        for r in range(self.vnodes):
+            bisect.insort(self._ring, (self._vhash(node_id, r), node_id))
+
+    def remove_node(self, node_id: int) -> None:
+        if node_id not in self._nodes:
+            return
+        self._nodes.discard(node_id)
+        self._ring = [(h, n) for (h, n) in self._ring if n != node_id]
+
+    @property
+    def nodes(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._nodes))
+
+    def owner(self, path: str) -> int:
+        if not self._ring:
+            raise RuntimeError("empty hash ring")
+        h = path_hash(path)
+        idx = bisect.bisect_right(self._ring, (h, 1 << 62)) % len(self._ring)
+        return self._ring[idx][1]
+
+    def owners(self, path: str, k: int) -> List[int]:
+        """First k distinct nodes clockwise from the path's point (replica set)."""
+        if k > len(self._nodes):
+            raise ValueError("k exceeds live node count")
+        h = path_hash(path)
+        idx = bisect.bisect_right(self._ring, (h, 1 << 62))
+        picked: List[int] = []
+        for step in range(len(self._ring)):
+            nid = self._ring[(idx + step) % len(self._ring)][1]
+            if nid not in picked:
+                picked.append(nid)
+                if len(picked) == k:
+                    break
+        return picked
+
+
+class Placement(Protocol):
+    """path -> owning node id (used for output-file metadata placement)."""
+
+    def owner(self, path: str) -> int: ...
+
+    def replica_set(self, path: str, k: int) -> List[int]: ...
+
+
+class ModuloPlacement:
+    """The paper's placement: ``hash(path) % node_count`` (§5.3)."""
+
+    def __init__(self, num_nodes: int):
+        if num_nodes < 1:
+            raise ValueError("need at least one node")
+        self.num_nodes = num_nodes
+
+    def owner(self, path: str) -> int:
+        return modulo_placement(path, self.num_nodes)
+
+    def replica_set(self, path: str, k: int) -> List[int]:
+        if k > self.num_nodes:
+            raise ValueError("k exceeds node count")
+        first = self.owner(path)
+        return [(first + i) % self.num_nodes for i in range(k)]
+
+
+class RingPlacement:
+    """Consistent-hash placement: membership changes move O(changed/total) keys."""
+
+    def __init__(self, node_ids: Iterable[int], *, vnodes: int = 64):
+        self.ring = ConsistentHashRing(node_ids, vnodes=vnodes)
+
+    def owner(self, path: str) -> int:
+        return self.ring.owner(path)
+
+    def replica_set(self, path: str, k: int) -> List[int]:
+        return self.ring.owners(path, k)
+
+    def add_node(self, node_id: int) -> None:
+        self.ring.add_node(node_id)
+
+    def remove_node(self, node_id: int) -> None:
+        self.ring.remove_node(node_id)
+
+
+class ReplicaSelector(Protocol):
+    """Pick the owner that serves a read from the file's live replica set."""
+
+    def choose(self, owners: Sequence[int], load: Mapping[int, float]) -> int: ...
+
+
+class LeastLoadedSelector:
+    """Full-knowledge straggler mitigation: serve from the least-busy owner."""
+
+    def choose(self, owners: Sequence[int], load: Mapping[int, float]) -> int:
+        return min(owners, key=lambda o: (load.get(o, 0.0), o))
+
+
+class PowerOfTwoSelector:
+    """Power-of-two-choices: sample two owners, take the lighter.
+
+    Deterministic seeding keeps benchmarks reproducible; with R<=2 this
+    degenerates to least-loaded (both choices are the whole owner set).
+    """
+
+    def __init__(self, seed: int = 0):
+        self._state = (seed * 2654435761 + 1) & 0xFFFFFFFF
+        self._lock = threading.Lock()   # draws stay a deterministic sequence
+                                        # even from transport pool threads
+
+    def _rand(self, n: int) -> int:
+        # xorshift32: cheap, deterministic, no numpy dependency on hot path
+        with self._lock:
+            x = self._state or 1
+            x ^= (x << 13) & 0xFFFFFFFF
+            x ^= x >> 17
+            x ^= (x << 5) & 0xFFFFFFFF
+            self._state = x
+        return x % n
+
+    def choose(self, owners: Sequence[int], load: Mapping[int, float]) -> int:
+        if len(owners) <= 2:
+            return min(owners, key=lambda o: (load.get(o, 0.0), o))
+        a = owners[self._rand(len(owners))]
+        b = owners[self._rand(len(owners))]
+        return min((a, b), key=lambda o: (load.get(o, 0.0), o))

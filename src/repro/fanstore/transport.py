@@ -1,0 +1,202 @@
+"""Transport layer: the modeled fabric and the code that moves payloads.
+
+``InterconnectModel`` is the first-order cost model (per-message latency +
+per-byte cost) the simulated cluster accounts against; it used to live in
+:mod:`repro.fanstore.cluster` and is re-exported there for compatibility.
+
+``Transport`` is the seam every byte crosses. It knows nothing about
+placement or metadata — callers hand it resolved (path, owner, sizes)
+tuples and it (a) performs the actual payload movement against the
+``NodeStore`` instances and (b) accrues the modeled cost onto the right
+``NodeClock``. Two shapes:
+
+* ``fetch_local`` / ``fetch_remote`` — the per-file round trips the paper's
+  synchronous client issues (one ``latency_s`` per file).
+* ``fetch_remote_batch`` — the batched path: all requests for one
+  (requester, owner) pair ride a single round trip, so a batch of K files
+  from one owner accrues exactly one ``latency_s`` plus the summed byte
+  cost. This is what makes small-file workloads latency-bound -> bandwidth-
+  bound (Clairvoyant-prefetching-style request coalescing).
+
+``submit``/``fetch_batch_async`` run any fetch on a shared thread pool and
+return a ``concurrent.futures.Future`` so data pipelines can overlap the
+next batch's I/O with compute without threading code of their own.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.fanstore.accounting import NodeClock
+from repro.fanstore.store import NodeStore
+
+
+@dataclass
+class InterconnectModel:
+    """First-order fabric model: per-message latency + per-byte cost.
+
+    Defaults approximate the paper's CPU cluster (100 Gb/s OPA, ~1.5 us):
+    latency_s per round trip, bandwidth_Bps per NIC direction. Local tier
+    is modeled with disk_bw_Bps (SSD) and a per-open syscall overhead.
+    cache_bw_Bps is the client-side read-cache (RAM) service rate.
+    """
+    latency_s: float = 1.5e-6
+    bandwidth_Bps: float = 100e9 / 8
+    disk_bw_Bps: float = 2.0e9
+    open_overhead_s: float = 3e-6
+    decompress_Bps: float = 1.5e9     # LZSS-class decode rate per core
+    cache_bw_Bps: float = 20e9        # DRAM-resident read cache
+
+    def remote_cost(self, nbytes: int) -> float:
+        return self.latency_s + nbytes / self.bandwidth_Bps
+
+    def local_cost(self, nbytes: int, *, compressed: bool = False) -> float:
+        t = self.open_overhead_s + nbytes / self.disk_bw_Bps
+        if compressed:
+            t += nbytes / self.decompress_Bps
+        return t
+
+    def cache_cost(self, nbytes: int) -> float:
+        return nbytes / self.cache_bw_Bps
+
+
+@dataclass(frozen=True)
+class FetchItem:
+    """One resolved read request: path + the sizes the cost model needs."""
+    path: str
+    size: int             # decompressed (st_size) bytes
+    stored: int           # bytes on the wire (compressed size if packed)
+    compressed: bool = False
+
+
+class Transport:
+    """Moves payloads between node stores and accounts the modeled cost."""
+
+    def __init__(self, net: InterconnectModel, nodes: Dict[int, NodeStore],
+                 clocks: Dict[int, NodeClock], *, num_threads: int = 8):
+        self.net = net
+        self.nodes = nodes
+        self.clocks = clocks
+        self._lock = threading.Lock()     # clock accrual from pool threads
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._num_threads = num_threads
+
+    # ---- local tier --------------------------------------------------------
+    def fetch_local(self, node_id: int, item: FetchItem, *,
+                    materialize: bool = True) -> bytes:
+        """Read a file the requesting node already holds (SSD tier)."""
+        node = self.nodes[node_id]
+        if materialize:
+            data = node.open_local(item.path)
+            node.release(item.path)
+        else:
+            data = b""
+        with self._lock:
+            clock = self.clocks[node_id]
+            clock.consume_s += self.net.local_cost(item.size,
+                                                   compressed=item.compressed)
+            clock.local_bytes += item.size
+        return data
+
+    # ---- remote tier -------------------------------------------------------
+    def fetch_remote(self, requester: int, owner: int, item: FetchItem, *,
+                     materialize: bool = True) -> bytes:
+        """One synchronous round trip: one ``latency_s`` for one file."""
+        data = self.nodes[owner].serve_remote(item.path) if materialize else b""
+        with self._lock:
+            self._account_remote(requester, owner, [item])
+        return data
+
+    def fetch_remote_batch(self, requester: int, owner: int,
+                           items: Sequence[FetchItem], *,
+                           materialize: bool = True) -> List[bytes]:
+        """Coalesced fetch: K files from one owner, ONE round-trip latency.
+
+        The requester pays ``latency_s`` once for the whole group and the
+        owner pays one request-handling ``open_overhead_s`` (one message,
+        one scatter-gather over its already-open partition blobs); per-byte
+        costs are unchanged. See ``_account_remote`` for the exact model.
+        """
+        if not items:
+            return []
+        if materialize:
+            out = [self.nodes[owner].serve_remote(it.path) for it in items]
+        else:
+            out = [b"" for _ in items]
+        with self._lock:
+            self._account_remote(requester, owner, items, round_trips=1)
+        return out
+
+    def _account_remote(self, requester: int, owner: int,
+                        items: Sequence[FetchItem], *,
+                        round_trips: Optional[int] = None) -> None:
+        """Accrue modeled cost; ``round_trips`` defaults to one per item.
+
+        With ``round_trips=1`` (batched) the requester pays one ``latency_s``
+        for the whole group and the owner pays one request-handling
+        ``open_overhead_s``: the server answers a single message with one
+        scatter-gather over its already-open partition blobs instead of K
+        per-request handlings. Byte costs (NIC both sides, server storage
+        read, client decompress) are per-byte and unchanged.
+        """
+        trips = len(items) if round_trips is None else round_trips
+        stored = sum(it.stored for it in items)
+        clock = self.clocks[requester]
+        clock.consume_s += trips * self.net.latency_s
+        clock.consume_s += stored / self.net.bandwidth_Bps
+        for it in items:
+            if it.compressed:
+                clock.consume_s += it.size / self.net.decompress_Bps
+        clock.bytes_in += stored
+        oc = self.clocks[owner]
+        oc.serve_s += trips * self.net.open_overhead_s
+        oc.serve_s += stored / self.net.disk_bw_Bps
+        oc.serve_s += stored / self.net.bandwidth_Bps
+        oc.bytes_out += stored
+
+    # ---- output tier (payload comes from the shared output table) ----------
+    def account_output_read(self, requester: int, nbytes: int) -> None:
+        with self._lock:
+            self.clocks[requester].consume_s += self.net.remote_cost(nbytes)
+
+    # ---- cache tier (accounting only; payload comes from the cache) --------
+    def account_cache_hit(self, node_id: int, item: FetchItem) -> None:
+        with self._lock:
+            clock = self.clocks[node_id]
+            clock.consume_s += self.net.cache_cost(item.size)
+            clock.cache_hits += 1
+            clock.cache_hit_bytes += item.size
+
+    def account_cache_miss(self, node_id: int) -> None:
+        with self._lock:
+            self.clocks[node_id].cache_misses += 1
+
+    def account_cache_eviction(self, node_id: int, count: int = 1) -> None:
+        with self._lock:
+            self.clocks[node_id].cache_evictions += count
+
+    # ---- async future API --------------------------------------------------
+    @property
+    def pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self._num_threads,
+                thread_name_prefix="fanstore-io")
+        return self._pool
+
+    def submit(self, fn: Callable, *args, **kwargs) -> Future:
+        """Run any fetch callable on the shared I/O pool; returns a Future."""
+        return self.pool.submit(fn, *args, **kwargs)
+
+    def fetch_remote_batch_async(self, requester: int, owner: int,
+                                 items: Sequence[FetchItem], *,
+                                 materialize: bool = True) -> Future:
+        return self.submit(self.fetch_remote_batch, requester, owner, items,
+                           materialize=materialize)
+
+    def shutdown(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None

@@ -199,6 +199,8 @@ def _mem_dict(compiled) -> Tuple[Dict, Optional[int]]:
 
 def _cell_costs(compiled) -> Dict[str, float]:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # jax<=0.4 returns [dict]
+        cost = cost[0] if cost else {}
     stats = roofline.parse_collectives(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -23,7 +23,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.fanstore.cluster import FanStoreCluster
-from repro.fanstore.metadata import ConsistentHashRing
+from repro.fanstore.placement import ConsistentHashRing
 
 
 @dataclass

@@ -1,0 +1,34 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+``jax.shard_map`` is the stable entry point from jax 0.6 on; older releases
+(this container ships 0.4.37) only have ``jax.experimental.shard_map`` with
+the pre-rename keyword surface (``check_rep`` instead of ``check_vma``,
+``auto`` instead of ``axis_names``). All repo code calls this wrapper with
+the *new* keyword names.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names: Optional[Set] = None):
+    if hasattr(jax, "shard_map"):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # Old jax: partial-manual mode (`auto=` complement of axis_names) hits an
+    # XLA crash (Check failed: sharding.IsManualSubgroup) at 0.4.x, so the
+    # fallback treats every mesh axis as manual and axis_names is effectively
+    # ignored. That is semantically equivalent for functions whose in/out
+    # specs are replicated over the would-be-auto axes (all current in-repo
+    # callers); a function that instead relies on the compiler to partition
+    # those axes (e.g. an internal with_sharding_constraint naming them)
+    # computes redundantly per shard on old jax.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -1,11 +1,15 @@
 """Metadata: stat packing, tables, readdir, placement hashing."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.fanstore.metadata import (ConsistentHashRing, FileLocation,
-                                     MetadataTable, StatRecord,
+try:                                       # property tests need hypothesis;
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # a bare interpreter runs the
+    given = settings = st = None           # deterministic fallbacks below
+
+from repro.fanstore.metadata import (FileLocation, MetadataTable, StatRecord,
                                      modulo_placement, path_hash)
+from repro.fanstore.placement import ConsistentHashRing
 
 
 def _loc(n=0):
@@ -57,19 +61,39 @@ def test_ring_minimal_movement():
     assert len(moved) < 2000 * 3 / 16
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.text(min_size=1, max_size=64), st.integers(1, 512))
-def test_modulo_in_range(path, n):
-    assert 0 <= modulo_placement(path, n) < n
-
-
-@settings(max_examples=30, deadline=None)
-@given(st.sets(st.integers(0, 1000), min_size=2, max_size=40),
-       st.text(min_size=1, max_size=32), st.integers(1, 5))
-def test_ring_owner_properties(nodes, key, k):
+def _check_ring_owner_properties(nodes, key, k):
     ring = ConsistentHashRing(nodes)
     k = min(k, len(nodes))
     owners = ring.owners(key, k)
     assert len(owners) == k == len(set(owners))
     assert all(o in nodes for o in owners)
     assert ring.owner(key) == owners[0]
+
+
+if st is not None:
+    @settings(max_examples=50, deadline=None)
+    @given(st.text(min_size=1, max_size=64), st.integers(1, 512))
+    def test_modulo_in_range(path, n):
+        assert 0 <= modulo_placement(path, n) < n
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.sets(st.integers(0, 1000), min_size=2, max_size=40),
+           st.text(min_size=1, max_size=32), st.integers(1, 5))
+    def test_ring_owner_properties(nodes, key, k):
+        _check_ring_owner_properties(nodes, key, k)
+else:
+    def test_modulo_in_range():
+        pytest.importorskip("hypothesis")
+
+    def test_ring_owner_properties():
+        pytest.importorskip("hypothesis")
+
+
+def test_ring_owner_properties_deterministic():
+    """Fallback corpus: small/large node sets, unicode keys, k extremes."""
+    for path in ("a", "train/cls_0/img0.bin", "ünïcode/päth", "x" * 64):
+        for n in (1, 2, 7, 512):
+            assert 0 <= modulo_placement(path, n) < n
+    _check_ring_owner_properties({0, 1}, "a/b", 2)
+    _check_ring_owner_properties(set(range(0, 1000, 37)), "key", 5)
+    _check_ring_owner_properties({3, 900}, "ünïcode", 1)

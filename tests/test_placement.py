@@ -1,0 +1,96 @@
+"""Placement layer: owner policies, ring rebalance minimality, selectors."""
+import pytest
+
+from repro.fanstore.metadata import modulo_placement
+from repro.fanstore.placement import (ConsistentHashRing, LeastLoadedSelector,
+                                      ModuloPlacement, PowerOfTwoSelector,
+                                      RingPlacement)
+
+
+def test_modulo_placement_matches_paper_hash():
+    p = ModuloPlacement(16)
+    for path in ("out/x.ckpt", "train/cls_0/img0.bin", "a"):
+        assert p.owner(path) == modulo_placement(path, 16)
+    with pytest.raises(ValueError):
+        ModuloPlacement(0)
+
+
+def test_modulo_replica_set_distinct_and_bounded():
+    p = ModuloPlacement(8)
+    rs = p.replica_set("out/x.ckpt", 3)
+    assert len(rs) == 3 == len(set(rs))
+    assert rs[0] == p.owner("out/x.ckpt")
+    with pytest.raises(ValueError):
+        p.replica_set("out/x.ckpt", 9)
+
+
+def test_ring_placement_rebalance_minimal_on_remove():
+    """Consistent hashing's point: removing one node moves only its keys."""
+    p = RingPlacement(range(16))
+    keys = [f"part/{i}" for i in range(2000)]
+    before = {k: p.owner(k) for k in keys}
+    p.remove_node(7)
+    after = {k: p.owner(k) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    assert all(before[k] == 7 for k in moved)       # only node 7's keys move
+    assert all(after[k] != 7 for k in keys)
+    # approximately 1/16 of keys lived on node 7
+    assert len(moved) < 2000 * 3 / 16
+
+
+def test_ring_placement_rebalance_minimal_on_add():
+    """Adding a node steals ~1/(n+1) of the keyspace and nothing else moves
+    between surviving nodes (moved keys all land on the new node)."""
+    p = RingPlacement(range(16))
+    keys = [f"part/{i}" for i in range(2000)]
+    before = {k: p.owner(k) for k in keys}
+    p.add_node(16)
+    after = {k: p.owner(k) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    assert moved                                    # the new node gets keys
+    assert all(after[k] == 16 for k in moved)       # ...and only it
+    # approximately 1/17 of the keyspace moves
+    assert len(moved) < 2000 * 3 / 17
+
+
+def test_ring_placement_replica_set():
+    p = RingPlacement(range(8))
+    owners = p.replica_set("a/b", 3)
+    assert len(owners) == 3 == len(set(owners))
+    assert owners[0] == p.owner("a/b")
+
+
+def test_least_loaded_selector():
+    s = LeastLoadedSelector()
+    load = {0: 5.0, 1: 1.0, 2: 3.0}
+    assert s.choose([0, 1, 2], load) == 1
+    # ties break deterministically by node id
+    assert s.choose([2, 0], {0: 1.0, 2: 1.0}) == 0
+    # unknown nodes count as idle
+    assert s.choose([0, 9], load) == 9
+
+
+def test_power_of_two_selector_degenerates_to_least_loaded():
+    s = PowerOfTwoSelector(seed=3)
+    assert s.choose([0, 1], {0: 5.0, 1: 1.0}) == 1
+    assert s.choose([4], {4: 9.0}) == 4
+
+
+def test_power_of_two_selector_biases_toward_light_nodes():
+    s = PowerOfTwoSelector(seed=1)
+    owners = list(range(8))
+    load = {o: float(o) for o in owners}        # node 0 lightest, 7 heaviest
+    picks = [s.choose(owners, load) for _ in range(400)]
+    assert set(picks) <= set(owners)
+    # the heaviest node is only picked when sampled twice (~1/64 of draws)
+    assert picks.count(7) < picks.count(0)
+    assert picks.count(7) < 30
+
+
+def test_ring_used_by_metadata_compat_import():
+    """ConsistentHashRing moved to placement; the old import path and the
+    package export must keep resolving to the same class."""
+    from repro.fanstore import metadata
+    assert metadata.ConsistentHashRing is ConsistentHashRing
+    import repro.fanstore as fanstore
+    assert fanstore.ConsistentHashRing is ConsistentHashRing
