@@ -8,13 +8,22 @@ every file once (the paper's benchmark), files striped once across nodes
 measure. Reported: aggregated bandwidth, throughput, scaling efficiency vs
 the paper's chosen baselines (4 nodes GPU / 64 nodes CPU).
 
-Beyond the paper, two engine axes::
+Beyond the paper, three engine axes::
 
     --batched      route reads through ``read_many`` so all requests for one
                    owner ride a single modeled round trip; reports makespan
                    for both paths and the speedup
-    --cache-mb M   per-node client LRU read cache of M MiB (2 epochs so the
+    --prefetch     clairvoyant scheduling: the whole epoch trace is turned
+                   into an EpochSchedule and driven through window-coalesced
+                   async prefetch (one round trip per (requester, owner,
+                   window)); demand reads hit the client cache and the
+                   makespan models I/O overlapped with compute
+    --cache-mb M   per-node client read cache of M MiB (2 epochs so the
                    second pass can hit), reporting cache hit rate
+
+``bench_json`` packages the seed / batched / prefetched arms (plus an
+LRU-vs-Belady hit-rate comparison) as the machine-readable dict that
+``benchmarks/run.py --io-json`` writes to BENCH_io.json.
 """
 from __future__ import annotations
 
@@ -25,6 +34,7 @@ import numpy as np
 
 from repro.data.synthetic import fixed_size_files
 from repro.fanstore.cluster import FanStoreCluster, InterconnectModel
+from repro.fanstore.prefetch import EpochSchedule, PrefetchScheduler
 from repro.fanstore.prepare import prepare_dataset
 
 FILE_SIZES = [128 * 1024, 512 * 1024, 2 * 1024 * 1024, 8 * 1024 * 1024]
@@ -39,7 +49,8 @@ BATCH = 32      # samples per coalesced read_many call (one training step)
 
 def _build_cluster(nodes: int, file_size: int, count: int,
                    net: InterconnectModel, *, replication: int,
-                   cache_mb: int) -> FanStoreCluster:
+                   cache_mb: int, cache_policy: str = "lru"
+                   ) -> FanStoreCluster:
     # one shared payload per size: content is timing-irrelevant here and
     # generating count x file_size of RNG bytes dominated the wall time
     payload = bytes(np.random.default_rng(1).integers(
@@ -47,7 +58,8 @@ def _build_cluster(nodes: int, file_size: int, count: int,
     files = {f"bench/f_{i:06d}.bin": payload for i in range(count)}
     blobs, _ = prepare_dataset(files, max(nodes, 8), compress=False)
     cluster = FanStoreCluster(nodes, interconnect=net,
-                              cache_bytes=cache_mb * 1024 * 1024)
+                              cache_bytes=cache_mb * 1024 * 1024,
+                              cache_policy=cache_policy)
     cluster.load_partitions(blobs, replication=replication)
     return cluster
 
@@ -55,11 +67,18 @@ def _build_cluster(nodes: int, file_size: int, count: int,
 def run_one(nodes: int, file_size: int, count: int,
             net: InterconnectModel, *, replication: int = 1,
             reads_per_node: int = 128, batched: bool = False,
-            cache_mb: int = 0, epochs: int = 1,
+            prefetch: bool = False, window: int = 4,
+            cache_mb: int = 0, cache_policy: str = "lru", epochs: int = 1,
             cluster: Optional[FanStoreCluster] = None) -> Dict:
+    if prefetch and cache_mb == 0:
+        # the scheduler stages through the client cache; budget one epoch of
+        # per-node reads (size-only placeholders under materialize=False)
+        m = min(reads_per_node, count)
+        cache_mb = (m * file_size) // (1024 * 1024) + 1
     if cluster is None:
         cluster = _build_cluster(nodes, file_size, count, net,
-                                 replication=replication, cache_mb=cache_mb)
+                                 replication=replication, cache_mb=cache_mb,
+                                 cache_policy=cache_policy)
     paths = sorted(f"bench/f_{i:06d}.bin" for i in range(count))
     cluster.reset_clocks()
     for c in cluster.caches.values():
@@ -71,17 +90,24 @@ def run_one(nodes: int, file_size: int, count: int,
     m = min(reads_per_node, len(paths))
     reads = 0
     for _ in range(epochs):
+        traces: Dict[int, List[List[str]]] = {}
         for nid in range(nodes):
             chosen = [paths[int(i)]
                       for i in rng.choice(len(paths), size=m, replace=False)]
             reads += len(chosen)
-            if batched:
-                for s in range(0, len(chosen), BATCH):
-                    cluster.read_many(nid, chosen[s:s + BATCH],
-                                      materialize=False)
-            else:
-                for p in chosen:
-                    cluster.read(nid, p, materialize=False)
+            traces[nid] = [chosen[s:s + BATCH]
+                           for s in range(0, len(chosen), BATCH)]
+        if prefetch:
+            _drive_prefetched_epoch(cluster, traces, window=window)
+        elif batched:
+            for nid, steps in traces.items():
+                for step_paths in steps:
+                    cluster.read_many(nid, step_paths, materialize=False)
+        else:
+            for nid, steps in traces.items():
+                for step_paths in steps:
+                    for p in step_paths:
+                        cluster.read(nid, p, materialize=False)
     bw = cluster.aggregate_bandwidth()
     t = cluster.makespan_s()
     return {"nodes": nodes, "file_size": file_size,
@@ -91,10 +117,42 @@ def run_one(nodes: int, file_size: int, count: int,
             "cache_hit_rate": cluster.cache_hit_rate(),
             "cache_mb": cache_mb,
             "makespan_s": t,
-            "batched": batched}
+            "bytes_moved": sum(c.bytes_in + c.prefetch_bytes + c.local_bytes
+                               for c in cluster.clocks.values()),
+            "prefetch_windows": cluster.accounting.prefetch_windows(),
+            "batched": batched,
+            "prefetch": prefetch}
+
+
+def _drive_prefetched_epoch(cluster: FanStoreCluster,
+                            traces: Dict[int, List[List[str]]], *,
+                            window: int) -> None:
+    """One epoch with clairvoyant scheduling: windows of `window` steps ride
+    ahead of the demand reads, which then hit the client cache.
+
+    The modeled clocks are order-independent (prefetch accrues on its own
+    lane), so gating each step on its own window (``wait_ready``) gives
+    deterministic cache hits without changing the accounted makespan.
+    """
+    schedule = EpochSchedule.from_trace(traces, cluster)
+    schedulers = {
+        nid: PrefetchScheduler(cluster, schedule, nid, window_steps=window,
+                               materialize=False)
+        for nid in traces}
+    num_steps = max((len(s) for s in traces.values()), default=0)
+    for step in range(num_steps):
+        for nid, pf in schedulers.items():
+            pf.ensure(step + window)
+            pf.wait_ready(step)
+            steps = traces[nid]
+            if step < len(steps):
+                cluster.read_many(nid, steps[step], materialize=False)
+    for pf in schedulers.values():
+        pf.close()
 
 
 def run(arm: str = "cpu", *, count: int = None, batched: bool = False,
+        prefetch: bool = False, window: int = 4,
         cache_mb: int = 0, epochs: int = 1) -> List[Dict]:
     if arm == "gpu":
         scales, net = [1, 4, 8, 16], GPU_NET
@@ -110,21 +168,39 @@ def run(arm: str = "cpu", *, count: int = None, batched: bool = False,
             # F >= 2N keeps the benchmark in the scaling (not hot-owner)
             # regime while bounding the python-loop cost at large N
             c = min(count, max(256, 2 * n))
-            cluster = _build_cluster(n, size, c, net, replication=1,
-                                     cache_mb=cache_mb)
+            # the prefetch arm needs its own cluster (Belady cache enabled);
+            # every other arm shares one baseline build so the dataset is
+            # packed once per (size, n), as before — clocks + caches are
+            # reset between runs
+            baseline = None
+            if not prefetch:
+                baseline = _build_cluster(n, size, c, net, replication=1,
+                                          cache_mb=cache_mb)
             row = run_one(n, size, c, net, batched=batched,
-                          cache_mb=cache_mb, epochs=epochs, cluster=cluster)
-            if batched:
-                # same workload through per-file round trips on the same
-                # cluster (clocks + caches reset): the coalescing win is the
-                # makespan ratio, without paying the dataset build twice
+                          prefetch=prefetch, window=window,
+                          cache_mb=cache_mb,
+                          cache_policy="belady" if prefetch else "lru",
+                          epochs=epochs,
+                          cluster=None if prefetch else baseline)
+            if batched or prefetch:
+                if baseline is None:
+                    baseline = _build_cluster(n, size, c, net, replication=1,
+                                              cache_mb=cache_mb)
                 base = run_one(n, size, c, net, batched=False,
                                cache_mb=cache_mb, epochs=epochs,
-                               cluster=cluster)
+                               cluster=baseline)
                 row["makespan_perfile_s"] = base["makespan_s"]
                 row["batched_speedup"] = (
                     base["makespan_s"] / row["makespan_s"]
                     if row["makespan_s"] > 0 else 1.0)
+                if prefetch:
+                    batch_arm = run_one(n, size, c, net, batched=True,
+                                        cache_mb=cache_mb, epochs=epochs,
+                                        cluster=baseline)
+                    row["makespan_batched_s"] = batch_arm["makespan_s"]
+                    row["prefetch_speedup"] = (
+                        batch_arm["makespan_s"] / row["makespan_s"]
+                        if row["makespan_s"] > 0 else 1.0)
             rows.append(row)
     # efficiency vs the paper's baselines
     base_n = 4 if arm == "gpu" else 64
@@ -150,6 +226,11 @@ def format_rows(arm: str, fig: str, rows: List[Dict]) -> List[str]:
             line += (f",makespan_batched={r['makespan_s']:.6f}s,"
                      f"makespan_perfile={r['makespan_perfile_s']:.6f}s,"
                      f"batched_speedup={r['batched_speedup']:.3f}")
+        if r.get("prefetch"):
+            line += (f",makespan_prefetch={r['makespan_s']:.6f}s,"
+                     f"makespan_batched={r['makespan_batched_s']:.6f}s,"
+                     f"prefetch_speedup={r['prefetch_speedup']:.3f},"
+                     f"windows={r['prefetch_windows']}")
         if r.get("cache_mb"):       # cache enabled: report even a 0.0 rate
             line += f",cache_hit={r['cache_hit_rate']:.3f}"
         if eff:
@@ -158,16 +239,85 @@ def format_rows(arm: str, fig: str, rows: List[Dict]) -> List[str]:
     return out
 
 
-def main(*, batched: bool = False, cache_mb: int = 0,
-         epochs: Optional[int] = None, arms: Optional[List[str]] = None
-         ) -> List[str]:
+def cache_policy_comparison(*, num_files: int = 64, file_size: int = 4096,
+                            cache_files: int = 16, accesses: int = 512,
+                            seed: int = 0) -> Dict:
+    """LRU vs Belady vs 2Q client-cache hit rate at one byte budget on a
+    uniform-random (with reuse) epoch trace — the access pattern the paper
+    says defeats LRU. Belady gets the trace as its future oracle."""
+    rng = np.random.default_rng(seed)
+    paths = [f"bench/f_{i:06d}.bin" for i in range(num_files)]
+    trace = [paths[int(i)]
+             for i in rng.integers(0, num_files, size=accesses)]
+    budget = cache_files * file_size
+    out: Dict = {"budget_bytes": budget, "accesses": accesses}
+    for policy in ("lru", "belady", "2q"):
+        payload = bytes(file_size)
+        files = {p: payload for p in paths}
+        blobs, _ = prepare_dataset(files, 8, compress=False)
+        cluster = FanStoreCluster(2, interconnect=CPU_NET,
+                                  cache_bytes=budget, cache_policy=policy)
+        cluster.load_partitions(blobs, replication=1)
+        if policy == "belady":
+            EpochSchedule.from_trace({1: [[p] for p in trace]}
+                                     ).install_futures(cluster)
+        for p in trace:
+            cluster.read_many(1, [p], materialize=False)
+        out[f"{policy}_hit_rate"] = cluster.caches[1].stats.hit_rate
+    return out
+
+
+def bench_json(*, nodes_list=(8, 64), smoke: bool = False) -> Dict:
+    """Machine-readable perf snapshot: seed (per-file) / batched /
+    prefetched arms at each node count, plus the cache-policy comparison.
+    Written to BENCH_io.json by ``benchmarks/run.py --io-json`` so the perf
+    trajectory is tracked from PR 2 on."""
+    # reads span multiple BATCH-sized steps so a lookahead window has
+    # batches to coalesce across (the whole point of the prefetch arm)
+    file_size = 64 * 1024 if smoke else 512 * 1024
+    reads_per_node = 96 if smoke else 128
+    window = 4
+    results: Dict = {"config": {"file_size": file_size,
+                                "reads_per_node": reads_per_node,
+                                "batch": BATCH, "window": window,
+                                "smoke": smoke},
+                     "arms": []}
+    for nodes in nodes_list:
+        count = max(128, 2 * nodes)
+        kw = dict(file_size=file_size, count=count, net=CPU_NET,
+                  reads_per_node=reads_per_node)
+        seed_arm = run_one(nodes, batched=False, **kw)
+        batched_arm = run_one(nodes, batched=True, **kw)
+        prefetched_arm = run_one(nodes, prefetch=True, window=window,
+                                 cache_policy="belady", **kw)
+        entry = {"nodes": nodes, "count": count}
+        for name, r in (("seed", seed_arm), ("batched", batched_arm),
+                        ("prefetched", prefetched_arm)):
+            entry[name] = {"makespan_s": r["makespan_s"],
+                           "local_hit_rate": r["hit_rate"],
+                           "cache_hit_rate": r["cache_hit_rate"],
+                           "bytes_moved": r["bytes_moved"],
+                           "prefetch_windows": r["prefetch_windows"]}
+        entry["batched_speedup"] = (
+            seed_arm["makespan_s"] / batched_arm["makespan_s"])
+        entry["prefetch_speedup_vs_batched"] = (
+            batched_arm["makespan_s"] / prefetched_arm["makespan_s"])
+        results["arms"].append(entry)
+    results["cache_policies"] = cache_policy_comparison()
+    return results
+
+
+def main(*, batched: bool = False, prefetch: bool = False, window: int = 4,
+         cache_mb: int = 0, epochs: Optional[int] = None,
+         arms: Optional[List[str]] = None) -> List[str]:
     if epochs is None:
         epochs = 2 if cache_mb else 1
     out = []
     for arm, fig in (("gpu", "fig5"), ("cpu", "fig6")):
         if arms and arm not in arms:
             continue
-        rows = run(arm, batched=batched, cache_mb=cache_mb, epochs=epochs)
+        rows = run(arm, batched=batched, prefetch=prefetch, window=window,
+                   cache_mb=cache_mb, epochs=epochs)
         out.extend(format_rows(arm, fig, rows))
     return out
 
@@ -177,14 +327,21 @@ if __name__ == "__main__":
     ap.add_argument("--batched", action="store_true",
                     help="read through read_many (coalesced round trips) and "
                          "report the makespan win over the per-file path")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="clairvoyant window prefetch (EpochSchedule + "
+                         "PrefetchScheduler + Belady cache) and report the "
+                         "makespan win over the batched path")
+    ap.add_argument("--window", type=int, default=4,
+                    help="prefetch lookahead window in training steps")
     ap.add_argument("--cache-mb", type=int, default=0,
-                    help="per-node client LRU read cache budget in MiB")
+                    help="per-node client read cache budget in MiB")
     ap.add_argument("--epochs", type=int, default=None,
                     help="read passes per node (default 1; 2 when caching)")
     ap.add_argument("--arm", choices=["gpu", "cpu"], default=None,
                     help="run a single arm instead of both")
     args = ap.parse_args()
-    for line in main(batched=args.batched, cache_mb=args.cache_mb,
+    for line in main(batched=args.batched, prefetch=args.prefetch,
+                     window=args.window, cache_mb=args.cache_mb,
                      epochs=args.epochs,
                      arms=[args.arm] if args.arm else None):
         print(line)

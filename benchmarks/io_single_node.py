@@ -10,9 +10,12 @@ server + shared bandwidth). FanStore reads go through the real Python
 store (partition index + refcount cache + decompress-if-packed).
 
 Engine axes (beyond the paper): ``--batched`` drives the reads through the
-``read_many`` batched API in training-step-sized chunks, and ``--cache-mb``
-enables the per-node client LRU read cache with a second epoch so repeated
-reads are served from RAM instead of the partition store.
+``read_many`` batched API in training-step-sized chunks, ``--cache-mb``
+enables the per-node client read cache with a second epoch so repeated
+reads are served from RAM instead of the partition store, and
+``--prefetch`` stages upcoming steps into the cache through the
+clairvoyant window scheduler (EpochSchedule + PrefetchScheduler) so the
+demand loop reads RAM while the staging runs ahead.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ import numpy as np
 
 from repro.data.synthetic import fixed_size_files
 from repro.fanstore.cluster import FanStoreCluster, InterconnectModel
+from repro.fanstore.prefetch import EpochSchedule, PrefetchScheduler
 from repro.fanstore.prepare import prepare_dataset
 
 FILE_SIZES = [128 * 1024, 512 * 1024, 2 * 1024 * 1024, 8 * 1024 * 1024]
@@ -41,18 +45,33 @@ BATCH = 32      # samples per read_many call in --batched mode
 
 
 def bench_fanstore(files: Dict[str, bytes], *, batched: bool = False,
-                   cache_mb: int = 0, epochs: int = 1
+                   cache_mb: int = 0, epochs: int = 1,
+                   prefetch: bool = False, window: int = 4
                    ) -> Tuple[float, float]:
     blobs, _ = prepare_dataset(files, 4, compress=False)
-    cluster = FanStoreCluster(1, cache_bytes=cache_mb * 1024 * 1024)
+    if prefetch and cache_mb == 0:
+        cache_mb = sum(len(v) for v in files.values()) // (1024 * 1024) + 1
+    cluster = FanStoreCluster(1, cache_bytes=cache_mb * 1024 * 1024,
+                              cache_policy="belady" if prefetch else "lru")
     cluster.load_partitions(blobs, replication=1)
     paths = sorted(files)
+    steps = [paths[s:s + BATCH] for s in range(0, len(paths), BATCH)]
     t0 = time.perf_counter()
     total = 0
     for _ in range(epochs):
-        if batched:
-            for s in range(0, len(paths), BATCH):
-                for data in cluster.read_many(0, paths[s:s + BATCH]):
+        if prefetch:
+            pf = PrefetchScheduler(
+                cluster, EpochSchedule.from_trace({0: steps}, cluster), 0,
+                window_steps=window)
+            for step, chunk in enumerate(steps):
+                pf.ensure(step + window)
+                pf.wait_ready(step)     # demand reads must not race staging
+                for data in cluster.read_many(0, chunk):
+                    total += len(data)
+            pf.close()
+        elif batched:
+            for chunk in steps:
+                for data in cluster.read_many(0, chunk):
                     total += len(data)
         else:
             for p in paths:
@@ -94,13 +113,14 @@ def bench_sfs_model(files: Dict[str, bytes]) -> Tuple[float, float]:
 
 
 def run(scale: float = 1.0, *, batched: bool = False, cache_mb: int = 0,
-        epochs: int = 1) -> List[Dict]:
+        epochs: int = 1, prefetch: bool = False) -> List[Dict]:
     rows = []
     for size, count in zip(FILE_SIZES, BASE_COUNTS):
         count = max(4, int(count * scale))
         files = fixed_size_files(size, count, entropy_bits=8)
         fs_bw, fs_tp = bench_fanstore(files, batched=batched,
-                                      cache_mb=cache_mb, epochs=epochs)
+                                      cache_mb=cache_mb, epochs=epochs,
+                                      prefetch=prefetch)
         ssd_bw, ssd_tp = bench_disk(files)
         fuse_bw, fuse_tp = bench_disk(files, crossing_s=FUSE_CROSSING_S)
         sfs_bw, sfs_tp = bench_sfs_model(files)
@@ -118,11 +138,12 @@ def run(scale: float = 1.0, *, batched: bool = False, cache_mb: int = 0,
 
 
 def main(scale: float = 0.25, *, batched: bool = False, cache_mb: int = 0,
-         epochs: int = None) -> List[str]:
+         epochs: int = None, prefetch: bool = False) -> List[str]:
     if epochs is None:
         epochs = 2 if cache_mb else 1
     out = ["table=fig3_single_node"]
-    for r in run(scale, batched=batched, cache_mb=cache_mb, epochs=epochs):
+    for r in run(scale, batched=batched, cache_mb=cache_mb, epochs=epochs,
+                 prefetch=prefetch):
         out.append(
             f"fig3,size={r['file_size']//1024}KB,"
             f"fanstore={r['fanstore_MBps']:.0f}MB/s,"
@@ -132,6 +153,7 @@ def main(scale: float = 0.25, *, batched: bool = False, cache_mb: int = 0,
             f"vs_fuse={r['fanstore_vs_fuse']:.2f},"
             f"vs_sfs={r['fanstore_vs_sfs']:.2f}"
             + (f",batched=1" if batched else "")
+            + (f",prefetch=1" if prefetch else "")
             + (f",cache_mb={cache_mb}" if cache_mb else ""))
     return out
 
@@ -141,11 +163,15 @@ if __name__ == "__main__":
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--batched", action="store_true",
                     help="read through the batched read_many API")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="stage steps ahead through the clairvoyant window "
+                         "scheduler; demand reads hit the client cache")
     ap.add_argument("--cache-mb", type=int, default=0,
-                    help="client LRU read cache budget in MiB")
+                    help="client read cache budget in MiB")
     ap.add_argument("--epochs", type=int, default=None,
                     help="read passes (default 1; 2 when caching)")
     args = ap.parse_args()
     for line in main(args.scale, batched=args.batched,
-                     cache_mb=args.cache_mb, epochs=args.epochs):
+                     cache_mb=args.cache_mb, epochs=args.epochs,
+                     prefetch=args.prefetch):
         print(line)

@@ -8,20 +8,61 @@
   fetch   device-tier fetch collective bytes (uniform vs stratified)
 
 Prints ``name,metric=value,...`` CSV-ish lines.
+
+``--io-json PATH`` additionally (or, with ``--only io-json``, exclusively)
+writes the machine-readable BENCH_io.json perf snapshot: epoch makespan,
+hit rates, and bytes moved for the seed / batched / prefetched arms at 8
+and 64 nodes plus the LRU-vs-Belady-vs-2Q cache comparison. ``--smoke``
+shrinks it to the fast-lane CI variant (scripts/ci.sh fast).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 import traceback
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:         # `python benchmarks/run.py` from anywhere,
+        sys.path.insert(0, _p)     # with or without PYTHONPATH=src
+
+
+def write_io_json(path: str, *, smoke: bool = False) -> None:
+    from benchmarks.io_scaling import bench_json
+    result = bench_json(smoke=smoke)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+    # perf-trajectory guards (deterministic modeled quantities, not timing)
+    for entry in result["arms"]:
+        assert entry["prefetch_speedup_vs_batched"] > 1.0, (
+            f"prefetch arm regressed at {entry['nodes']} nodes")
+    cp = result["cache_policies"]
+    assert cp["belady_hit_rate"] > cp["lru_hit_rate"], (
+        "Belady no longer beats LRU at equal byte budget")
+    for entry in result["arms"]:
+        print(f"io_json,nodes={entry['nodes']},"
+              f"batched_speedup={entry['batched_speedup']:.3f},"
+              f"prefetch_speedup={entry['prefetch_speedup_vs_batched']:.3f}",
+              flush=True)
+    print(f"io_json,lru_hit={cp['lru_hit_rate']:.3f},"
+          f"belady_hit={cp['belady_hit_rate']:.3f},"
+          f"twoq_hit={cp['2q_hit_rate']:.3f}", flush=True)
+    print(f"io_json,wrote={path}", flush=True)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig3,scaling,apps,compression,fetch")
+                    help="comma list: fig1,fig3,scaling,apps,compression,"
+                         "fetch,io-json")
     ap.add_argument("--skip", default=None)
+    ap.add_argument("--io-json", default=None, metavar="PATH",
+                    help="also write the BENCH_io.json perf snapshot here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny io-json variant for the CI fast lane")
     args = ap.parse_args()
 
     sections = {
@@ -53,6 +94,15 @@ def main() -> None:
         except Exception:
             failures += 1
             print(f"section={name},FAILED", flush=True)
+            traceback.print_exc()
+    # io-json runs when named in --only (works inside a comma list) or when
+    # an output path is given; --only io-json alone defaults the path
+    if (args.io_json or "io-json" in only) and "io-json" not in skip:
+        try:
+            write_io_json(args.io_json or "BENCH_io.json", smoke=args.smoke)
+        except Exception:
+            failures += 1
+            print("section=io-json,FAILED", flush=True)
             traceback.print_exc()
     sys.exit(1 if failures else 0)
 

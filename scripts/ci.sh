@@ -13,6 +13,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 case "$lane" in
   fast)
     python -m pytest -x -q -m "not slow"
+    # perf trajectory smoke: seed/batched/prefetched arms + cache policies
+    # (writes BENCH_io.json; asserts prefetch beats batched, Belady beats LRU)
+    python benchmarks/run.py --only io-json --io-json BENCH_io.json --smoke
     ;;
   full)
     python -m pytest -x -q

@@ -5,6 +5,13 @@ default) that pull sample indices from a sampler, fetch the bytes through a
 FanStore read function, decode, and stage finished batches in a bounded
 queue — so the I/O of batch t+1..t+depth overlaps the compute of batch t.
 The loader is checkpointable: its cursor is the sampler state.
+
+Beyond depth-batches lookahead, the loader can drive a *clairvoyant*
+schedule (``schedule=`` a :class:`repro.fanstore.prefetch.PrefetchScheduler`):
+before fetching step t it tells the scheduler to keep windows issued through
+step t + ``prefetch_window``, so whole-epoch remote I/O rides ahead of
+compute in window-coalesced round trips and the per-step ``fetch_many`` is
+served from the client cache without blocking on the fabric.
 """
 from __future__ import annotations
 
@@ -41,13 +48,26 @@ class PrefetchLoader:
       num_threads: I/O threads *per batch* fetching samples concurrently
         (per-sample path only).
       depth: batches staged ahead of compute.
+      schedule: optional clairvoyant prefetch driver (an object with
+        ``ensure(step)``/``wait_ready(step)``/``close()``, i.e. a
+        ``repro.fanstore.prefetch.PrefetchScheduler``). The producer keeps
+        lookahead windows issued ahead of consumption and gates each step
+        on its own window, so ``fetch_many`` hits the client cache instead
+        of paying per-step round trips.
+      prefetch_window: how many steps ahead of the consuming step the
+        schedule is kept issued (default: the scheduler's own window size).
+
+    Errors raised inside the producer thread are never swallowed: they
+    surface on the next ``__next__`` (in place of further batches) or on
+    ``close()`` if the consumer stopped early.
     """
 
     def __init__(self, sampler, fetch: Callable[[int], bytes] = None,
                  decode: Callable[[List[bytes]], object] = None, *,
                  fetch_many: Optional[
                      Callable[[List[int]], List[bytes]]] = None,
-                 num_threads: int = 4, depth: int = 2):
+                 num_threads: int = 4, depth: int = 2,
+                 schedule=None, prefetch_window: Optional[int] = None):
         if fetch is None and fetch_many is None:
             raise ValueError("need fetch or fetch_many")
         if decode is None:
@@ -58,10 +78,17 @@ class PrefetchLoader:
         self.decode = decode
         self.num_threads = num_threads
         self.depth = depth
+        self.schedule = schedule
+        if prefetch_window is None:
+            prefetch_window = getattr(schedule, "window_steps", None) or depth
+        self.prefetch_window = prefetch_window
+        self._sched_step = getattr(getattr(sampler, "state", None), "step", 0)
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._producer: Optional[threading.Thread] = None
         self._err: Optional[BaseException] = None
+        self._err_raised = False
+        self._done = False
 
     # -- batch assembly ------------------------------------------------------
     def _fetch_batch(self, indices: np.ndarray) -> object:
@@ -106,7 +133,14 @@ class PrefetchLoader:
             for _ in range(num_batches):
                 if self._stop.is_set():
                     return
+                if self.schedule is not None:
+                    # keep lookahead windows in flight, then gate on the
+                    # current step's window so the fetch hits the cache
+                    self.schedule.ensure(
+                        self._sched_step + self.prefetch_window)
+                    self.schedule.wait_ready(self._sched_step)
                 batch = self._fetch_batch(self.sampler.next_batch())
+                self._sched_step += 1
                 while not self._stop.is_set():
                     try:
                         self._q.put(batch, timeout=0.1)
@@ -119,30 +153,76 @@ class PrefetchLoader:
             self._q.put(None)
 
     # -- public API ------------------------------------------------------------
-    def batches(self, num_batches: int) -> Iterator[object]:
-        """Yield ``num_batches`` decoded batches with prefetch overlap."""
+    def start(self, num_batches: int) -> "PrefetchLoader":
+        """Spawn the producer for ``num_batches``; consume via ``__next__``."""
+        if self._producer is not None and self._producer.is_alive():
+            raise RuntimeError("loader is already running")
+        self._drain()               # stale sentinel from an earlier run
         self._stop.clear()
+        self._err = None
+        self._err_raised = False
+        self._done = False
         self._producer = threading.Thread(
             target=self._produce, args=(num_batches,), daemon=True)
         self._producer.start()
-        served = 0
-        while served < num_batches:
-            item = self._q.get()
-            if item is None:
-                break
-            yield item
-            served += 1
-        self._producer.join()
-        if self._err is not None:
+        return self
+
+    def __iter__(self) -> Iterator[object]:
+        return self
+
+    def __next__(self) -> object:
+        if self._producer is None:
+            raise RuntimeError("call start()/batches() before iterating")
+        if self._done:
+            self._raise_pending()
+            raise StopIteration
+        item = self._q.get()
+        if item is None:
+            self._done = True
+            self._producer.join()
+            if self.schedule is not None:
+                self.schedule.close()    # surfaces in-flight window errors
+            self._raise_pending()
+            raise StopIteration
+        return item
+
+    def batches(self, num_batches: int) -> Iterator[object]:
+        """Yield ``num_batches`` decoded batches with prefetch overlap."""
+        self.start(num_batches)
+        return iter(self)
+
+    def _raise_pending(self) -> None:
+        if self._err is not None and not self._err_raised:
+            self._err_raised = True
             raise self._err
 
-    def stop(self) -> None:
+    def close(self) -> None:
+        """Stop the producer, drain staged batches, and re-raise any
+        producer-side error that has not been surfaced yet — an exception
+        raised after the consumer walked away must not be swallowed."""
         self._stop.set()
+        t = self._producer
+        if t is not None:
+            while t.is_alive():
+                self._drain()
+                t.join(timeout=0.05)
+            t.join()
+        self._drain()
+        self._done = True
+        if self.schedule is not None:
+            self.schedule.close()
+        self._raise_pending()
+
+    def _drain(self) -> None:
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+
+    def stop(self) -> None:
+        """Legacy alias for :meth:`close` (same error-surfacing contract)."""
+        self.close()
 
     @property
     def cursor(self):

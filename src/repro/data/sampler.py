@@ -16,6 +16,7 @@ stores the sample) is a transport detail handled by the store.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Iterator, List, Optional
 
@@ -50,6 +51,21 @@ class _Base:
 
     def restore(self, state: SamplerState) -> None:
         self.state = state
+
+    def peek_epoch(self, epoch: Optional[int] = None) -> List[np.ndarray]:
+        """Materialize every batch of ``epoch`` (default: the current one)
+        WITHOUT advancing the sampler — the permutation is fully determined
+        by (seed, epoch), which is what makes clairvoyant prefetch
+        scheduling possible (see repro.fanstore.prefetch.EpochSchedule).
+        """
+        saved = dataclasses.replace(self.state)
+        if epoch is None:
+            epoch = saved.epoch
+        self.state = SamplerState(seed=saved.seed, epoch=epoch, step=0)
+        try:
+            return [self.next_batch() for _ in range(self.steps_per_epoch)]
+        finally:
+            self.restore(saved)
 
 
 class GlobalUniformSampler(_Base):

@@ -7,9 +7,10 @@ Layers:
   placement   path -> owner policies (modulo / consistent-hash ring) and
               replica selection (least-loaded / power-of-two-choices)
   store       per-node store: partitions, refcount cache, write buffers
-  transport   interconnect cost model + payload movement (per-file and
-              batched round trips, thread-pool async futures)
-  cache       optional per-node byte-budget LRU read cache
+  transport   interconnect cost model + payload movement (per-file,
+              batched, and window-level round trips, thread-pool futures)
+  cache       optional per-node byte-budget read cache (LRU / Belady / 2Q)
+  prefetch    clairvoyant epoch-horizon schedule + window prefetch driver
   accounting  per-node clocks + cluster aggregates for the benchmarks
   cluster     the composition of the above behind one deployment object
   fs          POSIX-style file API under a /fanstore mount prefix
@@ -22,10 +23,13 @@ from repro.fanstore.placement import (ConsistentHashRing, ModuloPlacement,
                                       RingPlacement, LeastLoadedSelector,
                                       PowerOfTwoSelector)
 from repro.fanstore.store import NodeStore
-from repro.fanstore.accounting import ClusterAccounting, NodeClock
+from repro.fanstore.accounting import ClusterAccounting, NodeClock, WindowAccount
 from repro.fanstore.transport import FetchItem, InterconnectModel, Transport
-from repro.fanstore.cache import ByteLRUCache, CacheStats
+from repro.fanstore.cache import (BeladyCache, ByteCache, ByteLRUCache,
+                                  CacheStats, TwoQCache, make_cache)
 from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.prefetch import (EpochSchedule, PrefetchScheduler,
+                                     ScheduledRead)
 from repro.fanstore.fs import FanStoreFS
 from repro.fanstore.prepare import prepare_dataset
 
@@ -33,8 +37,10 @@ __all__ = [
     "Partition", "pack_partition", "iter_partition", "FileRecord",
     "StatRecord", "ConsistentHashRing", "MetadataTable",
     "ModuloPlacement", "RingPlacement", "LeastLoadedSelector",
-    "PowerOfTwoSelector", "ClusterAccounting", "NodeClock",
-    "FetchItem", "Transport", "ByteLRUCache", "CacheStats",
+    "PowerOfTwoSelector", "ClusterAccounting", "NodeClock", "WindowAccount",
+    "FetchItem", "Transport", "ByteCache", "ByteLRUCache", "BeladyCache",
+    "TwoQCache", "CacheStats", "make_cache",
+    "EpochSchedule", "PrefetchScheduler", "ScheduledRead",
     "NodeStore", "FanStoreCluster", "InterconnectModel", "FanStoreFS",
     "prepare_dataset",
 ]

@@ -10,7 +10,17 @@ aggregates the benchmarks plot (makespan, aggregate bandwidth, hit rates).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable
+from typing import Dict, Iterable, List
+
+
+@dataclass(frozen=True)
+class WindowAccount:
+    """One prefetch window's ledger entry: a single coalesced round trip
+    covering every file fetched from one owner for one lookahead window."""
+    owner: int
+    files: int
+    bytes: int
+    cost_s: float
 
 
 @dataclass
@@ -21,6 +31,14 @@ class NodeClock:
     bytes_in: int = 0
     bytes_out: int = 0
     local_bytes: int = 0
+    # prefetch lane: scheduled (clairvoyant) I/O issued ahead of consumption
+    # on the transport pool. It runs concurrently with the demand path, so it
+    # gets its own timeline and per-window ledger instead of serializing onto
+    # consume_s — that is what lets makespan model I/O hidden behind compute.
+    prefetch_s: float = 0.0
+    prefetch_bytes: int = 0
+    prefetch_windows: int = 0
+    prefetch_log: List[WindowAccount] = field(default_factory=list)
     # client-side read cache (repro.fanstore.cache), surfaced here so one
     # object answers "what did this node's I/O look like"
     cache_hits: int = 0
@@ -30,10 +48,11 @@ class NodeClock:
 
     @property
     def busy_s(self) -> float:
-        # consumption and service contend for the same NIC/cores; a node's
-        # makespan is at least each and at most the sum — use max (full overlap)
-        # as the optimistic bound the paper's threaded workers approach.
-        return max(self.consume_s, self.serve_s)
+        # consumption, service, and scheduled prefetch contend for the same
+        # NIC/cores but run on separate threads; a node's makespan is at
+        # least each and at most the sum — use max (full overlap) as the
+        # optimistic bound the paper's threaded workers approach.
+        return max(self.consume_s, self.serve_s, self.prefetch_s)
 
     @property
     def cache_hit_rate(self) -> float:
@@ -67,6 +86,12 @@ class ClusterAccounting:
                     for c in self.clocks.values())
         t = self.makespan_s()
         return total / t if t > 0 else 0.0
+
+    def prefetch_windows(self) -> int:
+        return sum(c.prefetch_windows for c in self.clocks.values())
+
+    def prefetch_bytes(self) -> int:
+        return sum(c.prefetch_bytes for c in self.clocks.values())
 
     def local_hit_rate(self) -> float:
         # client-cache hits are served from node-local RAM: they count as

@@ -5,20 +5,36 @@ zero (uniform random access defeats LRU *within one epoch over a dataset
 larger than RAM*). But at cluster scale the dominant win — per Hoard
 (Pinto et al., 2018) — is a client-side cache absorbing repeated remote
 reads: hot validation files, small shared metadata, and any skewed access
-pattern. ``ByteLRUCache`` is that tier: a per-node, byte-budgeted LRU that
-sits in front of the transport. Hits, misses, and evictions are reported
-through the node's ``NodeClock`` (see :mod:`repro.fanstore.accounting`) so
+pattern. This module is that tier: per-node, byte-budgeted caches that sit
+in front of the transport. Hits, misses, and evictions are reported through
+the node's ``NodeClock`` (see :mod:`repro.fanstore.accounting`) so
 benchmarks can plot hit rate against the byte budget.
 
-The cache is OFF by default (``capacity_bytes=0`` disabled) so the paper-
-faithful read path is unchanged unless a deployment opts in.
+Three eviction policies behind one interface (``ByteCache``):
+
+* ``ByteLRUCache``   — classic least-recently-used. Uniform random access
+  defeats it within an epoch; it is the baseline the others beat.
+* ``BeladyCache``    — clairvoyant MIN/OPT: given the epoch's future access
+  trace (from :class:`repro.fanstore.prefetch.EpochSchedule`), evict the
+  resident whose next use is farthest away, and refuse admission when the
+  incoming payload is itself the farthest. This is the optimal offline
+  policy and the natural partner of the clairvoyant prefetch scheduler.
+* ``TwoQCache``      — 2Q (Johnson & Shasha '94): a FIFO probation queue
+  absorbs one-shot scans, a ghost list remembers recently-evicted keys, and
+  only re-referenced files are promoted to the protected LRU main queue.
+  Scan-resistant without needing the future.
+
+``FanStoreCluster(cache_policy=...)`` selects the policy via
+:func:`make_cache`. Caches are OFF by default (``capacity_bytes=0``
+disabled) so the paper-faithful read path is unchanged unless a deployment
+opts in.
 """
 from __future__ import annotations
 
 import threading
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 
 @dataclass(frozen=True)
@@ -36,6 +52,7 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     insertions: int = 0
+    rejections: int = 0       # admission refused (Belady: farthest next use)
     hit_bytes: int = 0
     evicted_bytes: int = 0
 
@@ -45,15 +62,18 @@ class CacheStats:
         return self.hits / n if n else 0.0
 
 
-class ByteLRUCache:
-    """Byte-budgeted LRU over immutable payloads (input files never change,
-    so entries are never invalidated — only evicted for space).
+class ByteCache:
+    """Byte-budgeted cache over immutable payloads (input files never
+    change, so entries are never invalidated — only evicted for space).
 
-    Two event ledgers exist by design: ``self.stats`` is the cache's own
-    lifetime view (survives ``FanStoreCluster.reset_clocks``), while the
-    cluster mirrors the same events onto the reading node's ``NodeClock``
-    (per-benchmark-run timeline). The cluster's ``read_many`` is the single
-    call site responsible for keeping the mirror in step."""
+    Subclasses implement one seam, :meth:`_pick_victim`, and may override
+    the access/admission hooks. Two event ledgers exist by design:
+    ``self.stats`` is the cache's own lifetime view (survives
+    ``FanStoreCluster.reset_clocks``), while the cluster mirrors the same
+    events onto the reading node's ``NodeClock`` (per-benchmark-run
+    timeline). The cluster's ``read_many``/``prefetch_window`` are the call
+    sites responsible for keeping the mirror in step — identically for
+    every policy."""
 
     def __init__(self, capacity_bytes: int):
         if capacity_bytes < 0:
@@ -79,13 +99,36 @@ class ByteLRUCache:
         with self._lock:
             return path in self._entries
 
+    # -- policy hooks (subclass seam) ---------------------------------------
+    def _on_hit(self, path: str) -> None:
+        """Access bookkeeping on a hit (default: MRU promotion)."""
+        self._entries.move_to_end(path)
+
+    def _on_miss(self, path: str) -> None:
+        """Access bookkeeping on a demand miss (default: none)."""
+
+    def _admit(self, path: str, nbytes: int) -> bool:
+        """Whether to insert this payload at all (default: always)."""
+        return True
+
+    def _note_insert(self, path: str, nbytes: int, *,
+                     replaced: bool) -> None:
+        """Pre-insert bookkeeping hook, called under the lock after
+        admission (2Q routes the key into its queues here)."""
+
+    def _pick_victim(self) -> str:
+        """Return the resident path to evict (called under the lock while
+        over budget). Default: LRU order."""
+        return next(iter(self._entries))
+
+    # -- shared machinery ---------------------------------------------------
     def get(self, path: str, *,
             require_data: bool = False) -> Optional[CachedEntry]:
-        """Return the cached entry (marking it most-recent) or None on miss.
+        """Return the cached entry (marking the access) or None on miss.
 
         ``require_data=True`` treats size-only entries as misses (no hit
-        stats, no MRU promotion): a materializing read cannot be served by
-        a modeling placeholder and will refetch-and-replace it.
+        stats, no access promotion): a materializing read cannot be served
+        by a modeling placeholder and will refetch-and-replace it.
         """
         if not self.enabled:
             return None
@@ -93,20 +136,24 @@ class ByteLRUCache:
             entry = self._entries.get(path)
             if entry is None or (require_data and entry.data is None):
                 self.stats.misses += 1
+                self._on_miss(path)
                 return None
-            self._entries.move_to_end(path)
+            self._on_hit(path)
             self.stats.hits += 1
             self.stats.hit_bytes += entry.size
             return entry
 
     def put(self, path: str, data: Optional[bytes], *,
             size: Optional[int] = None) -> int:
-        """Insert a payload, evicting LRU entries past the byte budget.
+        """Insert a payload, evicting policy-chosen entries past the byte
+        budget.
 
         ``data=None`` requires an explicit ``size`` (size-only modeling
         entry). Returns the number of evictions this insert caused.
         Payloads larger than the whole budget are not cached (they would
-        evict everything for a single-use entry).
+        evict everything for a single-use entry), and a policy may refuse
+        admission outright (Belady does when the payload's next use is
+        farther than every resident's).
         """
         nbytes = len(data) if data is not None else size
         if nbytes is None:
@@ -115,21 +162,215 @@ class ByteLRUCache:
             return 0
         evicted = 0
         with self._lock:
+            if not self._admit(path, nbytes):
+                self.stats.rejections += 1
+                return 0
             old = self._entries.pop(path, None)
             if old is not None:
                 self._bytes -= old.size
+            self._note_insert(path, nbytes, replaced=old is not None)
             self._entries[path] = CachedEntry(data=data, size=nbytes)
             self._bytes += nbytes
             self.stats.insertions += 1
             while self._bytes > self.capacity_bytes:
-                _, victim = self._entries.popitem(last=False)
-                self._bytes -= victim.size
+                victim = self._pick_victim()
+                entry = self._entries.pop(victim)
+                self._bytes -= entry.size
+                self._evicted(victim, entry)
                 self.stats.evictions += 1
-                self.stats.evicted_bytes += victim.size
+                self.stats.evicted_bytes += entry.size
                 evicted += 1
         return evicted
+
+    def _evicted(self, path: str, entry: CachedEntry) -> None:
+        """Post-eviction hook (2Q moves the key to its ghost list)."""
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
             self._bytes = 0
+
+
+class ByteLRUCache(ByteCache):
+    """Byte-budgeted LRU — the PR 1 policy, unchanged behavior."""
+
+
+class BeladyCache(ByteCache):
+    """Clairvoyant MIN/OPT eviction from a known future access trace.
+
+    :meth:`set_future` installs the epoch's demand-access sequence (e.g.
+    ``EpochSchedule.future_paths(requester)``). Every demand access (a
+    ``get``, hit or miss) consumes that path's current occurrence; the
+    front of each path's remaining-occurrence queue is its *next* use.
+    Eviction removes the resident with the farthest next use; admission is
+    refused when the incoming payload itself has the farthest next use
+    (inserting it would be strictly worse than not caching it — the step
+    LRU-family policies cannot take). Paths absent from the trace (or past
+    their last use) have next use = infinity and are evicted first.
+
+    ``put`` does NOT consume occurrences, so prefetch inserts ahead of the
+    demand stream leave reuse distances exact.
+    """
+
+    _NEVER = float("inf")
+
+    def __init__(self, capacity_bytes: int,
+                 future: Optional[Sequence[str]] = None):
+        super().__init__(capacity_bytes)
+        self._future: Dict[str, Deque[int]] = {}
+        if future is not None:
+            self.set_future(future)
+
+    def set_future(self, trace: Sequence[str]) -> None:
+        """Install the future demand-access sequence (replaces any prior)."""
+        with self._lock:
+            fut: Dict[str, Deque[int]] = {}
+            for t, path in enumerate(trace):
+                fut.setdefault(path, deque()).append(t)
+            self._future = fut
+
+    def extend_future(self, trace: Sequence[str]) -> None:
+        """Append another epoch's trace after the current one."""
+        with self._lock:
+            base = max((q[-1] for q in self._future.values() if q),
+                       default=-1) + 1
+            for t, path in enumerate(trace):
+                self._future.setdefault(path, deque()).append(base + t)
+
+    def _next_use(self, path: str) -> float:
+        q = self._future.get(path)
+        return q[0] if q else self._NEVER
+
+    def _consume(self, path: str) -> None:
+        q = self._future.get(path)
+        if q:
+            q.popleft()
+
+    def _on_hit(self, path: str) -> None:
+        self._consume(path)
+
+    def _on_miss(self, path: str) -> None:
+        self._consume(path)
+
+    def _admit(self, path: str, nbytes: int) -> bool:
+        # a resident entry being replaced (e.g. a size-only placeholder
+        # upgraded by a materializing read) frees its own bytes first and
+        # must not compete against itself in the farthest-use comparison
+        old = self._entries.get(path)
+        occupied = self._bytes - (old.size if old is not None else 0)
+        if occupied + nbytes <= self.capacity_bytes:
+            return True      # fits in spare capacity: caching is free
+        nu = self._next_use(path)
+        if nu == self._NEVER:
+            return False     # would evict useful bytes for a dead entry
+        # admit only if some resident is reused later than the newcomer —
+        # otherwise evicting for it is strictly worse than bypassing
+        farthest = max((self._next_use(p) for p in self._entries
+                        if p != path), default=self._NEVER)
+        return nu < farthest
+
+    def _pick_victim(self) -> str:
+        return max(self._entries, key=self._next_use)
+
+
+class TwoQCache(ByteCache):
+    """2Q: FIFO probation (A1in) + ghost history (A1out) + protected LRU
+    main queue (Am).
+
+    First-touch payloads enter A1in and, if never re-referenced, FIFO out
+    through the A1out ghost list (keys only, no bytes) without ever
+    touching Am — a one-shot scan cannot pollute the protected set. A hit
+    while the key is in A1out proves reuse beyond the probation horizon, so
+    the refetched payload is admitted straight into Am. ``kin`` is the
+    byte-budget fraction reserved for probation, ``kout`` the ghost-list
+    size as a fraction of the budget (counting remembered *bytes*).
+    """
+
+    def __init__(self, capacity_bytes: int, *, kin: float = 0.25,
+                 kout: float = 0.5):
+        super().__init__(capacity_bytes)
+        if not 0.0 < kin < 1.0:
+            raise ValueError("kin must be in (0, 1)")
+        self.kin_bytes = max(1, int(capacity_bytes * kin))
+        self.kout_bytes = max(1, int(capacity_bytes * kout))
+        self._a1in: "OrderedDict[str, int]" = OrderedDict()   # path -> size
+        self._ghost: "OrderedDict[str, int]" = OrderedDict()  # path -> size
+        self._ghost_bytes = 0
+        self._a1in_bytes = 0
+
+    def _on_hit(self, path: str) -> None:
+        # hits in Am refresh recency; hits in probation do NOT promote —
+        # promotion requires surviving into the ghost list first (classic
+        # full 2Q), which is exactly what filters one-shot scans
+        if path not in self._a1in:
+            self._entries.move_to_end(path)
+
+    def _remember_ghost(self, path: str, size: int) -> None:
+        old = self._ghost.pop(path, None)
+        if old is not None:
+            self._ghost_bytes -= old
+        self._ghost[path] = size
+        self._ghost_bytes += size
+        while self._ghost_bytes > self.kout_bytes and len(self._ghost) > 1:
+            _, s = self._ghost.popitem(last=False)
+            self._ghost_bytes -= s
+
+    def _note_insert(self, path: str, nbytes: int, *,
+                     replaced: bool) -> None:
+        if replaced:
+            if path in self._a1in:
+                # refreshed while on probation (e.g. size-only upgrade):
+                # stays on probation at its old queue position
+                self._a1in_bytes += nbytes - self._a1in[path]
+                self._a1in[path] = nbytes
+        elif path in self._ghost:
+            # reuse beyond the probation horizon: straight to the
+            # protected main queue
+            self._ghost_bytes -= self._ghost.pop(path)
+        else:
+            self._a1in[path] = nbytes           # first touch -> probation
+            self._a1in_bytes += nbytes
+
+    def _pick_victim(self) -> str:
+        # drain probation first while it is over its share (or the main
+        # queue is empty); otherwise evict the LRU of the protected queue
+        if self._a1in and (self._a1in_bytes > self.kin_bytes
+                           or len(self._a1in) == len(self._entries)):
+            return next(iter(self._a1in))
+        for path in self._entries:              # LRU order, skip probation
+            if path not in self._a1in:
+                return path
+        return next(iter(self._entries))
+
+    def _evicted(self, path: str, entry: CachedEntry) -> None:
+        if path in self._a1in:
+            self._a1in_bytes -= self._a1in.pop(path)
+            self._remember_ghost(path, entry.size)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._a1in.clear()
+            self._ghost.clear()
+            self._bytes = self._a1in_bytes = self._ghost_bytes = 0
+
+
+CACHE_POLICIES: Dict[str, Callable[[int], ByteCache]] = {
+    "lru": ByteLRUCache,
+    "belady": BeladyCache,
+    "2q": TwoQCache,
+}
+
+
+def make_cache(policy: Union[str, Callable[[int], ByteCache]],
+               capacity_bytes: int) -> ByteCache:
+    """Build a cache for ``policy`` — a registry name ("lru" / "belady" /
+    "2q") or any callable ``capacity_bytes -> ByteCache``."""
+    if callable(policy):
+        return policy(capacity_bytes)
+    try:
+        return CACHE_POLICIES[policy](capacity_bytes)
+    except KeyError:
+        raise ValueError(
+            f"unknown cache policy {policy!r}; "
+            f"known: {sorted(CACHE_POLICIES)}") from None

@@ -32,7 +32,7 @@ from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.fanstore.accounting import ClusterAccounting, NodeClock
-from repro.fanstore.cache import ByteLRUCache
+from repro.fanstore.cache import ByteCache, make_cache
 from repro.fanstore.layout import iter_partition, pack_partition
 from repro.fanstore.metadata import (FileLocation, MetadataTable, StatRecord,
                                      modulo_placement, path_hash)
@@ -52,6 +52,7 @@ class FanStoreCluster:
                  placement: Optional[Placement] = None,
                  selector: Optional[ReplicaSelector] = None,
                  cache_bytes: int = 0,
+                 cache_policy: str = "lru",
                  io_threads: int = 8) -> None:
         if num_nodes < 1:
             raise ValueError("need at least one node")
@@ -69,8 +70,9 @@ class FanStoreCluster:
         self.transport = Transport(self.net, self.nodes,
                                    self.accounting.clocks,
                                    num_threads=io_threads)
-        self.caches: Dict[int, ByteLRUCache] = {
-            i: ByteLRUCache(cache_bytes) for i in range(num_nodes)}
+        self.cache_policy = cache_policy
+        self.caches: Dict[int, ByteCache] = {
+            i: make_cache(cache_policy, cache_bytes) for i in range(num_nodes)}
         self.failed: set = set()
         self._lock = threading.Lock()
         self._next_partition = 0
@@ -89,12 +91,20 @@ class FanStoreCluster:
 
     # ---- loading -----------------------------------------------------------
     def load_partitions(self, partitions: Sequence[bytes], *,
-                        replication: int = 1) -> None:
-        """Round-robin partitions over nodes with replication factor R.
+                        replication: int = 1,
+                        by_placement: bool = False) -> None:
+        """Distribute partitions over nodes with replication factor R.
 
-        Replica r of partition p goes to node (p + r*stride) so replicas never
-        co-locate; the input metadata (path -> owner set) is then replicated
-        to every node (here: stored once in the shared table — all nodes see
+        Default placement is round-robin: replica r of partition p goes to
+        node (p + r*stride) so replicas never co-locate. With
+        ``by_placement=True`` the cluster's ``Placement`` policy assigns
+        owners instead (``replica_set(f"partition:{pid}", R)``): under
+        ``RingPlacement`` this makes input placement elastic — adding a
+        node remaps only ~1/N partitions, with no metadata reshuffle for
+        the rest (the ROADMAP's elastic-membership seam).
+
+        Either way the input metadata (path -> owner set) is replicated to
+        every node (here: stored once in the shared table — all nodes see
         the identical copy by construction).
         """
         n = self.num_nodes
@@ -104,8 +114,15 @@ class FanStoreCluster:
         for blob in partitions:
             pid = self._next_partition
             self._next_partition += 1
-            owners = [(pid + r * stride) % n for r in range(replication)]
-            owners = sorted(set(owners))
+            if by_placement:
+                # replica_set order matters: its head is the placement's
+                # primary (under RingPlacement, the ring successor — the
+                # node that keeps the partition when membership changes)
+                owners = list(dict.fromkeys(self.placement.replica_set(
+                    f"partition:{pid:08d}", replication)))
+            else:
+                owners = sorted(set(
+                    (pid + r * stride) % n for r in range(replication)))
             for o in owners:
                 self.nodes[o].load_partition(pid, blob)
             primary = owners[0]
@@ -179,11 +196,24 @@ class FanStoreCluster:
         self.transport.account_output_read(requester, len(data))
         return data
 
-    def _live_owners(self, loc: FileLocation) -> List[int]:
+    def _choose_owner(self, loc: FileLocation, item: FetchItem,
+                      pending_serve: Dict[int, float]) -> Optional[int]:
+        """Pick the live replica that serves this fetch, propagating the
+        in-batch load (``pending_serve``) so one batch spreads across
+        replicas. Returns None when every owner is failed — demand paths
+        raise, the prefetch path skips. Shared by ``read_many`` and
+        ``prefetch_window`` so selection policy cannot drift between them.
+        """
         owners = [o for o in loc.all_owners if o not in self.failed]
         if not owners:
-            raise IOError("all replicas failed")
-        return owners
+            return None
+        load = {o: self.clocks[o].serve_s + pending_serve.get(o, 0.0)
+                for o in owners}
+        owner = self.selector.choose(owners, load)
+        pending_serve[owner] = pending_serve.get(owner, 0.0) + (
+            self.net.local_cost(item.stored)
+            + item.stored / self.net.bandwidth_Bps)
+        return owner
 
     def read(self, requester: int, path: str, *, materialize: bool = True
              ) -> bytes:
@@ -238,13 +268,9 @@ class FanStoreCluster:
                                    size=item.size)
                     self.transport.account_cache_eviction(requester, ev)
                 continue
-            owners = self._live_owners(loc)
-            load = {o: self.clocks[o].serve_s + pending_serve.get(o, 0.0)
-                    for o in owners}
-            owner = self.selector.choose(owners, load)
-            pending_serve[owner] = pending_serve.get(owner, 0.0) + (
-                self.net.local_cost(item.stored)
-                + item.stored / self.net.bandwidth_Bps)
+            owner = self._choose_owner(loc, item, pending_serve)
+            if owner is None:
+                raise IOError("all replicas failed")
             groups.setdefault(owner, []).append((i, item))
         for owner, entries in groups.items():
             items = [it for _, it in entries]
@@ -269,6 +295,77 @@ class FanStoreCluster:
         """Batched read on the transport's I/O pool; returns a Future."""
         return self.transport.submit(self.read_many, requester, list(paths),
                                      materialize=materialize)
+
+    # ---- scheduled prefetch (repro.fanstore.prefetch drives this) ----------
+    def prefetch_window(self, requester: int, paths: Sequence[str], *,
+                        materialize: bool = True) -> int:
+        """Stage one lookahead window into the requester's client cache.
+
+        The window may span many training batches: every remote file is
+        grouped by its serving owner and fetched with ONE
+        ``Transport.fetch_window`` round trip per (requester, owner,
+        window); requester-local files are staged from the SSD tier.
+        All cost lands on the ``NodeClock.prefetch_s`` lane (concurrent
+        with the demand timeline), payloads land in the client cache so
+        the demand-path ``read_many`` hits at RAM speed, and evictions are
+        mirrored onto the clock exactly like demand inserts. Files already
+        cached, unknown (output files), or wholly unreachable are skipped.
+        Returns the number of bytes staged.
+        """
+        if requester in self.failed:
+            raise IOError(f"node {requester} is failed")
+        cache = self.caches[requester]
+        if not cache.enabled:
+            raise ValueError("prefetch_window requires an enabled client "
+                             "cache (cache_bytes > 0)")
+        local_items: List[FetchItem] = []
+        groups: Dict[int, List[FetchItem]] = {}
+        pending_serve: Dict[int, float] = {}
+        for raw in paths:
+            path = raw.strip("/")
+            if path in cache:
+                continue
+            hit = self.metadata.lookup(path)
+            if hit is None:
+                continue                      # output file: demand-only
+            st, loc = hit
+            item = self._fetch_item(path, st, loc)
+            if self.nodes[requester].has(path):
+                local_items.append(item)
+                continue
+            owner = self._choose_owner(loc, item, pending_serve)
+            if owner is None:
+                continue                      # unreachable: surfaces on demand
+            groups.setdefault(owner, []).append(item)
+        staged = 0
+        evictions = 0
+
+        def insert(item: FetchItem, data: bytes) -> None:
+            nonlocal staged, evictions
+            evictions += cache.put(item.path, data if materialize else None,
+                                   size=item.size)
+            if item.path in cache:    # count only accepted entries (Belady
+                staged += item.size   # admission / oversize may refuse)
+
+        if local_items:
+            datas = self.transport.prefetch_local(requester, local_items,
+                                                  materialize=materialize)
+            for item, data in zip(local_items, datas):
+                insert(item, data)
+        for owner, items in groups.items():
+            datas = self.transport.fetch_window(requester, owner, items,
+                                                materialize=materialize)
+            for item, data in zip(items, datas):
+                insert(item, data)
+        if evictions:
+            self.transport.account_cache_eviction(requester, evictions)
+        return staged
+
+    def prefetch_window_async(self, requester: int, paths: Sequence[str], *,
+                              materialize: bool = True) -> "Future[int]":
+        """``prefetch_window`` on the transport's I/O pool."""
+        return self.transport.submit(self.prefetch_window, requester,
+                                     list(paths), materialize=materialize)
 
     def shutdown(self) -> None:
         """Join the transport's I/O pool (spawned lazily by async reads)."""

@@ -12,13 +12,24 @@ A match token is two bytes: ``oooooooo oooollll`` (12-bit offset back from the
 current position, 1-based; 4-bit length-3).
 
 The encoder is greedy with a 3-byte hash chain, like LZSSE's fast levels.
-Pure Python keeps it portable; throughput is adequate for the partition sizes
-used in tests/benchmarks, and the benchmark harness also exposes zstd as the
-"production speed" codec (see DESIGN.md §2).
+Pure Python keeps it portable; :func:`compress` is the tuned hot loop
+(numpy-assisted integer prefix keys, a one-byte candidate prune before each
+match extension, and flag/token emission without per-token ``struct`` calls)
+and :func:`compress_reference` is the straightforward transliteration of the
+format — both produce byte-identical streams (``benchmarks/compression.py``
+asserts the identity and the >=2x encode speedup). The benchmark harness
+also exposes zstd as the "production speed" codec (see DESIGN.md §2).
 """
 from __future__ import annotations
 
 import struct
+from collections import deque as _deque
+from itertools import islice as _islice
+
+try:                       # numpy only accelerates key precomputation
+    import numpy as _np
+except ImportError:        # pragma: no cover - numpy is a repo-wide dep
+    _np = None
 
 WINDOW = 1 << 12          # 4096
 MIN_MATCH = 3
@@ -26,8 +37,127 @@ MAX_MATCH = MIN_MATCH + 15  # 18
 _CHAIN = 32               # max hash-chain probes (compression/speed tradeoff)
 
 
+def _prefix_keys(data: bytes):
+    """24-bit int key per position: data[i] | data[i+1]<<8 | data[i+2]<<16.
+
+    Equal keys <=> equal 3-byte prefixes, so chains behave exactly like the
+    reference encoder's bytes-keyed table — without allocating a 3-byte
+    slice per position.
+    """
+    if len(data) < MIN_MATCH:
+        return []
+    if _np is not None:
+        arr = _np.frombuffer(data, dtype=_np.uint8).astype(_np.uint32)
+        return (arr[:-2] | (arr[1:-1] << 8) | (arr[2:] << 16)).tolist()
+    return [data[i] | (data[i + 1] << 8) | (data[i + 2] << 16)
+            for i in range(len(data) - 2)]
+
+
 def compress(data: bytes, *, max_probes: int = _CHAIN) -> bytes:
-    """Greedy LZSS encode. Returns header + token stream."""
+    """Greedy LZSS encode. Returns header + token stream.
+
+    Byte-identical to :func:`compress_reference` (same greedy choices, same
+    bounded chains); only the constant factors differ.
+    """
+    n = len(data)
+    out = bytearray(struct.pack("<I", n))
+    if n == 0:
+        return bytes(out)
+    keys = _prefix_keys(data)
+    nk = n - 2                      # positions with a full 3-byte prefix
+    # int key -> recent positions, oldest first. A bounded deque keeps the
+    # most recent 4*max_probes entries — a superset of what the reference
+    # encoder's trimmed lists retain (they never drop below 2*max_probes),
+    # and the scan only ever reads the newest max_probes, so greedy choices
+    # are identical while append stays O(1) with no length checks.
+    table: dict = {}
+    tget = table.get
+    d = data
+    append = out.append
+    i = 0
+    flags_pos = len(out)
+    append(0)
+    flag = 0
+    nbits = 0
+    depth = 4 * max_probes
+    while i < n:
+        best_len = 0
+        best_off = 0
+        chain = tget(keys[i]) if i < nk else None
+        if chain:
+            lo = i - WINDOW
+            maxk = MAX_MATCH if n - i > MAX_MATCH else n - i
+            bl = 0
+            prune = -1          # d[i + bl], cached across probes
+            # islice caps the probe count without a per-iteration counter;
+            # chains at or under the cap skip the wrapper entirely
+            recent = reversed(chain)
+            if len(chain) > max_probes:
+                recent = _islice(recent, max_probes)
+            for j in recent:
+                if j < lo:
+                    break
+                # a longer match needs d[j+bl] == d[i+bl]; one byte
+                # rules out most candidates without extending
+                if bl and (bl >= maxk or d[j + bl] != prune):
+                    continue
+                # same chain => same 3-byte prefix: extension starts at 3
+                k = MIN_MATCH
+                while k < maxk and d[j + k] == d[i + k]:
+                    k += 1
+                if k > bl:
+                    bl, best_off = k, i - j
+                    if k == MAX_MATCH:
+                        break
+                    if k < maxk:
+                        prune = d[i + k]
+            best_len = bl
+        if best_len >= MIN_MATCH:
+            token = ((best_off - 1) << 4) | (best_len - MIN_MATCH)
+            append(token & 0xFF)
+            append(token >> 8)
+            # index every covered position (bounded chains)
+            end = i + best_len
+            if chain is None and i < nk:
+                table[keys[i]] = chain = _deque((), depth)
+            if chain is not None:
+                chain.append(i)
+            pos = i + 1
+            stop = end if end < nk else nk
+            for ki in keys[pos:stop]:
+                c = tget(ki)
+                if c is None:
+                    table[ki] = _deque((pos,), depth)
+                else:
+                    c.append(pos)
+                pos += 1
+            i = end
+        else:
+            flag |= 1 << nbits
+            append(d[i])
+            if i < nk:
+                if chain is None:
+                    table[keys[i]] = _deque((i,), depth)
+                else:
+                    chain.append(i)
+            i += 1
+        nbits += 1
+        if nbits == 8:
+            out[flags_pos] = flag
+            flags_pos = len(out)
+            append(0)
+            flag = 0
+            nbits = 0
+    out[flags_pos] = flag
+    return bytes(out)
+
+
+def compress_reference(data: bytes, *, max_probes: int = _CHAIN) -> bytes:
+    """The straightforward (slow) encoder — the format's executable spec.
+
+    Kept for the byte-identity + speedup assertions in
+    ``benchmarks/compression.py`` and the regression tests.
+    """
     n = len(data)
     out = bytearray(struct.pack("<I", n))
     if n == 0:

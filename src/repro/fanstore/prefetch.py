@@ -1,0 +1,291 @@
+"""Clairvoyant epoch-horizon prefetch scheduling (beyond-paper).
+
+FanStore's access pattern is long-lasting, repeated, and *known in
+advance*: the per-epoch permutation is fully determined by the sampler
+seed, so a node can compute exactly which remote samples it will need,
+when, and from whom. Clairvoyant Prefetching (Dryden et al., 2021) shows
+that exploiting this foreknowledge recovers near-local throughput at
+scale. Two pieces:
+
+* :class:`EpochSchedule` — the materialized future: for every requester,
+  the ordered list of ``(step, path, owner)`` it will read this epoch,
+  derived either by replaying any sampler's state (``from_sampler``) or
+  from an explicit per-step trace (``from_trace``). The schedule also
+  yields each requester's demand-access sequence (``future_paths``) — the
+  exact-reuse-distance oracle :class:`repro.fanstore.cache.BeladyCache`
+  evicts by.
+* :class:`PrefetchScheduler` — drives one requester's schedule through the
+  transport's window-level async path: the horizon is cut into lookahead
+  windows of ``window_steps`` training steps, and each window issues ONE
+  coalesced round trip per owner (``Transport.fetch_window``) covering
+  every file that owner serves *across all batches in the window* —
+  amortizing latency far beyond per-batch coalescing. In-flight data is
+  capped by ``max_inflight_bytes`` (backpressure: issuing a new window
+  blocks on the oldest outstanding one), and fetched payloads land in the
+  requester's client cache so the demand-path ``read_many`` hits at RAM
+  speed. Prefetch cost accrues on the ``NodeClock.prefetch_s`` lane, so
+  epoch makespan models I/O hidden behind compute instead of serializing.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass
+from typing import (Callable, Deque, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
+
+__all__ = ["ScheduledRead", "EpochSchedule", "PrefetchScheduler"]
+
+
+@dataclass(frozen=True)
+class ScheduledRead:
+    """One future read: global step, path, and the node expected to serve
+    it (the requester itself for node-local files; -1 when no cluster was
+    available to resolve ownership). Paths are stored normalized
+    (no leading slash) so they match client-cache keys exactly — the
+    Belady oracle depends on that."""
+    step: int
+    path: str
+    owner: int = -1
+
+
+class EpochSchedule:
+    """Per-requester ordered future reads for one epoch (or trace).
+
+    ``reads_by_requester[r]`` is sorted by step; within a step, order is
+    the batch's index order (which is the demand-read order).
+    """
+
+    def __init__(self, reads_by_requester: Mapping[int, Sequence[ScheduledRead]]):
+        self._reads: Dict[int, List[ScheduledRead]] = {
+            int(r): sorted(reads, key=lambda s: s.step)
+            for r, reads in reads_by_requester.items()}
+        self.num_steps = max(
+            (reads[-1].step + 1 for reads in self._reads.values() if reads),
+            default=0)
+
+    # ---- construction ------------------------------------------------------
+    @classmethod
+    def from_sampler(cls, sampler, paths: Sequence[str], *,
+                     num_requesters: int, cluster=None,
+                     epoch: Optional[int] = None) -> "EpochSchedule":
+        """Materialize the epoch's permutation from any checkpointable
+        sampler (``state``/``restore``/``next_batch``) without advancing it.
+
+        Each global batch is split into ``num_requesters`` contiguous
+        per-requester slices — the convention the device tier and
+        ``StratifiedSampler`` already use. ``paths[i]`` maps sample index i
+        to its file; ``cluster`` (optional) annotates each read with its
+        expected serving node (informational — the scheduler re-resolves
+        owners at issue time against the live failure set).
+        """
+        batches = sampler.peek_epoch(epoch)
+        reads: Dict[int, List[ScheduledRead]] = {
+            r: [] for r in range(num_requesters)}
+        for step, batch in enumerate(batches):
+            if len(batch) % num_requesters:
+                raise ValueError(
+                    "num_requesters must divide the global batch size")
+            per = len(batch) // num_requesters
+            for r in range(num_requesters):
+                for idx in batch[r * per:(r + 1) * per]:
+                    path = paths[int(idx)].strip("/")
+                    owner = _resolve_owner(cluster, r, path)
+                    reads[r].append(ScheduledRead(step, path, owner))
+        return cls(reads)
+
+    @classmethod
+    def from_trace(cls, traces: Mapping[int, Sequence[Sequence[str]]],
+                   cluster=None) -> "EpochSchedule":
+        """Build from explicit per-step path lists:
+        ``traces[requester] = [[paths of step 0], [paths of step 1], ...]``.
+        """
+        reads: Dict[int, List[ScheduledRead]] = {}
+        for r, steps in traces.items():
+            out: List[ScheduledRead] = []
+            for step, batch in enumerate(steps):
+                for path in batch:
+                    path = path.strip("/")
+                    out.append(ScheduledRead(
+                        step, path, _resolve_owner(cluster, r, path)))
+            reads[int(r)] = out
+        return cls(reads)
+
+    # ---- views -------------------------------------------------------------
+    @property
+    def requesters(self) -> List[int]:
+        return sorted(self._reads)
+
+    def for_requester(self, requester: int) -> List[ScheduledRead]:
+        return list(self._reads.get(requester, []))
+
+    def future_paths(self, requester: int) -> List[str]:
+        """The requester's demand-access sequence — Belady's oracle."""
+        return [s.path for s in self._reads.get(requester, [])]
+
+    def install_futures(self, cluster,
+                        requesters: Optional[Sequence[int]] = None) -> int:
+        """Hand each requester's future trace to its cluster cache (no-op
+        for policies without a ``set_future`` hook). Returns caches fed."""
+        fed = 0
+        for r in (requesters if requesters is not None else self.requesters):
+            cache = cluster.caches.get(r)
+            if cache is not None and hasattr(cache, "set_future"):
+                cache.set_future(self.future_paths(r))
+                fed += 1
+        return fed
+
+
+def _resolve_owner(cluster, requester: int, path: str) -> int:
+    if cluster is None:
+        return -1
+    path = path.strip("/")
+    if cluster.nodes[requester].has(path):
+        return requester
+    hit = cluster.metadata.lookup(path)
+    if hit is None:
+        return -1                     # output file: not prefetchable
+    _, loc = hit
+    for owner in loc.all_owners:
+        if owner not in cluster.failed:
+            return owner
+    return -1
+
+
+class PrefetchScheduler:
+    """Issue one requester's epoch schedule as lookahead windows of
+    coalesced async fetches, with a byte-budget in-flight cap.
+
+    Typical use (or let ``PrefetchLoader(schedule=...)`` drive it)::
+
+        sched = EpochSchedule.from_sampler(sampler, paths,
+                                           num_requesters=N, cluster=c)
+        pf = PrefetchScheduler(c, sched, requester=r, window_steps=8)
+        for step in range(steps):
+            pf.ensure(step + lookahead)     # non-blocking unless over cap
+            c.read_many(r, batch_paths)     # hits the client cache
+        pf.close()
+
+    Windows are ``window_steps`` consecutive training steps; window *i* is
+    issued as ONE ``cluster.prefetch_window`` call, which groups the
+    window's files per owner and pays one round trip per (requester,
+    owner, window). ``max_inflight_bytes`` caps outstanding prefetched-but-
+    unconsumed bytes: when exceeded, :meth:`ensure` blocks on the oldest
+    outstanding window (backpressure) before issuing the next.
+
+    Construction installs the schedule's future trace into the requester's
+    cache when the policy supports it (Belady), so prefetch, demand reads,
+    and eviction all share one view of the future.
+    """
+
+    def __init__(self, cluster, schedule: EpochSchedule, requester: int, *,
+                 window_steps: int = 8,
+                 max_inflight_bytes: int = 256 * 1024 * 1024,
+                 materialize: bool = True,
+                 install_future: bool = True):
+        if window_steps < 1:
+            raise ValueError("window_steps must be >= 1")
+        if max_inflight_bytes < 1:
+            raise ValueError("max_inflight_bytes must be >= 1")
+        self.cluster = cluster
+        self.schedule = schedule
+        self.requester = requester
+        self.window_steps = window_steps
+        self.max_inflight_bytes = max_inflight_bytes
+        self.materialize = materialize
+        self._windows = self._cut_windows(schedule.for_requester(requester))
+        self._next_window = 0
+        # in-flight windows, oldest first: (future, est_bytes, start_step)
+        self._inflight: Deque[Tuple["object", int, int]] = deque()
+        self._inflight_bytes = 0
+        self._lock = threading.Lock()
+        self.windows_issued = 0
+        self.bytes_scheduled = 0
+        if install_future:
+            schedule.install_futures(cluster, [requester])
+
+    # ---- window construction -----------------------------------------------
+    def _cut_windows(self, reads: Sequence[ScheduledRead]
+                     ) -> List[Tuple[int, List[str], int]]:
+        """[(start_step, unique paths, est_bytes)] per lookahead window."""
+        if not reads:
+            return []
+        meta = self.cluster.metadata
+        w = self.window_steps
+        paths_by_window: Dict[int, List[str]] = {}
+        est_by_window: Dict[int, int] = {}
+        seen_by_window: Dict[int, set] = {}
+        for s in reads:                       # one pass, grouped by window
+            start = (s.step // w) * w
+            seen = seen_by_window.setdefault(start, set())
+            if s.path in seen:
+                continue
+            seen.add(s.path)
+            paths_by_window.setdefault(start, []).append(s.path)
+            st = meta.stat(s.path)            # schedule paths are normalized
+            est_by_window[start] = est_by_window.get(start, 0) + (
+                st.st_size if st is not None else 0)
+        return [(start, paths_by_window[start], est_by_window[start])
+                for start in sorted(paths_by_window)]
+
+    @property
+    def num_windows(self) -> int:
+        return len(self._windows)
+
+    # ---- issue/backpressure -------------------------------------------------
+    def _reap_done(self) -> None:
+        while self._inflight and self._inflight[0][0].done():
+            self._wait_oldest()
+
+    def _wait_oldest(self) -> None:
+        fut, nbytes, _ = self._inflight.popleft()
+        self._inflight_bytes -= nbytes
+        fut.result()                           # propagate fetch errors
+
+    def ensure(self, step: int) -> int:
+        """Issue every not-yet-issued window whose first step is <= ``step``.
+
+        Issues are ASYNC — pair with :meth:`wait_ready` (or :meth:`drain`)
+        before demand-reading a step that must hit the cache. Returns the
+        number of windows issued. Blocks only when the in-flight byte cap
+        would be exceeded (backpressure on the oldest outstanding window).
+        """
+        issued = 0
+        with self._lock:
+            self._reap_done()
+            while (self._next_window < len(self._windows)
+                   and self._windows[self._next_window][0] <= step):
+                start, paths, est = self._windows[self._next_window]
+                while (self._inflight
+                       and self._inflight_bytes + est > self.max_inflight_bytes):
+                    self._wait_oldest()
+                fut = self.cluster.prefetch_window_async(
+                    self.requester, paths, materialize=self.materialize)
+                self._inflight.append((fut, est, start))
+                self._inflight_bytes += est
+                self._next_window += 1
+                self.windows_issued += 1
+                self.bytes_scheduled += est
+                issued += 1
+        return issued
+
+    def wait_ready(self, step: int) -> None:
+        """Block until every in-flight window covering steps <= ``step`` has
+        completed, so the demand reads for ``step`` deterministically hit
+        the cache while deeper lookahead windows keep fetching."""
+        with self._lock:
+            while self._inflight and self._inflight[0][2] <= step:
+                self._wait_oldest()
+
+    def run_all(self) -> int:
+        """Issue the whole horizon (subject to the in-flight cap)."""
+        return self.ensure(self.schedule.num_steps)
+
+    def drain(self) -> None:
+        """Block until every issued window has completed."""
+        with self._lock:
+            while self._inflight:
+                self._wait_oldest()
+
+    def close(self) -> None:
+        self.drain()

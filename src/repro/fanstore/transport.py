@@ -17,6 +17,11 @@ tuples and it (a) performs the actual payload movement against the
   from one owner accrues exactly one ``latency_s`` plus the summed byte
   cost. This is what makes small-file workloads latency-bound -> bandwidth-
   bound (Clairvoyant-prefetching-style request coalescing).
+* ``fetch_window`` / ``prefetch_local`` — the scheduled-prefetch lane used
+  by :mod:`repro.fanstore.prefetch`: one round trip per (requester, owner,
+  lookahead window) spanning many batches, accounted on the concurrent
+  ``NodeClock.prefetch_s`` timeline so makespan models I/O hidden behind
+  compute.
 
 ``submit``/``fetch_batch_async`` run any fetch on a shared thread pool and
 return a ``concurrent.futures.Future`` so data pipelines can overlap the
@@ -29,7 +34,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.fanstore.accounting import NodeClock
+from repro.fanstore.accounting import NodeClock, WindowAccount
 from repro.fanstore.store import NodeStore
 
 
@@ -129,9 +134,62 @@ class Transport:
             self._account_remote(requester, owner, items, round_trips=1)
         return out
 
+    def fetch_window(self, requester: int, owner: int,
+                     items: Sequence[FetchItem], *,
+                     materialize: bool = True) -> List[bytes]:
+        """Scheduled-prefetch fetch: one round trip for a whole lookahead
+        WINDOW of files from one owner — the window may span many training
+        batches, so the per-owner latency is amortized far beyond per-batch
+        coalescing.
+
+        Cost accrues on the requester's *prefetch lane*
+        (``NodeClock.prefetch_s``), not ``consume_s``: the scheduler runs on
+        the transport pool concurrently with demand reads, so makespan
+        (``busy_s = max(consume, serve, prefetch)``) models the overlap
+        instead of serializing prefetch behind consumption. Each call appends
+        a :class:`WindowAccount` entry to the requester's per-window ledger.
+        The owner's serve side is accounted identically to
+        ``fetch_remote_batch`` (it answers one message either way).
+        """
+        if not items:
+            return []
+        if materialize:
+            out = [self.nodes[owner].serve_remote(it.path) for it in items]
+        else:
+            out = [b"" for _ in items]
+        with self._lock:
+            self._account_remote(requester, owner, items, round_trips=1,
+                                 lane="prefetch")
+        return out
+
+    def prefetch_local(self, node_id: int, items: Sequence[FetchItem], *,
+                       materialize: bool = True) -> List[bytes]:
+        """Stage node-local files (SSD tier) into the client cache ahead of
+        demand; costs accrue on the prefetch lane so the disk reads overlap
+        the consume timeline."""
+        node = self.nodes[node_id]
+        out: List[bytes] = []
+        total = 0
+        cost = 0.0
+        for it in items:
+            if materialize:
+                data = node.open_local(it.path)
+                node.release(it.path)
+            else:
+                data = b""
+            out.append(data)
+            total += it.size
+            cost += self.net.local_cost(it.size, compressed=it.compressed)
+        with self._lock:
+            clock = self.clocks[node_id]
+            clock.prefetch_s += cost
+            clock.prefetch_bytes += total    # sole ledger for staged bytes
+        return out
+
     def _account_remote(self, requester: int, owner: int,
                         items: Sequence[FetchItem], *,
-                        round_trips: Optional[int] = None) -> None:
+                        round_trips: Optional[int] = None,
+                        lane: str = "consume") -> None:
         """Accrue modeled cost; ``round_trips`` defaults to one per item.
 
         With ``round_trips=1`` (batched) the requester pays one ``latency_s``
@@ -140,16 +198,27 @@ class Transport:
         scatter-gather over its already-open partition blobs instead of K
         per-request handlings. Byte costs (NIC both sides, server storage
         read, client decompress) are per-byte and unchanged.
+
+        ``lane="prefetch"`` books the requester side onto the concurrent
+        prefetch timeline (``prefetch_s`` + per-window ledger) instead of
+        ``consume_s``; the owner's serve side is lane-independent.
         """
         trips = len(items) if round_trips is None else round_trips
         stored = sum(it.stored for it in items)
         clock = self.clocks[requester]
-        clock.consume_s += trips * self.net.latency_s
-        clock.consume_s += stored / self.net.bandwidth_Bps
+        cost = trips * self.net.latency_s + stored / self.net.bandwidth_Bps
         for it in items:
             if it.compressed:
-                clock.consume_s += it.size / self.net.decompress_Bps
-        clock.bytes_in += stored
+                cost += it.size / self.net.decompress_Bps
+        if lane == "prefetch":
+            clock.prefetch_s += cost
+            clock.prefetch_bytes += stored
+            clock.prefetch_windows += trips
+            clock.prefetch_log.append(WindowAccount(
+                owner=owner, files=len(items), bytes=stored, cost_s=cost))
+        else:
+            clock.consume_s += cost
+            clock.bytes_in += stored
         oc = self.clocks[owner]
         oc.serve_s += trips * self.net.open_overhead_s
         oc.serve_s += stored / self.net.disk_bw_Bps
@@ -194,6 +263,12 @@ class Transport:
                                  items: Sequence[FetchItem], *,
                                  materialize: bool = True) -> Future:
         return self.submit(self.fetch_remote_batch, requester, owner, items,
+                           materialize=materialize)
+
+    def fetch_window_async(self, requester: int, owner: int,
+                           items: Sequence[FetchItem], *,
+                           materialize: bool = True) -> Future:
+        return self.submit(self.fetch_window, requester, owner, items,
                            materialize=materialize)
 
     def shutdown(self) -> None:

@@ -1,0 +1,184 @@
+"""Cache policy seam: Belady (clairvoyant MIN) beats LRU, 2Q resists scan
+pollution, and every policy mirrors hits/evictions onto NodeClock alike."""
+import numpy as np
+import pytest
+
+from repro.fanstore.cache import (BeladyCache, ByteLRUCache, TwoQCache,
+                                  make_cache)
+from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.prefetch import EpochSchedule
+from repro.fanstore.prepare import prepare_dataset
+
+
+def simulate(cache, trace, size=100):
+    """Demand-read loop as the cluster drives it: get, then put on miss."""
+    for p in trace:
+        if cache.get(p) is None:
+            cache.put(p, b"x" * size)
+    return cache.stats
+
+
+# ---- policy selection -------------------------------------------------------
+
+def test_make_cache_registry_and_custom():
+    assert isinstance(make_cache("lru", 10), ByteLRUCache)
+    assert isinstance(make_cache("belady", 10), BeladyCache)
+    assert isinstance(make_cache("2q", 10), TwoQCache)
+    assert isinstance(make_cache(ByteLRUCache, 10), ByteLRUCache)
+    with pytest.raises(ValueError):
+        make_cache("arc", 10)
+
+
+def test_cluster_cache_policy_parameter():
+    files = {"d/a.bin": b"x" * 100}
+    blobs, _ = prepare_dataset(files, 1, compress=False)
+    cluster = FanStoreCluster(2, cache_bytes=1000, cache_policy="2q")
+    cluster.load_partitions(blobs)
+    assert all(isinstance(c, TwoQCache) for c in cluster.caches.values())
+    with pytest.raises(ValueError):
+        FanStoreCluster(2, cache_bytes=1000, cache_policy="nope")
+
+
+# ---- Belady vs LRU ----------------------------------------------------------
+
+def test_belady_beats_lru_on_uniform_random_trace():
+    """ISSUE 2 acceptance: exact future knowledge strictly beats recency at
+    an equal byte budget under the uniform-random access the paper says
+    defeats LRU."""
+    rng = np.random.default_rng(0)
+    paths = [f"f{i}" for i in range(50)]
+    trace = [paths[int(i)] for i in rng.integers(0, 50, size=600)]
+    budget = 10 * 100                              # 10 of 50 files
+    lru = simulate(ByteLRUCache(budget), trace)
+    belady = simulate(BeladyCache(budget, future=trace), trace)
+    assert belady.hits > lru.hits
+    assert belady.hit_rate > lru.hit_rate
+
+
+def test_belady_matches_benchmark_comparison():
+    """The bench_json cache-policy arm asserts the same inequality through
+    the full cluster read path (and is what BENCH_io.json reports)."""
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.io_scaling import cache_policy_comparison
+    out = cache_policy_comparison(num_files=48, cache_files=12, accesses=384)
+    assert out["belady_hit_rate"] > out["lru_hit_rate"]
+
+
+def test_belady_evicts_farthest_and_rejects_dead_entries():
+    trace = ["a", "b", "c", "a", "b", "a"]
+    cache = BeladyCache(200, future=trace)         # holds two 100 B entries
+    assert cache.get("a") is None
+    cache.put("a", b"x" * 100)
+    assert cache.get("b") is None
+    cache.put("b", b"x" * 100)
+    assert cache.get("c") is None
+    # c is never reused: admission refused rather than evicting a or b
+    cache.put("c", b"x" * 100)
+    assert "c" not in cache and "a" in cache and "b" in cache
+    assert cache.stats.rejections == 1
+    assert cache.get("a") is not None
+    assert cache.get("b") is not None
+    assert cache.get("a") is not None
+    assert cache.stats.hits == 3
+
+
+def test_belady_eviction_prefers_farthest_next_use():
+    trace = ["a", "b", "c", "b", "c", "a"]         # a is reused farthest out
+    cache = BeladyCache(200, future=trace)
+    cache.get("a"), cache.put("a", b"x" * 100)
+    cache.get("b"), cache.put("b", b"x" * 100)
+    cache.get("c"), cache.put("c", b"x" * 100)     # evicts a (farthest), not b
+    assert "a" not in cache and "b" in cache and "c" in cache
+
+
+def test_belady_admits_replacement_of_resident_entry():
+    """Regression: upgrading a resident entry (e.g. a size-only placeholder
+    refetched by a materializing read) frees its own bytes and must not be
+    rejected for being its own farthest-next-use competitor."""
+    trace = ["a", "b", "a", "b", "a", "b"]
+    cache = BeladyCache(200, future=trace)
+    cache.get("a"), cache.put("a", None, size=100)     # placeholders fill
+    cache.get("b"), cache.put("b", None, size=100)     # the whole budget
+    assert cache.get("a", require_data=True) is None   # modeled -> refetch
+    cache.put("a", b"x" * 100)                         # same-size upgrade
+    assert cache.stats.rejections == 0
+    assert cache.get("a", require_data=True).data == b"x" * 100
+
+
+def test_schedule_normalizes_paths_to_cache_keys():
+    """Regression: slash-prefixed trace paths must still feed the Belady
+    oracle with the normalized keys the cluster cache uses."""
+    sched = EpochSchedule.from_trace({0: [["/d/a.bin", "d/b.bin"]]})
+    assert sched.future_paths(0) == ["d/a.bin", "d/b.bin"]
+    cache = BeladyCache(100, future=sched.future_paths(0))
+    assert cache._next_use("d/a.bin") == 0
+
+
+def test_belady_extend_future_across_epochs():
+    epoch = ["a", "b", "a"]
+    cache = BeladyCache(500, future=epoch)
+    cache.extend_future(epoch)
+    q = cache._future["a"]
+    assert list(q) == [0, 2, 3, 5]
+
+
+# ---- 2Q scan resistance -----------------------------------------------------
+
+def test_twoq_resists_one_shot_scan_pollution():
+    """A hot working set interleaved with a long one-shot scan: LRU lets the
+    scan evict the hot files; 2Q keeps them in the protected queue."""
+    rng = np.random.default_rng(1)
+    hot = [f"hot{i}" for i in range(8)]
+    scan = [f"scan{i}" for i in range(300)]
+    trace = []
+    si = 0
+    for _ in range(40):                            # warm the hot set + scan
+        trace += [hot[int(i)] for i in rng.integers(0, 8, size=6)]
+        trace += scan[si:si + 6]
+        si += 6
+    budget = 16 * 100                              # 2x the hot set
+    lru = simulate(ByteLRUCache(budget), trace)
+    twoq = simulate(TwoQCache(budget), trace)
+    assert twoq.hit_rate > lru.hit_rate
+
+
+def test_twoq_promotes_only_reused_files():
+    cache = TwoQCache(400, kin=0.25, kout=0.5)
+    # one-shot traffic FIFOs through probation; re-referenced files reach
+    # the protected main queue via the ghost list
+    for i in range(6):
+        p = f"s{i}"
+        assert cache.get(p) is None
+        cache.put(p, b"x" * 100)
+    assert cache.used_bytes <= 400
+    # s0 FIFO'd out through probation into the ghost list: miss, then the
+    # refill is admitted into the protected main queue
+    assert cache.get("s0") is None
+    cache.put("s0", b"x" * 100)
+    assert "s0" not in cache._a1in and "s0" in cache
+
+
+# ---- NodeClock mirroring ----------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["lru", "belady", "2q"])
+def test_policies_mirror_counters_onto_node_clock(policy):
+    files = {f"d/f{i}.bin": b"z" * 1000 for i in range(16)}
+    blobs, _ = prepare_dataset(files, 1, compress=False)
+    cluster = FanStoreCluster(2, cache_bytes=3500, cache_policy=policy)
+    cluster.load_partitions(blobs)
+    paths = sorted(files)
+    if policy == "belady":
+        EpochSchedule.from_trace({1: [paths, paths]}).install_futures(cluster)
+    cluster.read_many(1, paths)
+    cluster.read_many(1, paths)
+    cache = cluster.caches[1]
+    clock = cluster.clocks[1]
+    assert clock.cache_hits == cache.stats.hits
+    assert clock.cache_misses == cache.stats.misses
+    assert clock.cache_evictions == cache.stats.evictions
+    assert clock.cache_hit_bytes == cache.stats.hit_bytes
+    assert cache.used_bytes <= 3500

@@ -70,3 +70,25 @@ def test_roundtrip_deterministic(rng):
     for bits in range(8):
         for n in (1, 37, 3000):
             _check_low_entropy(bits, n, seed=bits * 31 + n)
+
+
+def test_tuned_encoder_byte_identical_to_reference(rng):
+    """The tuned hot loop must emit the reference stream bit for bit —
+    same greedy choices, same bounded hash chains, same flag framing."""
+    cases = [b"", b"a", b"ab", b"abc", b"aaaa", b"xyzxyz" * 3,
+             b"a" * 5000, bytes(range(256)) * 40,
+             bytes(rng.integers(0, 2, 4097, dtype=np.uint8)),
+             bytes(rng.integers(0, 8, 20000, dtype=np.uint8)),
+             bytes(rng.integers(0, 256, 8192, dtype=np.uint8))]
+    for data in cases:
+        fast = lzss.compress(data)
+        ref = lzss.compress_reference(data)
+        assert fast == ref
+        assert lzss.decompress(fast) == data
+
+
+def test_tuned_encoder_respects_max_probes(rng):
+    data = bytes(rng.integers(0, 4, 6000, dtype=np.uint8))
+    for probes in (1, 4, 32):
+        assert (lzss.compress(data, max_probes=probes)
+                == lzss.compress_reference(data, max_probes=probes))

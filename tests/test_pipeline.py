@@ -57,3 +57,56 @@ def test_cursor_is_sampler_state():
     loader = _mk()
     list(loader.batches(3))
     assert loader.cursor.step == 3
+
+
+def test_error_after_close_surfaces_on_close():
+    """Regression: an exception raised inside the producer after close()
+    used to be swallowed; close() must re-raise it."""
+    release = threading.Event()
+
+    def blocking_fetch_many(idxs):
+        release.wait(timeout=5)
+        raise IOError("owner died mid-window")
+
+    sampler = GlobalUniformSampler(64, 8, seed=0)
+    loader = PrefetchLoader(sampler, fetch_many=blocking_fetch_many,
+                            decode=lambda b: b)
+    loader.start(4)
+    # the consumer walks away while a fetch is in flight; the fetch fails
+    # only after close() has begun waiting on the producer
+    threading.Timer(0.05, release.set).start()
+    with pytest.raises(IOError, match="owner died"):
+        loader.close()
+    # already-surfaced errors are not raised twice
+    loader.close()
+
+
+def test_error_surfaces_on_next_not_just_at_end():
+    calls = []
+
+    def fetch_many(idxs):
+        calls.append(1)
+        if len(calls) >= 2:
+            raise IOError("second batch failed")
+        return [b"x"] * len(idxs)
+
+    sampler = GlobalUniformSampler(64, 8, seed=0)
+    loader = PrefetchLoader(sampler, fetch_many=fetch_many,
+                            decode=lambda b: b)
+    loader.start(4)
+    assert next(loader) == [b"x"] * 8
+    with pytest.raises(IOError, match="second batch"):
+        next(loader)
+
+
+def test_stop_alias_propagates_error():
+    def bad_fetch_many(idxs):
+        raise RuntimeError("boom")
+
+    sampler = GlobalUniformSampler(64, 8, seed=0)
+    loader = PrefetchLoader(sampler, fetch_many=bad_fetch_many,
+                            decode=lambda b: b)
+    loader.start(2)
+    time.sleep(0.05)                # let the producer hit the error
+    with pytest.raises(RuntimeError):
+        loader.stop()

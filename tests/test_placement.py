@@ -94,3 +94,49 @@ def test_ring_used_by_metadata_compat_import():
     assert metadata.ConsistentHashRing is ConsistentHashRing
     import repro.fanstore as fanstore
     assert fanstore.ConsistentHashRing is ConsistentHashRing
+
+
+def test_load_partitions_by_ring_placement_minimal_remap():
+    """ISSUE 2 satellite: with RingPlacement opted in, growing the cluster
+    by one node remaps only ~1/N of the partitions (and the moved
+    partitions all land on the new node)."""
+    from repro.fanstore.cluster import FanStoreCluster
+    from repro.fanstore.prepare import prepare_dataset
+
+    files = {f"d/f{i:04d}.bin": bytes([i % 251]) * 64 for i in range(192)}
+    blobs, _ = prepare_dataset(files, 96, compress=False)
+
+    def owners(num_nodes):
+        cluster = FanStoreCluster(
+            num_nodes, placement=RingPlacement(range(num_nodes)))
+        cluster.load_partitions(blobs, by_placement=True)
+        out = {}
+        for path in cluster.metadata.paths():
+            _, loc = cluster.metadata.lookup(path)
+            out[path] = loc.node_id
+        # reads still work through the ring-placed partitions
+        assert cluster.read(0, sorted(files)[0]) == files[sorted(files)[0]]
+        return out
+
+    before = owners(8)
+    after = owners(9)
+    moved = [p for p in before if before[p] != after[p]]
+    assert moved                                     # the new node got data
+    assert all(after[p] == 8 for p in moved)         # ...and only it
+    # ~1/9 of the keyspace moves (generous 3x bound, like the ring tests)
+    assert len(moved) < len(before) * 3 / 9
+
+
+def test_load_partitions_by_placement_respects_replication():
+    from repro.fanstore.cluster import FanStoreCluster
+    from repro.fanstore.prepare import prepare_dataset
+
+    files = {f"d/f{i:04d}.bin": b"z" * 64 for i in range(32)}
+    blobs, _ = prepare_dataset(files, 16, compress=False)
+    cluster = FanStoreCluster(6, placement=RingPlacement(range(6)))
+    cluster.load_partitions(blobs, replication=2, by_placement=True)
+    for path in cluster.metadata.paths():
+        _, loc = cluster.metadata.lookup(path)
+        assert len(loc.all_owners) == 2
+        assert loc.node_id == cluster.placement.replica_set(
+            f"partition:{loc.partition_id:08d}", 2)[0]
