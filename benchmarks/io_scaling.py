@@ -20,10 +20,17 @@ Beyond the paper, three engine axes::
                    makespan models I/O overlapped with compute
     --cache-mb M   per-node client read cache of M MiB (2 epochs so the
                    second pass can hit), reporting cache hit rate
+    --write        the write half: every node writes its outputs through
+                   the batched ``write_many`` (one round trip per
+                   (writer, owner) pair on the concurrent write lane) vs
+                   the per-file ``write_file`` loop; reports the makespan
+                   win per node count
 
-``bench_json`` packages the seed / batched / prefetched arms (plus an
-LRU-vs-Belady hit-rate comparison) as the machine-readable dict that
-``benchmarks/run.py --io-json`` writes to BENCH_io.json.
+``bench_json`` packages the seed / batched / prefetched arms, the
+write_many-vs-perfile arm, checkpoint-flush makespan with/without
+prefetch-lane overlap, and an LRU-vs-Belady hit-rate comparison as the
+machine-readable dict that ``benchmarks/run.py --io-json`` writes to
+BENCH_io.json.
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.data.synthetic import fixed_size_files
+from repro.fanstore.api import FanStoreSession
 from repro.fanstore.cluster import FanStoreCluster, InterconnectModel
 from repro.fanstore.prefetch import EpochSchedule, PrefetchScheduler
 from repro.fanstore.prepare import prepare_dataset
@@ -149,6 +157,122 @@ def _drive_prefetched_epoch(cluster: FanStoreCluster,
                 cluster.read_many(nid, steps[step], materialize=False)
     for pf in schedulers.values():
         pf.close()
+
+
+def run_write_one(nodes: int, file_size: int, files_per_node: int,
+                  net: InterconnectModel, *, batched: bool = True) -> Dict:
+    """Every node writes its own output files. ``batched=True`` drives the
+    engine's ``write_many`` (one round trip per (writer, owner) pair, the
+    concurrent write lane); ``batched=False`` is the per-file
+    ``write_file`` loop (one round trip per file on the serialized demand
+    lane) — the seed's synchronous writer."""
+    cluster = FanStoreCluster(nodes, interconnect=net)
+    payload = bytes(file_size)      # shared object: single-chunk writes are
+    cluster.reset_clocks()          # zero-copy, so 512 nodes stay cheap
+    files = 0
+    for nid in range(nodes):
+        entries = [(f"out/n{nid:03d}/f{i:05d}.bin", payload)
+                   for i in range(files_per_node)]
+        if batched:
+            cluster.write_many(nid, entries)
+        else:
+            for p, d in entries:
+                cluster.write_file(nid, p, d)
+        files += len(entries)
+    return {"nodes": nodes, "file_size": file_size, "files": files,
+            "makespan_s": cluster.makespan_s(),
+            "write_bytes": cluster.accounting.write_bytes(),
+            "write_rpcs": cluster.accounting.write_rpcs(),
+            "batched": batched}
+
+
+def run_checkpoint_overlap(nodes: int, file_size: int, count: int,
+                           net: InterconnectModel, *,
+                           reads_per_node: int = 64, window: int = 4,
+                           shard_bytes: int = 4 * 1024 * 1024,
+                           chunk_bytes: int = 1 * 1024 * 1024) -> Dict:
+    """Checkpoint flush DURING an active prefetch window vs serialized
+    write-then-prefetch.
+
+    Overlapped: one run where every node drives a prefetched epoch while a
+    ``CheckpointWriter`` streams one shard in fsync'd chunks on the
+    concurrent write lane — per-node makespan is
+    ``max(consume, serve, prefetch, write)``. Serialized: the same two
+    workloads accrued in isolation, summed — what a writer that parks the
+    data plane would pay. The modeled clocks are order-independent, so
+    both are exact, deterministic quantities.
+    """
+    def build():
+        cache_mb = (min(reads_per_node, count) * file_size) // (1 << 20) + 1
+        cluster = _build_cluster(nodes, file_size, count, net, replication=1,
+                                 cache_mb=cache_mb, cache_policy="belady")
+        rng = np.random.default_rng(nodes)
+        paths = sorted(f"bench/f_{i:06d}.bin" for i in range(count))
+        m = min(reads_per_node, len(paths))
+        traces = {}
+        for nid in range(nodes):
+            chosen = [paths[int(i)]
+                      for i in rng.choice(len(paths), size=m, replace=False)]
+            traces[nid] = [chosen[s:s + BATCH]
+                           for s in range(0, len(chosen), BATCH)]
+        return cluster, traces
+
+    def write_shards(cluster):
+        payload = bytes(shard_bytes)
+        for nid in range(cluster.num_nodes):
+            writer = FanStoreSession(cluster, nid).checkpoint_writer(
+                chunk_bytes=chunk_bytes)
+            writer.write_shard(f"ckpt/step_0/shard_{nid:03d}.npy", payload)
+
+    # overlapped: both workloads on one set of clocks, concurrent lanes
+    cluster, traces = build()
+    cluster.reset_clocks()
+    _drive_prefetched_epoch(cluster, traces, window=window)
+    write_shards(cluster)
+    overlapped = cluster.makespan_s()
+    # serialized: prefetch epoch alone + write alone, summed
+    cluster, traces = build()
+    cluster.reset_clocks()
+    _drive_prefetched_epoch(cluster, traces, window=window)
+    prefetch_only = cluster.makespan_s()
+    cluster2, _ = build()
+    cluster2.reset_clocks()
+    write_shards(cluster2)
+    write_only = cluster2.makespan_s()
+    serialized = prefetch_only + write_only
+    return {"nodes": nodes, "shard_bytes": shard_bytes,
+            "overlapped_makespan_s": overlapped,
+            "serialized_makespan_s": serialized,
+            "prefetch_makespan_s": prefetch_only,
+            "write_makespan_s": write_only,
+            "overlap_speedup": serialized / overlapped if overlapped else 1.0}
+
+
+def run_write(arm: str = "cpu", *, files_per_node: int = 32,
+              file_size: int = 64 * 1024) -> List[Dict]:
+    scales, net = ([1, 4, 8, 16], GPU_NET) if arm == "gpu" else \
+        ([1, 64, 128, 256, 512], CPU_NET)
+    rows = []
+    for n in scales:
+        batched = run_write_one(n, file_size, files_per_node, net,
+                                batched=True)
+        perfile = run_write_one(n, file_size, files_per_node, net,
+                                batched=False)
+        batched["makespan_perfile_s"] = perfile["makespan_s"]
+        batched["write_speedup"] = (
+            perfile["makespan_s"] / batched["makespan_s"]
+            if batched["makespan_s"] > 0 else 1.0)
+        rows.append(batched)
+    return rows
+
+
+def format_write_rows(arm: str, rows: List[Dict]) -> List[str]:
+    return [(f"write,arm={arm},nodes={r['nodes']},"
+             f"size={r['file_size']//1024}KB,files={r['files']},"
+             f"makespan_write_many={r['makespan_s']:.6f}s,"
+             f"makespan_perfile={r['makespan_perfile_s']:.6f}s,"
+             f"write_speedup={r['write_speedup']:.3f},"
+             f"write_rpcs={r['write_rpcs']}") for r in rows]
 
 
 def run(arm: str = "cpu", *, count: int = None, batched: bool = False,
@@ -276,10 +400,23 @@ def bench_json(*, nodes_list=(8, 64), smoke: bool = False) -> Dict:
     # batches to coalesce across (the whole point of the prefetch arm)
     file_size = 64 * 1024 if smoke else 512 * 1024
     reads_per_node = 96 if smoke else 128
+    files_per_node = 16 if smoke else 32
+    # small files: the latency/request-handling-bound regime where write
+    # fan-in matters (the paper's many-small-files story, write side)
+    write_size = 8 * 1024 if smoke else 16 * 1024
+    # overlap arm: shard size comparable to the (halved) read phase, so
+    # neither lane degenerates — when owner-side serve dominates BOTH
+    # phases on the same node the overlap win collapses to ~0 by
+    # construction (serve sums across lanes; that is the honest model)
+    shard_bytes = (1 if smoke else 8) * 1024 * 1024
+    overlap_reads = reads_per_node // 2
     window = 4
     results: Dict = {"config": {"file_size": file_size,
                                 "reads_per_node": reads_per_node,
                                 "batch": BATCH, "window": window,
+                                "write_file_size": write_size,
+                                "write_files_per_node": files_per_node,
+                                "ckpt_shard_bytes": shard_bytes,
                                 "smoke": smoke},
                      "arms": []}
     for nodes in nodes_list:
@@ -302,6 +439,24 @@ def bench_json(*, nodes_list=(8, 64), smoke: bool = False) -> Dict:
             seed_arm["makespan_s"] / batched_arm["makespan_s"])
         entry["prefetch_speedup_vs_batched"] = (
             batched_arm["makespan_s"] / prefetched_arm["makespan_s"])
+        # write half: batched write_many vs the per-file write_file loop,
+        # plus checkpoint flush with/without prefetch-lane overlap
+        wm = run_write_one(nodes, write_size, files_per_node, CPU_NET,
+                           batched=True)
+        wp = run_write_one(nodes, write_size, files_per_node, CPU_NET,
+                           batched=False)
+        ov = run_checkpoint_overlap(nodes, file_size, count, CPU_NET,
+                                    reads_per_node=overlap_reads,
+                                    window=window, shard_bytes=shard_bytes,
+                                    chunk_bytes=max(shard_bytes // 4, 1))
+        entry["write"] = {
+            "write_many_makespan_s": wm["makespan_s"],
+            "perfile_makespan_s": wp["makespan_s"],
+            "write_speedup": wp["makespan_s"] / wm["makespan_s"],
+            "write_rpcs": wm["write_rpcs"],
+            "overlapped_makespan_s": ov["overlapped_makespan_s"],
+            "serialized_makespan_s": ov["serialized_makespan_s"],
+            "overlap_speedup": ov["overlap_speedup"]}
         results["arms"].append(entry)
     results["cache_policies"] = cache_policy_comparison()
     return results
@@ -309,12 +464,15 @@ def bench_json(*, nodes_list=(8, 64), smoke: bool = False) -> Dict:
 
 def main(*, batched: bool = False, prefetch: bool = False, window: int = 4,
          cache_mb: int = 0, epochs: Optional[int] = None,
-         arms: Optional[List[str]] = None) -> List[str]:
+         arms: Optional[List[str]] = None, write: bool = False) -> List[str]:
     if epochs is None:
         epochs = 2 if cache_mb else 1
     out = []
     for arm, fig in (("gpu", "fig5"), ("cpu", "fig6")):
         if arms and arm not in arms:
+            continue
+        if write:
+            out.extend(format_write_rows(arm, run_write(arm)))
             continue
         rows = run(arm, batched=batched, prefetch=prefetch, window=window,
                    cache_mb=cache_mb, epochs=epochs)
@@ -339,9 +497,14 @@ if __name__ == "__main__":
                     help="read passes per node (default 1; 2 when caching)")
     ap.add_argument("--arm", choices=["gpu", "cpu"], default=None,
                     help="run a single arm instead of both")
+    ap.add_argument("--write", action="store_true",
+                    help="write-path scaling: batched write_many (one round "
+                         "trip per (writer, owner) pair, write lane) vs the "
+                         "per-file write_file loop")
     args = ap.parse_args()
     for line in main(batched=args.batched, prefetch=args.prefetch,
                      window=args.window, cache_mb=args.cache_mb,
                      epochs=args.epochs,
-                     arms=[args.arm] if args.arm else None):
+                     arms=[args.arm] if args.arm else None,
+                     write=args.write):
         print(line)

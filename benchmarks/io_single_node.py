@@ -12,10 +12,13 @@ store (partition index + refcount cache + decompress-if-packed).
 Engine axes (beyond the paper): ``--batched`` drives the reads through the
 ``read_many`` batched API in training-step-sized chunks, ``--cache-mb``
 enables the per-node client read cache with a second epoch so repeated
-reads are served from RAM instead of the partition store, and
-``--prefetch`` stages upcoming steps into the cache through the
-clairvoyant window scheduler (EpochSchedule + PrefetchScheduler) so the
-demand loop reads RAM while the staging runs ahead.
+reads are served from RAM instead of the partition store, ``--prefetch``
+stages upcoming steps into the cache through the clairvoyant window
+scheduler (EpochSchedule + PrefetchScheduler) so the demand loop reads RAM
+while the staging runs ahead, and ``--checkpoint`` streams checkpoint
+shards through the session's CheckpointWriter DURING the prefetched epoch
+— the modeled makespan (write lane concurrent with prefetch/consume) is
+reported against the serialized write-then-prefetch sum.
 """
 from __future__ import annotations
 
@@ -29,6 +32,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.data.synthetic import fixed_size_files
+from repro.fanstore.api import FanStoreSession
 from repro.fanstore.cluster import FanStoreCluster, InterconnectModel
 from repro.fanstore.prefetch import EpochSchedule, PrefetchScheduler
 from repro.fanstore.prepare import prepare_dataset
@@ -78,6 +82,65 @@ def bench_fanstore(files: Dict[str, bytes], *, batched: bool = False,
                 total += len(cluster.read(0, p))
     dt = time.perf_counter() - t0
     return total / dt, epochs * len(paths) / dt
+
+
+def bench_checkpoint_overlap(files: Dict[str, bytes], *,
+                             shard_bytes: int = 8 * 1024 * 1024,
+                             num_shards: int = 4,
+                             chunk_bytes: int = 1024 * 1024,
+                             window: int = 4) -> Dict:
+    """Single-node checkpoint/prefetch overlap: stream ``num_shards``
+    checkpoint shards through the session's CheckpointWriter while the
+    clairvoyant scheduler stages the epoch. On one node the writer IS the
+    placement owner, so the whole flush books on the concurrent write lane
+    and the modeled makespan is max(consume, prefetch, write) — reported
+    against the serialized write-then-prefetch sum."""
+    def build():
+        blobs, _ = prepare_dataset(files, 4, compress=False)
+        cache_mb = sum(len(v) for v in files.values()) // (1024 * 1024) + 1
+        cluster = FanStoreCluster(1, cache_bytes=cache_mb * 1024 * 1024,
+                                  cache_policy="belady")
+        cluster.load_partitions(blobs, replication=1)
+        return cluster
+
+    def drive_epoch(cluster):
+        paths = sorted(files)
+        steps = [paths[s:s + BATCH] for s in range(0, len(paths), BATCH)]
+        pf = PrefetchScheduler(
+            cluster, EpochSchedule.from_trace({0: steps}, cluster), 0,
+            window_steps=window)
+        for step, chunk in enumerate(steps):
+            pf.ensure(step + window)
+            pf.wait_ready(step)
+            cluster.read_many(0, chunk, materialize=False)
+        pf.close()
+
+    def write_ckpt(cluster):
+        writer = FanStoreSession(cluster, 0).checkpoint_writer(
+            chunk_bytes=chunk_bytes)
+        payload = bytes(shard_bytes)
+        for i in range(num_shards):
+            writer.write_shard(f"ckpt/step_0/shard_{i:03d}.npy", payload)
+
+    overlap_cluster = build()
+    overlap_cluster.reset_clocks()
+    drive_epoch(overlap_cluster)
+    write_ckpt(overlap_cluster)
+    overlapped = overlap_cluster.makespan_s()
+
+    c1 = build()
+    c1.reset_clocks()
+    drive_epoch(c1)
+    prefetch_only = c1.makespan_s()
+    c2 = build()
+    c2.reset_clocks()
+    write_ckpt(c2)
+    write_only = c2.makespan_s()
+    serialized = prefetch_only + write_only
+    return {"overlapped_s": overlapped, "serialized_s": serialized,
+            "prefetch_s": prefetch_only, "write_s": write_only,
+            "ckpt_bytes": shard_bytes * num_shards,
+            "overlap_speedup": serialized / overlapped if overlapped else 1.0}
 
 
 def bench_disk(files: Dict[str, bytes], *, crossing_s: float = 0.0
@@ -138,9 +201,24 @@ def run(scale: float = 1.0, *, batched: bool = False, cache_mb: int = 0,
 
 
 def main(scale: float = 0.25, *, batched: bool = False, cache_mb: int = 0,
-         epochs: int = None, prefetch: bool = False) -> List[str]:
+         epochs: int = None, prefetch: bool = False,
+         checkpoint: bool = False) -> List[str]:
     if epochs is None:
         epochs = 2 if cache_mb else 1
+    if checkpoint:
+        out = ["table=fig3_checkpoint_overlap"]
+        for size, count in zip(FILE_SIZES[:2], BASE_COUNTS[:2]):
+            files = fixed_size_files(size, max(4, int(count * scale)),
+                                     entropy_bits=8)
+            r = bench_checkpoint_overlap(files)
+            out.append(
+                f"fig3ckpt,size={size//1024}KB,"
+                f"overlapped={r['overlapped_s']:.6f}s,"
+                f"serialized={r['serialized_s']:.6f}s,"
+                f"prefetch_only={r['prefetch_s']:.6f}s,"
+                f"write_only={r['write_s']:.6f}s,"
+                f"overlap_speedup={r['overlap_speedup']:.3f}")
+        return out
     out = ["table=fig3_single_node"]
     for r in run(scale, batched=batched, cache_mb=cache_mb, epochs=epochs,
                  prefetch=prefetch):
@@ -170,8 +248,12 @@ if __name__ == "__main__":
                     help="client read cache budget in MiB")
     ap.add_argument("--epochs", type=int, default=None,
                     help="read passes (default 1; 2 when caching)")
+    ap.add_argument("--checkpoint", action="store_true",
+                    help="stream checkpoint shards through CheckpointWriter "
+                         "during the prefetched epoch; report overlapped vs "
+                         "serialized modeled makespan")
     args = ap.parse_args()
     for line in main(args.scale, batched=args.batched,
                      cache_mb=args.cache_mb, epochs=args.epochs,
-                     prefetch=args.prefetch):
+                     prefetch=args.prefetch, checkpoint=args.checkpoint):
         print(line)

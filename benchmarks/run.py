@@ -12,8 +12,10 @@ Prints ``name,metric=value,...`` CSV-ish lines.
 ``--io-json PATH`` additionally (or, with ``--only io-json``, exclusively)
 writes the machine-readable BENCH_io.json perf snapshot: epoch makespan,
 hit rates, and bytes moved for the seed / batched / prefetched arms at 8
-and 64 nodes plus the LRU-vs-Belady-vs-2Q cache comparison. ``--smoke``
-shrinks it to the fast-lane CI variant (scripts/ci.sh fast).
+and 64 nodes, the write half (write_many vs per-file loop, checkpoint
+flush makespan with/without prefetch-lane overlap), plus the
+LRU-vs-Belady-vs-2Q cache comparison. ``--smoke`` shrinks it to the
+fast-lane CI variant (scripts/ci.sh fast).
 """
 from __future__ import annotations
 
@@ -39,13 +41,23 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
     for entry in result["arms"]:
         assert entry["prefetch_speedup_vs_batched"] > 1.0, (
             f"prefetch arm regressed at {entry['nodes']} nodes")
+        w = entry["write"]
+        assert w["write_speedup"] > 1.0, (
+            f"write_many no longer beats the per-file write loop at "
+            f"{entry['nodes']} nodes")
+        assert w["overlapped_makespan_s"] < w["serialized_makespan_s"], (
+            f"checkpoint/prefetch overlap regressed at "
+            f"{entry['nodes']} nodes")
     cp = result["cache_policies"]
     assert cp["belady_hit_rate"] > cp["lru_hit_rate"], (
         "Belady no longer beats LRU at equal byte budget")
     for entry in result["arms"]:
+        w = entry["write"]
         print(f"io_json,nodes={entry['nodes']},"
               f"batched_speedup={entry['batched_speedup']:.3f},"
-              f"prefetch_speedup={entry['prefetch_speedup_vs_batched']:.3f}",
+              f"prefetch_speedup={entry['prefetch_speedup_vs_batched']:.3f},"
+              f"write_speedup={w['write_speedup']:.3f},"
+              f"ckpt_overlap_speedup={w['overlap_speedup']:.3f}",
               flush=True)
     print(f"io_json,lru_hit={cp['lru_hit_rate']:.3f},"
           f"belady_hit={cp['belady_hit_rate']:.3f},"

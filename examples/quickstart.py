@@ -3,12 +3,17 @@
   1. make a many-small-files dataset,
   2. pack it into partitions (the paper's preparation step),
   3. stand up a 4-node transient store with replication,
-  4. read through the POSIX-style mount — including unmodified user code
-     via interception,
-  5. train a tiny LM from it for a handful of steps.
+  4. open a descriptor-based FanStoreSession — reads, writes, and
+     directory listings all through one surface, including unmodified
+     user code via interception,
+  5. write outputs back through the batched write path (payloads land on
+     their placement owners, visible cluster-wide on close),
+  6. train a tiny LM from it for a handful of steps.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -17,7 +22,7 @@ from repro.configs import get_smoke
 from repro.data.pipeline import PrefetchLoader
 from repro.data.sampler import GlobalUniformSampler
 from repro.data.synthetic import files_to_tokens, token_dataset, tokens_to_files
-from repro.fanstore import FanStoreCluster, FanStoreFS, prepare_dataset
+from repro.fanstore import FanStoreCluster, FanStoreSession, prepare_dataset
 from repro.fanstore.intercept import intercept
 from repro.models import build_model
 from repro.train.optimizer import OptimizerConfig
@@ -34,16 +39,31 @@ print(f"packed {report.num_files} files -> {report.num_partitions} partitions "
 cluster = FanStoreCluster(4, codec="lzss")
 cluster.load_partitions(blobs, replication=2)
 
-# 4. POSIX-ish access + interception of plain open() --------------------------
-fs = FanStoreFS(cluster, node_id=0)
-print("files visible:", fs.walk_count("/fanstore"))
-with intercept(fs):
-    first = sorted(files)[0]
-    data = open(f"/fanstore/{first}", "rb").read()
+# 4. one session per process: fds, batched verbs, interception ----------------
+session = FanStoreSession(cluster, node_id=0)
+print("files visible:", session.walk_count())
+first = sorted(files)[0]
+fd = session.open(f"/fanstore/{first}")            # descriptor-based read
+assert session.pread(fd, 16, 0) == files[first][:16]
+session.close(fd)
+with intercept(session):
+    data = open(f"/fanstore/{first}", "rb").read()     # unmodified user code
     assert data == files[first]
     print(f"read {first} through intercepted builtins.open: {len(data)} bytes")
+    fd = os.open("/fanstore/out/pred_000.bin", os.O_WRONLY | os.O_CREAT)
+    os.write(fd, b"\x07" * 64)                     # fd-level detour, too
+    os.close(fd)                                   # visible-on-close
 
-# 5. train a tiny LM straight off the store -----------------------------------
+# 5. batched write path: one round trip per (writer, owner) pair --------------
+peer = FanStoreSession(cluster, node_id=2)
+peer.write_many([(f"out/pred_{i:03d}.bin", bytes([i]) * 64)
+                 for i in range(1, 9)])
+assert session.listdir("/fanstore/out")            # outputs list everywhere
+assert session.read_many(["out/pred_004.bin"])[0] == bytes([4]) * 64
+print(f"wrote {len(session.listdir('/fanstore/out'))} outputs; "
+      f"write lane busy {cluster.clocks[2].write_s*1e6:.1f}us on node 2")
+
+# 6. train a tiny LM straight off the store -----------------------------------
 cfg = get_smoke("chatglm3-6b")
 model = build_model(cfg)
 ocfg = OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=20)
@@ -54,7 +74,7 @@ paths = sorted(files)
 sampler = GlobalUniformSampler(len(paths), 16, seed=0)
 loader = PrefetchLoader(
     sampler,
-    fetch=lambda i: cluster.read(i % 4, paths[i]),
+    fetch_many=lambda idxs: session.read_many([paths[i] for i in idxs]),
     decode=lambda blobs: {"tokens": jnp.asarray(files_to_tokens(blobs, 32))},
     num_threads=4)
 
@@ -63,4 +83,4 @@ for i, batch in enumerate(loader.batches(20)):
     if (i + 1) % 5 == 0:
         print(f"step {i+1:3d}  loss {float(metrics['loss']):.4f}")
 print(f"local hit rate {cluster.local_hit_rate():.2f} "
-      f"(replication=2 on 4 nodes + uniform sampling)")
+      f"(node 0's session, replication=2 on 4 nodes + uniform sampling)")

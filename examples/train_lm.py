@@ -20,7 +20,7 @@ from repro.configs.base import ModelConfig
 from repro.data.pipeline import PrefetchLoader
 from repro.data.sampler import GlobalUniformSampler
 from repro.data.synthetic import files_to_tokens, token_dataset, tokens_to_files
-from repro.fanstore import FanStoreCluster, prepare_dataset
+from repro.fanstore import FanStoreCluster, FanStoreSession, prepare_dataset
 from repro.models import build_model
 from repro.train.checkpoint import CheckpointManager, restore_checkpoint
 from repro.train.optimizer import OptimizerConfig
@@ -72,9 +72,19 @@ def main() -> None:
         sampler.state.epoch = manifest["extra"]["sampler_epoch"]
         print(f"resumed at step {start}")
 
+    # the unified client surface: each step's batch is one coalesced
+    # read_many through the session of the node whose turn it is
+    sessions = [FanStoreSession(cluster, nid) for nid in range(args.nodes)]
+    turn = {"n": 0}
+
+    def fetch_many(idxs):
+        s = sessions[turn["n"] % args.nodes]
+        turn["n"] += 1
+        return s.read_many([paths[i] for i in idxs])
+
     loader = PrefetchLoader(
         sampler,
-        fetch=lambda i: cluster.read(i % args.nodes, paths[i]),
+        fetch_many=fetch_many,
         decode=lambda bl: {"tokens": jnp.asarray(
             files_to_tokens(bl, args.seq_len))},
         num_threads=4)

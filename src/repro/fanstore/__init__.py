@@ -13,8 +13,10 @@ Layers:
   prefetch    clairvoyant epoch-horizon schedule + window prefetch driver
   accounting  per-node clocks + cluster aggregates for the benchmarks
   cluster     the composition of the above behind one deployment object
-  fs          POSIX-style file API under a /fanstore mount prefix
-  intercept   optional builtins.open/os.stat/os.listdir interception
+  api         FanStoreSession: the unified descriptor-based client surface
+              (fd table, batched read/write verbs, CheckpointWriter)
+  fs          deprecated POSIX-style file-object adapter over the session
+  intercept   optional path- and fd-level call interception
   prepare     the data-preparation program (files -> partitions)
 """
 from repro.fanstore.layout import Partition, pack_partition, iter_partition, FileRecord
@@ -30,6 +32,8 @@ from repro.fanstore.cache import (BeladyCache, ByteCache, ByteLRUCache,
 from repro.fanstore.cluster import FanStoreCluster
 from repro.fanstore.prefetch import (EpochSchedule, PrefetchScheduler,
                                      ScheduledRead)
+from repro.fanstore.api import (CheckpointWriter, FanStoreDirEntry,
+                                FanStoreSession)
 from repro.fanstore.fs import FanStoreFS
 from repro.fanstore.prepare import prepare_dataset
 
@@ -41,6 +45,7 @@ __all__ = [
     "FetchItem", "Transport", "ByteCache", "ByteLRUCache", "BeladyCache",
     "TwoQCache", "CacheStats", "make_cache",
     "EpochSchedule", "PrefetchScheduler", "ScheduledRead",
-    "NodeStore", "FanStoreCluster", "InterconnectModel", "FanStoreFS",
+    "NodeStore", "FanStoreCluster", "InterconnectModel",
+    "FanStoreSession", "FanStoreDirEntry", "CheckpointWriter", "FanStoreFS",
     "prepare_dataset",
 ]

@@ -39,6 +39,16 @@ class NodeClock:
     prefetch_bytes: int = 0
     prefetch_windows: int = 0
     prefetch_log: List[WindowAccount] = field(default_factory=list)
+    # write lane: output-file / checkpoint writes issued through the batched
+    # engine path (cluster.write_many, CheckpointWriter). Like prefetch it
+    # runs on the transport pool concurrently with the demand path, so it
+    # gets its own timeline — a checkpoint flush overlapped with an active
+    # prefetch window costs max(write, prefetch), not the sum. The legacy
+    # per-file write_file/commit_write path stays on consume_s (the seed's
+    # serialized demand write).
+    write_s: float = 0.0
+    write_bytes: int = 0
+    write_rpcs: int = 0
     # client-side read cache (repro.fanstore.cache), surfaced here so one
     # object answers "what did this node's I/O look like"
     cache_hits: int = 0
@@ -48,11 +58,13 @@ class NodeClock:
 
     @property
     def busy_s(self) -> float:
-        # consumption, service, and scheduled prefetch contend for the same
-        # NIC/cores but run on separate threads; a node's makespan is at
-        # least each and at most the sum — use max (full overlap) as the
-        # optimistic bound the paper's threaded workers approach.
-        return max(self.consume_s, self.serve_s, self.prefetch_s)
+        # consumption, service, scheduled prefetch, and batched writes
+        # contend for the same NIC/cores but run on separate threads; a
+        # node's makespan is at least each and at most the sum — use max
+        # (full overlap) as the optimistic bound the paper's threaded
+        # workers approach.
+        return max(self.consume_s, self.serve_s, self.prefetch_s,
+                   self.write_s)
 
     @property
     def cache_hit_rate(self) -> float:
@@ -92,6 +104,12 @@ class ClusterAccounting:
 
     def prefetch_bytes(self) -> int:
         return sum(c.prefetch_bytes for c in self.clocks.values())
+
+    def write_bytes(self) -> int:
+        return sum(c.write_bytes for c in self.clocks.values())
+
+    def write_rpcs(self) -> int:
+        return sum(c.write_rpcs for c in self.clocks.values())
 
     def local_hit_rate(self) -> float:
         # client-cache hits are served from node-local RAM: they count as

@@ -19,7 +19,14 @@ pluggable (paper §5.1/§6 plus the beyond-paper scaling seams):
 
 ``FanStoreCluster`` composes them behind the same public surface the seed
 monolith had (``read``/``stat``/``write_file``/...), plus the batched
-``read_many`` API the data pipeline and benchmarks use.
+``read_many``/``write_many`` APIs the data pipeline, checkpoint writer,
+and benchmarks use. Most callers should sit one level higher, on the
+descriptor-based :class:`repro.fanstore.api.FanStoreSession`.
+
+Output files are first-class citizens of the namespace: committed payloads
+live on the placement owner (``RingPlacement``-routable), reads of them ride
+the same local/remote/batched read machinery as inputs, and ``readdir``
+merges both namespaces.
 
 Also implemented here, beyond the paper's §5.6 (which punts resilience to
 checkpoints): replica failover, straggler mitigation via replica selection,
@@ -62,8 +69,11 @@ class FanStoreCluster:
             i: NodeStore(i, codec=codec) for i in range(num_nodes)}
         self.metadata = MetadataTable()        # replicated input metadata
         self.output_meta: Dict[int, Dict[str, StatRecord]] = {
-            i: {} for i in range(num_nodes)}   # distributed output metadata
-        self.output_data: Dict[str, Tuple[int, bytes]] = {}
+            i: {} for i in range(num_nodes)}   # per-owner output shards
+        # replicated view of committed outputs (path -> stat + owning node);
+        # payloads live on the placement owner's NodeStore output tier, NOT
+        # on the writer — placement is routed end-to-end through the ring
+        self.output_ns = MetadataTable()
         self.accounting = ClusterAccounting(range(num_nodes))
         self.placement: Placement = placement or ModuloPlacement(num_nodes)
         self.selector: ReplicaSelector = selector or LeastLoadedSelector()
@@ -186,15 +196,18 @@ class FanStoreCluster:
                          stored=rec.stored_size if rec else st.st_size,
                          compressed=compressed)
 
-    def _read_output(self, requester: int, path: str) -> bytes:
-        """Visible-until-finish: check distributed output metadata."""
-        owner = self.placement.owner(path)
-        st = self.output_meta[owner].get(path)
-        if st is None:
+    def _lookup(self, path: str) -> Tuple[StatRecord, FileLocation]:
+        """Resolve a path against the replicated input metadata, falling
+        back to the committed-output namespace (visible-until-finish).
+        Output locations point at the placement owner holding the payload,
+        so output reads ride the same local/remote/batched machinery as
+        input reads."""
+        hit = self.metadata.lookup(path)
+        if hit is None:
+            hit = self.output_ns.lookup(path)
+        if hit is None:
             raise FileNotFoundError(path)
-        _, data = self.output_data[path]
-        self.transport.account_output_read(requester, len(data))
-        return data
+        return hit
 
     def _choose_owner(self, loc: FileLocation, item: FetchItem,
                       pending_serve: Dict[int, float]) -> Optional[int]:
@@ -246,11 +259,7 @@ class FanStoreCluster:
         pending_serve: Dict[int, float] = {}
         for i, raw in enumerate(paths):
             path = raw.strip("/")
-            hit = self.metadata.lookup(path)
-            if hit is None:
-                out[i] = self._read_output(requester, path)
-                continue
-            st, loc = hit
+            st, loc = self._lookup(path)
             item = self._fetch_item(path, st, loc)
             if cache.enabled:
                 entry = cache.get(path, require_data=materialize)
@@ -259,7 +268,8 @@ class FanStoreCluster:
                     out[i] = entry.data if materialize else b""
                     continue
                 self.transport.account_cache_miss(requester)
-            if self.nodes[requester].has(path):
+            if self.nodes[requester].has(path) or \
+                    self.nodes[requester].has_output(path):
                 data = self.transport.fetch_local(requester, item,
                                                   materialize=materialize)
                 out[i] = data
@@ -373,46 +383,193 @@ class FanStoreCluster:
 
     def stat(self, path: str) -> StatRecord:
         st = self.metadata.stat(path)
-        if st is not None:
-            return st
-        owner = self.placement.owner(path.strip("/"))
-        st = self.output_meta[owner].get(path.strip("/"))
+        if st is None:
+            st = self.output_ns.stat(path)     # committed outputs + their dirs
         if st is None:
             raise FileNotFoundError(path)
         return st
 
     def readdir(self, path: str) -> List[str]:
+        """Directory listing over BOTH namespaces: immutable inputs and
+        committed output files (a written file lists as soon as its close
+        publishes the metadata; its parent dirs materialize with it)."""
         kids = self.metadata.readdir(path)
-        if kids is None:
+        okids = self.output_ns.readdir(path)
+        if kids is None and okids is None:
             raise FileNotFoundError(path)
-        return kids
+        return sorted(set(kids or []) | set(okids or []))
+
+    def is_dir(self, path: str) -> bool:
+        return self.metadata.is_dir(path) or self.output_ns.is_dir(path)
 
     # ---- writes ------------------------------------------------------------
     def write_file(self, writer: int, path: str, data: bytes) -> None:
-        """open-for-write + write + close, with visible-on-close semantics."""
+        """Deprecated shim (use :class:`repro.fanstore.api.FanStoreSession`
+        ``open``/``write``/``close`` or the batched :meth:`write_many`):
+        open-for-write + write + close with visible-on-close semantics, one
+        per-file round trip on the serialized demand lane — the seed's
+        synchronous writer."""
         path = path.strip("/")
         node = self.nodes[writer]
         node.write_begin(path)
         node.write_append(path, data)
         self.commit_write(writer, path)
 
-    def commit_write(self, writer: int, path: str) -> StatRecord:
-        """Close an open write: finish the buffer, enforce single-write,
-        publish the metadata to the placement-hash owner, account the
-        forward. Shared by ``write_file`` and the FS layer's ``close()``."""
+    def write_begin(self, writer: int, path: str) -> None:
+        """Open a new output file for append on the writer node. A path
+        someone already committed is only rejected at close/flush time
+        (visible-until-finish: opens are local, commits are global)."""
+        if writer in self.failed:
+            raise IOError(f"node {writer} is failed")
+        self.nodes[writer].write_begin(path.strip("/"))
+
+    def write_append(self, writer: int, path: str, data: bytes) -> int:
+        return self.nodes[writer].write_append(path.strip("/"), data)
+
+    def abort_write(self, writer: int, path: str) -> None:
+        """Discard an open write: drop the writer-side buffer AND any
+        chunks already streamed to the placement owner's staging — a
+        later writer of the same path must commit exactly its own bytes."""
+        path = path.strip("/")
+        self.nodes[writer].write_abort(path)
+        self.nodes[self.placement.owner(path)].drop_staging(writer, path)
+
+    def flush_write(self, writer: int, path: str, *,
+                    lane: str = "write") -> int:
+        """Stream the open write's buffered bytes to the placement owner
+        (fsync semantics minus the visibility: metadata publishes on close).
+        This is what lets :class:`repro.fanstore.api.CheckpointWriter`
+        overlap a shard's fabric shipment with producing the next chunk —
+        cost accrues on the concurrent ``write_s`` lane. Returns bytes
+        shipped."""
+        path = path.strip("/")
+        with self._lock:
+            if self.output_ns.lookup(path) is not None:
+                raise PermissionError(f"{path}: single-write violated")
+        chunk = self.nodes[writer].write_take(path)
+        if not chunk:
+            return 0
+        owner = self.placement.owner(path)
+        item = FetchItem(path=path, size=len(chunk), stored=len(chunk))
+        if owner == writer:
+            self.transport.put_local(writer, [(item, chunk)], lane=lane)
+        else:
+            self.transport.put_remote_batch(writer, owner, [(item, chunk)],
+                                            lane=lane, round_trips=1)
+        return len(chunk)
+
+    def commit_write(self, writer: int, path: str, *,
+                     lane: str = "consume") -> StatRecord:
+        """Close an open write: finish the buffer, ship the remainder to
+        the placement owner (payload AND metadata ride one message — the
+        payload is no longer stranded on the writer), enforce single-write,
+        and publish. Shared by ``write_file``, the FS layer's ``close()``
+        (both on the legacy serialized ``consume`` lane), and the session
+        fd path (concurrent ``write`` lane)."""
         path = path.strip("/")
         st, payload = self.nodes[writer].write_finish(path)
         owner = self.placement.owner(path)
+        item = FetchItem(path=path, size=len(payload), stored=len(payload))
+        if owner == writer:
+            self.transport.put_local(writer, [(item, payload)], lane=lane)
+        else:
+            self.transport.put_remote_batch(writer, owner, [(item, payload)],
+                                            lane=lane, round_trips=1)
+        return self._publish(writer, owner, path, st)
+
+    def _publish(self, writer: int, owner: int, path: str,
+                 st: StatRecord) -> StatRecord:
+        """Atomically commit the owner's staged chunks and publish the
+        output metadata; the losing writer of a race gets PermissionError
+        and its staged bytes are dropped (the committed payload survives)."""
         with self._lock:
-            if path in self.output_data:
+            if self.output_ns.lookup(path) is not None:
+                self.nodes[owner].drop_staging(writer, path)
                 raise PermissionError(f"{path}: single-write violated")
-            self.output_data[path] = (writer, payload)
+            self.nodes[owner].commit_output(writer, path)
+            self.output_ns.insert(path, st, FileLocation(
+                node_id=owner, partition_id=-1, record_index=-1))
             self.output_meta[owner][path] = st
-        clock = self.clocks[writer]
-        if owner != writer:
-            clock.consume_s += self.net.remote_cost(200)  # metadata forward
-        clock.consume_s += len(payload) / self.net.disk_bw_Bps
         return st
+
+    def write_many(self, writer: int, entries: Sequence[Tuple[str, bytes]],
+                   *, batched: bool = True, lane: str = "write"
+                   ) -> List[StatRecord]:
+        """Batched write: all payloads bound for one placement owner ride
+        ONE round trip — the write-side mirror of ``read_many``. Entries
+        are (path, payload) pairs; results are returned in input order.
+
+        ``batched=False`` degrades to per-file round trips (what a loop of
+        ``write_file`` calls pays) for benchmarking the fan-in win.
+        ``lane`` defaults to the concurrent write timeline so bulk output
+        flushes overlap demand reads and prefetch.
+        """
+        if writer in self.failed:
+            raise IOError(f"node {writer} is failed")
+        norm: List[Tuple[str, bytes]] = []
+        seen = set()
+        for raw, data in entries:
+            path = raw.strip("/")
+            if path in seen:
+                raise ValueError(f"{path}: duplicated in one write_many batch")
+            seen.add(path)
+            norm.append((path, bytes(data)))
+        with self._lock:       # fail the whole batch before shipping anything
+            for path, _ in norm:
+                if self.output_ns.lookup(path) is not None:
+                    raise PermissionError(f"{path}: single-write violated")
+        node = self.nodes[writer]
+        finished: List[Tuple[str, StatRecord, bytes, int]] = []
+        try:
+            for path, data in norm:
+                self.write_begin(writer, path)
+                node.write_append(path, data)
+            for path, _ in norm:
+                st, payload = node.write_finish(path)
+                finished.append((path, st, payload,
+                                 self.placement.owner(path)))
+        except BaseException:
+            for path, _ in norm:
+                self.abort_write(writer, path)
+            raise
+        groups: Dict[int, List[Tuple[FetchItem, bytes]]] = {}
+        for path, st, payload, owner in finished:
+            item = FetchItem(path=path, size=len(payload), stored=len(payload))
+            groups.setdefault(owner, []).append((item, payload))
+        for owner, pairs in groups.items():
+            if owner == writer:
+                self.transport.put_local(writer, pairs, lane=lane)
+            elif batched:
+                self.transport.put_remote_batch(writer, owner, pairs,
+                                                lane=lane, round_trips=1)
+            else:
+                for pair in pairs:
+                    self.transport.put_remote_batch(writer, owner, [pair],
+                                                    lane=lane, round_trips=1)
+        # publish the WHOLE batch under one lock: a concurrent conflicting
+        # commit fails every entry (staging dropped), never a half-batch
+        with self._lock:
+            for path, st, _, owner in finished:
+                if self.output_ns.lookup(path) is not None:
+                    for p, _, _, o in finished:
+                        self.nodes[o].drop_staging(writer, p)
+                    raise PermissionError(f"{path}: single-write violated")
+            out = []
+            for path, st, _, owner in finished:
+                self.nodes[owner].commit_output(writer, path)
+                self.output_ns.insert(path, st, FileLocation(
+                    node_id=owner, partition_id=-1, record_index=-1))
+                self.output_meta[owner][path] = st
+                out.append(st)
+        return out
+
+    def write_many_async(self, writer: int,
+                         entries: Sequence[Tuple[str, bytes]], *,
+                         batched: bool = True, lane: str = "write"
+                         ) -> "Future[List[StatRecord]]":
+        """Batched write on the transport's I/O pool; returns a Future."""
+        return self.transport.submit(self.write_many, writer, list(entries),
+                                     batched=batched, lane=lane)
 
     # ---- accounting --------------------------------------------------------
     def reset_clocks(self) -> None:

@@ -1,72 +1,61 @@
-"""POSIX-style interface over a FanStore cluster (paper §5.5).
+"""POSIX-style file-object interface over a FanStore cluster (paper §5.5).
 
-The real FanStore detours glibc ``open/read/close/stat/...`` with binary
-interception; there is no Python analogue of patching compiled libc calls, so
-this layer exposes the same surface as a file-object API rooted at a mount
-prefix (default ``/fanstore``), and :mod:`repro.fanstore.intercept` optionally
-monkeypatches ``builtins.open`` / ``os.stat`` / ``os.listdir`` so unmodified
-user code that touches ``/fanstore/...`` paths transparently hits the store —
-the closest user-space equivalent of the paper's detours.
+DEPRECATED surface: ``FanStoreFS``/``FanStoreFile`` are kept as thin
+adapters over the descriptor-based :class:`repro.fanstore.api.FanStoreSession`
+so pre-session call sites keep working unchanged. New code should use the
+session directly — it exposes the same namespace plus the fd-level verbs
+(``pread``/``pwrite``/``fsync``/``opendir``) and the batched write path.
 
-Consistency surface (paper §3.5): multi-read / single-write. Reads are
-whole-file-sequential but ``seek``/partial ``read`` work (the cache holds the
-full decompressed payload). Writes go to new paths only and become visible
-on ``close()``.
+Semantics are unchanged: multi-read / single-write (§3.5), whole-payload
+materialization at open so ``seek``/partial ``read`` are RAM operations,
+writes visible on ``close()``. The FS adapter commits on the legacy
+serialized ``consume`` lane, byte-for-byte the ``cluster.write_file``
+accounting (regression-pinned).
 """
 from __future__ import annotations
 
 import io
 import os
-from typing import List, Optional
+from typing import List
 
+from repro.fanstore.api import MOUNT, FanStoreSession
 from repro.fanstore.cluster import FanStoreCluster
 from repro.fanstore.metadata import StatRecord
 
-MOUNT = "/fanstore"
+__all__ = ["MOUNT", "FanStoreFile", "FanStoreFS"]
 
 
 class FanStoreFile(io.RawIOBase):
-    """A read- or write-mode descriptor against the store."""
+    """A read- or write-mode file object wrapping one session descriptor."""
 
-    def __init__(self, fs: "FanStoreFS", path: str, mode: str):
+    def __init__(self, session: FanStoreSession, path: str, mode: str):
         super().__init__()
-        self._fs = fs
+        self._session = session
         self._path = path
-        self._mode = mode
-        self._pos = 0
-        if "r" in mode:
-            self._data: Optional[bytes] = fs.cluster.read(fs.node_id, path)
-            self._writing = False
-        elif "w" in mode or "x" in mode:
-            self._data = None
-            self._writing = True        # bytes live in the NodeStore buffer
-            fs.cluster.nodes[fs.node_id].write_begin(path)
-        else:
-            raise ValueError(f"unsupported mode {mode!r}")
+        self._writing = session._writing_from(mode)
+        self._fd = session.open(path, mode)
+
+    @property
+    def fd(self) -> int:
+        return self._fd
 
     # -- reads --
     def readable(self) -> bool:
-        return self._data is not None
+        return not self._writing
 
     def read(self, size: int = -1) -> bytes:
-        if self._data is None:
+        if self._writing:
             raise io.UnsupportedOperation("not open for reading")
-        if size is None or size < 0:
-            out = self._data[self._pos:]
-            self._pos = len(self._data)
-        else:
-            out = self._data[self._pos: self._pos + size]
-            self._pos += len(out)
-        return out
+        return self._session.read(self._fd, -1 if size is None else size)
 
     def seekable(self) -> bool:
-        return self._data is not None
+        return not self._writing
 
     def seek(self, offset: int, whence: int = os.SEEK_SET) -> int:
-        base = {os.SEEK_SET: 0, os.SEEK_CUR: self._pos,
-                os.SEEK_END: len(self._data or b"")}[whence]
-        self._pos = max(0, base + offset)
-        return self._pos
+        # nonstandard whence -> ValueError; SEEK_END during a write ->
+        # io.UnsupportedOperation (size is undefined until close) — the
+        # session's lseek enforces both
+        return self._session.lseek(self._fd, offset, whence)
 
     # -- writes --
     def writable(self) -> bool:
@@ -75,58 +64,72 @@ class FanStoreFile(io.RawIOBase):
     def write(self, data) -> int:
         if not self._writing:
             raise io.UnsupportedOperation("not open for writing")
-        b = bytes(data)
-        self._fs.cluster.nodes[self._fs.node_id].write_append(self._path, b)
-        return len(b)
+        return self._session.write(self._fd, bytes(data))
+
+    def flush(self) -> None:
+        # file-object flush is a buffer no-op (bytes ship on close, the
+        # legacy visible-on-close contract); use session.fsync for the
+        # streaming write lane
+        super().flush()
 
     def close(self) -> None:
         if self.closed:
             return
-        writing, self._writing = self._writing, False
         try:
-            if writing:
-                # route through the cluster's commit helper so the FS layer
-                # gets the same single-write enforcement + metadata-forward
-                # accounting as cluster.write_file
-                self._fs.cluster.commit_write(self._fs.node_id, self._path)
+            if self._session.owns_fd(self._fd):
+                self._session.close(self._fd)
         finally:
             super().close()
 
 
 class FanStoreFS:
-    """The per-process client: node-local view of the global namespace."""
+    """Deprecated per-process client adapter; see ``FanStoreSession``.
+
+    The FS adapter pins the legacy behaviors: paths must be mount-prefixed,
+    modes must be binary, and write commits account on the serialized
+    demand lane exactly like ``cluster.write_file``.
+    """
 
     def __init__(self, cluster: FanStoreCluster, node_id: int, *,
                  mount: str = MOUNT):
+        self.session = FanStoreSession(cluster, node_id, mount=mount,
+                                       lane="consume")
         self.cluster = cluster
         self.node_id = node_id
-        self.mount = mount.rstrip("/")
+        self.mount = self.session.mount
 
     def resolve(self, path: str) -> str:
         """Strip the mount prefix; reject paths outside the mount."""
+        path = os.fspath(path)
         if not path.startswith(self.mount + "/") and path != self.mount:
-            raise FileNotFoundError(f"{path}: outside FanStore mount {self.mount}")
-        return path[len(self.mount):].strip("/")
+            raise FileNotFoundError(
+                f"{path}: outside FanStore mount {self.mount}")
+        return self.session.resolve(path)
 
     def owns(self, path: str) -> bool:
-        return path == self.mount or path.startswith(self.mount + "/")
+        return self.session.owns(path)
 
     def open(self, path: str, mode: str = "rb") -> FanStoreFile:
         if "b" not in mode:
             raise ValueError("FanStore is a binary store; use 'rb'/'wb'")
-        return FanStoreFile(self, self.resolve(path), mode.replace("b", ""))
+        self.resolve(path)                     # enforce mount-prefixed paths
+        return FanStoreFile(self.session, path, mode)
 
     def read_many(self, paths: List[str]) -> List[bytes]:
         """Batched whole-file reads through the engine: one modeled round
         trip per (this node, owner) pair instead of one per file."""
-        return self.cluster.read_many(self.node_id,
-                                      [self.resolve(p) for p in paths])
+        return self.session.read_many([self.resolve(p) for p in paths])
 
     def stat(self, path: str) -> StatRecord:
-        return self.cluster.stat(self.resolve(path))
+        return self.session.stat(self.resolve(path))
 
     def listdir(self, path: str) -> List[str]:
-        return self.cluster.readdir(self.resolve(path))
+        self.resolve(path)                     # reject paths outside the mount
+        return self.session.listdir(path)
+
+    def scandir(self, path: str):
+        self.resolve(path)
+        return self.session.scandir(path)
 
     def exists(self, path: str) -> bool:
         try:
@@ -137,15 +140,4 @@ class FanStoreFS:
 
     def walk_count(self, path: str = "") -> int:
         """The start-of-training metadata traversal (paper §3.3): count files."""
-        rel = self.resolve(path) if path else ""
-        todo = [rel]
-        n = 0
-        while todo:
-            d = todo.pop()
-            for name in self.cluster.readdir(d):
-                child = f"{d}/{name}" if d else name
-                if self.cluster.metadata.is_dir(child):
-                    todo.append(child)
-                else:
-                    n += 1
-        return n
+        return self.session.walk_count(path)

@@ -1,13 +1,24 @@
 """User-space call interception (paper §5.5, Python-idiomatic equivalent).
 
 The paper detours glibc entry points so unmodified binaries hit FanStore.
-In-process Python the analogous seam is the callable itself: we patch
-``builtins.open``, ``os.stat``, ``os.listdir`` and ``os.path.exists`` to
-route any path under the mount prefix into a :class:`FanStoreFS`, and fall
-through to the real implementations otherwise. Use as a context manager::
+In-process Python the analogous seam is the callable itself. Two levels:
+
+* path-level: ``builtins.open``, ``os.stat``, ``os.listdir``,
+  ``os.scandir``, ``os.path.exists`` and ``os.path.getsize`` route any
+  path under the mount prefix into the session;
+* fd-level (the part a real detour library must get right): ``os.open``
+  returns a session descriptor (numbered from ``FD_BASE``, far above any
+  real fd), and ``os.read``/``os.write``/``os.lseek``/``os.close``/
+  ``os.fstat`` route by descriptor value — FanStore fds to the session's
+  descriptor table, everything else to the real syscalls.
+
+Use as a context manager::
 
     with intercept(fs):
-        data = open("/fanstore/train/img_000.bin", "rb").read()
+        fd = os.open("/fanstore/out/gen.bin", os.O_WRONLY | os.O_CREAT)
+        os.write(fd, b"payload")
+        os.close(fd)                       # visible-on-close commit
+        data = open("/fanstore/out/gen.bin", "rb").read()
 
 DESIGN.md §2 records why the binary-detour mechanism itself has no TPU or
 Python analogue; this is the closest faithful seam.
@@ -17,49 +28,131 @@ from __future__ import annotations
 import builtins
 import contextlib
 import os
-from typing import Iterator
+from typing import Iterator, Union
 
+from repro.fanstore.api import FanStoreSession
 from repro.fanstore.fs import FanStoreFS
 
 
 @contextlib.contextmanager
-def intercept(fs: FanStoreFS) -> Iterator[FanStoreFS]:
+def intercept(client: Union[FanStoreFS, FanStoreSession]
+              ) -> Iterator[Union[FanStoreFS, FanStoreSession]]:
+    """Patch the path- and fd-level entry points to detour mount-prefixed
+    paths (and session descriptors) into ``client`` — a ``FanStoreSession``
+    or the deprecated ``FanStoreFS`` adapter (whose session is used)."""
+    session = client.session if isinstance(client, FanStoreFS) else client
     real_open = builtins.open
     real_stat = os.stat
     real_listdir = os.listdir
+    real_scandir = os.scandir
     real_exists = os.path.exists
+    real_getsize = os.path.getsize
+    real_os_open = os.open
+    real_os_read = os.read
+    real_os_write = os.write
+    real_os_lseek = os.lseek
+    real_os_close = os.close
+    real_os_fstat = os.fstat
 
+    def _ours(path) -> bool:
+        return isinstance(path, (str, os.PathLike)) and \
+            session.owns(os.fspath(path))
+
+    def _stat_result(st) -> os.stat_result:
+        return os.stat_result((st.st_mode, st.st_ino, st.st_dev, st.st_nlink,
+                               st.st_uid, st.st_gid, st.st_size,
+                               int(st.st_atime), int(st.st_mtime),
+                               int(st.st_ctime)))
+
+    # ---- path level --------------------------------------------------------
     def _open(path, mode="r", *a, **kw):
-        if isinstance(path, (str, os.PathLike)) and fs.owns(os.fspath(path)):
-            return fs.open(os.fspath(path), mode if "b" in mode else mode + "b")
+        if _ours(path):
+            from repro.fanstore.fs import FanStoreFile
+            return FanStoreFile(session, os.fspath(path),
+                                mode if "b" in mode else mode + "b")
         return real_open(path, mode, *a, **kw)
 
     def _stat(path, *a, **kw):
-        if isinstance(path, (str, os.PathLike)) and fs.owns(os.fspath(path)):
-            st = fs.stat(os.fspath(path))
-            return os.stat_result((st.st_mode, st.st_ino, st.st_dev, st.st_nlink,
-                                   st.st_uid, st.st_gid, st.st_size,
-                                   int(st.st_atime), int(st.st_mtime), int(st.st_ctime)))
+        if _ours(path):
+            return _stat_result(session.stat(os.fspath(path)))
         return real_stat(path, *a, **kw)
 
     def _listdir(path=".", *a, **kw):
-        if isinstance(path, (str, os.PathLike)) and fs.owns(os.fspath(path)):
-            return fs.listdir(os.fspath(path))
+        if _ours(path):
+            return session.listdir(os.fspath(path))
         return real_listdir(path, *a, **kw)
 
+    def _scandir(path=".", *a, **kw):
+        if _ours(path):
+            return session.scandir(os.fspath(path))
+        return real_scandir(path, *a, **kw)
+
     def _exists(path):
-        if isinstance(path, (str, os.PathLike)) and fs.owns(os.fspath(path)):
-            return fs.exists(os.fspath(path))
+        if _ours(path):
+            return session.exists(os.fspath(path))
         return real_exists(path)
+
+    def _getsize(path):
+        if _ours(path):
+            return session.getsize(os.fspath(path))
+        return real_getsize(path)
+
+    # ---- fd level ----------------------------------------------------------
+    def _os_open(path, flags, *a, **kw):
+        if _ours(path):
+            return session.open(os.fspath(path), flags)
+        return real_os_open(path, flags, *a, **kw)
+
+    def _os_read(fd, n, *a, **kw):
+        if session.owns_fd(fd):
+            return session.read(fd, n)
+        return real_os_read(fd, n, *a, **kw)
+
+    def _os_write(fd, data, *a, **kw):
+        if session.owns_fd(fd):
+            return session.write(fd, data)
+        return real_os_write(fd, data, *a, **kw)
+
+    def _os_lseek(fd, pos, how, *a, **kw):
+        if session.owns_fd(fd):
+            return session.lseek(fd, pos, how)
+        return real_os_lseek(fd, pos, how, *a, **kw)
+
+    def _os_close(fd, *a, **kw):
+        if session.owns_fd(fd):
+            session.close(fd)
+            return None
+        return real_os_close(fd, *a, **kw)
+
+    def _os_fstat(fd, *a, **kw):
+        if session.owns_fd(fd):
+            return _stat_result(session.fstat(fd))
+        return real_os_fstat(fd, *a, **kw)
 
     builtins.open = _open
     os.stat = _stat
     os.listdir = _listdir
+    os.scandir = _scandir
     os.path.exists = _exists
+    os.path.getsize = _getsize
+    os.open = _os_open
+    os.read = _os_read
+    os.write = _os_write
+    os.lseek = _os_lseek
+    os.close = _os_close
+    os.fstat = _os_fstat
     try:
-        yield fs
+        yield client
     finally:
         builtins.open = real_open
         os.stat = real_stat
         os.listdir = real_listdir
+        os.scandir = real_scandir
         os.path.exists = real_exists
+        os.path.getsize = real_getsize
+        os.open = real_os_open
+        os.read = real_os_read
+        os.write = real_os_write
+        os.lseek = real_os_lseek
+        os.close = real_os_close
+        os.fstat = real_os_fstat

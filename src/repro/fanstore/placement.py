@@ -8,6 +8,11 @@ Two concerns, two pluggable protocols:
   hash; it is not). ``RingPlacement`` wraps a true consistent-hash ring with
   virtual nodes so membership changes move only O(changed/total) keys —
   the property :mod:`repro.train.elastic` builds its rebalance plans on.
+  Output files route through this end-to-end: ``owner(path)`` decides not
+  just the metadata shard but where the committed PAYLOAD lives — the
+  write path (``write_many``/``commit_write``) ships bytes to that node's
+  output tier, so under ``RingPlacement`` written outputs inherit the same
+  elastic-membership story as ring-placed input partitions.
 * :class:`ReplicaSelector` — given the live owners of a file and the current
   per-node load, pick who serves this read. ``LeastLoadedSelector`` is the
   straggler mitigation the cluster has always used; ``PowerOfTwoSelector``

@@ -25,6 +25,12 @@ scale. Two pieces:
   requester's client cache so the demand-path ``read_many`` hits at RAM
   speed. Prefetch cost accrues on the ``NodeClock.prefetch_s`` lane, so
   epoch makespan models I/O hidden behind compute instead of serializing.
+
+The write half mirrors this: checkpoint flushes issued through
+:class:`repro.fanstore.api.CheckpointWriter` land on the concurrent
+``NodeClock.write_s`` lane, so a shard shipped while a prefetch window is
+in flight costs ``max(prefetch, write)`` in the epoch makespan — the two
+scheduled lanes overlap each other as well as the demand timeline.
 """
 from __future__ import annotations
 

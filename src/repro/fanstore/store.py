@@ -9,7 +9,12 @@ Each compute node runs one ``NodeStore`` holding:
     (paper: uniform random access defeats LRU; evict-on-last-close instead),
   * write buffers for output files: bytes are concatenated in RAM and the
     metadata becomes visible only when ``close()`` forwards it to the node
-    chosen by the placement hash (visible-until-finish consistency).
+    chosen by the placement hash (visible-until-finish consistency). The
+    write lane may stream chunks ahead of close (``write_take``); the
+    placement owner stages them per (writer, path) and joins them at commit,
+  * the output tier: committed payloads for files this node owns as the
+    placement target — outputs are served like any other local file
+    (``open_local``/``serve_remote`` fall back to it).
 """
 from __future__ import annotations
 
@@ -30,10 +35,21 @@ class _CacheEntry:
 @dataclass
 class _WriteBuffer:
     chunks: List[bytes] = field(default_factory=list)
+    flushed: int = 0        # bytes already streamed to the placement owner
+    buffered: int = 0       # bytes in chunks (kept so size checks are O(1))
 
     def append(self, data: bytes) -> int:
         self.chunks.append(bytes(data))
+        self.buffered += len(data)
         return len(data)
+
+    def take(self) -> bytes:
+        """Drain buffered-but-unflushed bytes (streaming fsync)."""
+        data = b"".join(self.chunks)
+        self.chunks.clear()
+        self.flushed += len(data)
+        self.buffered = 0
+        return data
 
     def getvalue(self) -> bytes:
         return b"".join(self.chunks)
@@ -51,6 +67,11 @@ class NodeStore:
         self._index: Dict[str, Tuple[int, FileRecord]] = {}
         self._cache: Dict[str, _CacheEntry] = {}
         self._writes: Dict[str, _WriteBuffer] = {}
+        # output tier (this node as the placement owner of written files):
+        # committed payloads plus per-(writer, path) staging for chunks
+        # streamed ahead of close() by the write lane
+        self._outputs: Dict[str, bytes] = {}
+        self._staging: Dict[Tuple[int, str], List[bytes]] = {}
         # counters for benchmarks / tests
         self.stats = {"local_opens": 0, "cache_hits": 0, "evictions": 0,
                       "bytes_read": 0, "bytes_served": 0, "decompressed": 0}
@@ -91,7 +112,12 @@ class NodeStore:
 
     # ---- reads (local tier) ------------------------------------------------
     def open_local(self, path: str) -> bytes:
-        """Open+read a local file: refcount++ and return (cached) bytes."""
+        """Open+read a local file: refcount++ and return (cached) bytes.
+
+        Falls back to the output tier (files this node owns as the
+        placement target of committed writes); outputs are RAM-resident
+        already, so they bypass the refcount cache.
+        """
         entry = self._cache.get(path)
         if entry is not None:
             entry.refcount += 1
@@ -99,6 +125,11 @@ class NodeStore:
             return entry.data
         hit = self._index.get(path)
         if hit is None:
+            out = self._outputs.get(path)
+            if out is not None:
+                self.stats["local_opens"] += 1
+                self.stats["bytes_read"] += len(out)
+                return out
             raise FileNotFoundError(path)
         pid, rec = hit
         blob = self._partitions[pid]
@@ -152,18 +183,59 @@ class NodeStore:
             raise IOError(f"{path}: not open for write")
         return buf.append(data)
 
-    def write_finish(self, path: str) -> Tuple[StatRecord, bytes]:
-        """close() on a written file: returns the final stat + payload.
+    def write_take(self, path: str) -> bytes:
+        """Drain the open write's unflushed bytes (streaming fsync); the
+        write stays open and the drained bytes count toward the final stat."""
+        buf = self._writes.get(path)
+        if buf is None:
+            raise IOError(f"{path}: not open for write")
+        return buf.take()
 
-        The caller (cluster) forwards the metadata entry to the placement-hash
-        owner; only then does the file become visible.
+    def write_size(self, path: str) -> int:
+        """Bytes written so far (flushed + buffered) on an open write."""
+        buf = self._writes.get(path)
+        if buf is None:
+            raise IOError(f"{path}: not open for write")
+        return buf.flushed + buf.buffered
+
+    def write_abort(self, path: str) -> None:
+        self._writes.pop(path, None)
+
+    def write_finish(self, path: str) -> Tuple[StatRecord, bytes]:
+        """close() on a written file: final stat (all bytes, including any
+        already streamed to the owner) + the remaining unflushed payload.
+
+        The caller (cluster) ships the remainder to the placement owner and
+        publishes the metadata; only then does the file become visible.
         """
         buf = self._writes.pop(path, None)
         if buf is None:
             raise IOError(f"{path}: not open for write")
         data = buf.getvalue()
-        return StatRecord.for_data(len(data)), data
+        return StatRecord.for_data(buf.flushed + len(data)), data
 
     @property
     def pending_writes(self) -> int:
         return len(self._writes)
+
+    # ---- output tier (this node as placement owner) ------------------------
+    def stage_output(self, writer: int, path: str, chunk: bytes) -> None:
+        """Receive one streamed chunk of an in-flight write. Staging is
+        keyed by (writer, path) so two racing writers never interleave."""
+        self._staging.setdefault((writer, path), []).append(chunk)
+
+    def drop_staging(self, writer: int, path: str) -> None:
+        self._staging.pop((writer, path), None)
+
+    def commit_output(self, writer: int, path: str) -> bytes:
+        """Join the writer's staged chunks into the committed payload."""
+        data = b"".join(self._staging.pop((writer, path), []))
+        self._outputs[path] = data
+        return data
+
+    def has_output(self, path: str) -> bool:
+        return path in self._outputs
+
+    @property
+    def output_bytes(self) -> int:
+        return sum(len(v) for v in self._outputs.values())

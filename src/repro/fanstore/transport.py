@@ -22,6 +22,12 @@ tuples and it (a) performs the actual payload movement against the
   lookahead window) spanning many batches, accounted on the concurrent
   ``NodeClock.prefetch_s`` timeline so makespan models I/O hidden behind
   compute.
+* ``put_local`` / ``put_remote_batch`` — the write half, symmetric with the
+  read half: output payload chunks ship TO the placement owner (batched:
+  one round trip per (writer, owner) group), accounted on the concurrent
+  ``NodeClock.write_s`` lane so checkpoint flushes overlap the prefetch and
+  demand timelines instead of serializing in front of them. The legacy
+  ``write_file`` path books the same movement onto ``consume_s``.
 
 ``submit``/``fetch_batch_async`` run any fetch on a shared thread pool and
 return a ``concurrent.futures.Future`` so data pipelines can overlap the
@@ -225,10 +231,59 @@ class Transport:
         oc.serve_s += stored / self.net.bandwidth_Bps
         oc.bytes_out += stored
 
-    # ---- output tier (payload comes from the shared output table) ----------
-    def account_output_read(self, requester: int, nbytes: int) -> None:
+    # ---- write path (output payloads ship TO the placement owner) ----------
+    def put_local(self, node_id: int, pairs: Sequence[Tuple[FetchItem, bytes]],
+                  *, lane: str = "write") -> None:
+        """Persist output chunks on the writer's own store (writer == owner):
+        per-chunk SSD-tier flush cost on the writer's chosen lane."""
+        node = self.nodes[node_id]
+        total = 0
+        cost = 0.0
+        for item, data in pairs:
+            node.stage_output(node_id, item.path, data)
+            total += item.size
+            cost += self.net.open_overhead_s + item.size / self.net.disk_bw_Bps
         with self._lock:
-            self.clocks[requester].consume_s += self.net.remote_cost(nbytes)
+            self._accrue_write(node_id, cost, total, len(pairs), lane)
+
+    def put_remote_batch(self, writer: int, owner: int,
+                         pairs: Sequence[Tuple[FetchItem, bytes]], *,
+                         lane: str = "write",
+                         round_trips: Optional[int] = None) -> None:
+        """Ship output chunks to the placement owner. With ``round_trips=1``
+        (the batched ``write_many`` fan-in) K chunks for one owner ride ONE
+        message: the writer pays ``latency_s`` once on its lane and the
+        owner handles one request (one ``open_overhead_s``) before the
+        per-byte NIC + SSD-flush costs — the exact mirror of
+        ``fetch_remote_batch`` on the read side. The carried metadata
+        publish rides the same message (no separate forward)."""
+        if not pairs:
+            return
+        node = self.nodes[owner]
+        for item, data in pairs:
+            node.stage_output(writer, item.path, data)
+        trips = len(pairs) if round_trips is None else round_trips
+        stored = sum(item.size for item, _ in pairs)
+        with self._lock:
+            cost = trips * self.net.latency_s + stored / self.net.bandwidth_Bps
+            self._accrue_write(writer, cost, stored, trips, lane)
+            oc = self.clocks[owner]
+            oc.serve_s += trips * self.net.open_overhead_s
+            oc.serve_s += stored / self.net.bandwidth_Bps
+            oc.serve_s += stored / self.net.disk_bw_Bps
+
+    def _accrue_write(self, node_id: int, cost: float, nbytes: int,
+                      rpcs: int, lane: str) -> None:
+        """Book writer-side cost: ``lane="write"`` is the concurrent write
+        timeline (overlaps consume/prefetch in ``busy_s``); ``"consume"``
+        is the legacy serialized path ``write_file``/``commit_write`` keeps."""
+        clock = self.clocks[node_id]
+        if lane == "write":
+            clock.write_s += cost
+            clock.write_bytes += nbytes
+            clock.write_rpcs += rpcs
+        else:
+            clock.consume_s += cost
 
     # ---- cache tier (accounting only; payload comes from the cache) --------
     def account_cache_hit(self, node_id: int, item: FetchItem) -> None:

@@ -5,8 +5,14 @@ TPU with the full ones — the driver code is identical; only --preset and the
 mesh change. Demonstrates the whole system:
 
   dataset -> fanstore partitions -> cluster (simulated nodes) ->
+  FanStoreSession (descriptor API, batched read_many per step) ->
   PrefetchLoader (threads) -> [optional device-store all_to_all fetch] ->
   train_step (auto or int8 grad sync) -> CheckpointManager -> resume
+
+Checkpoints can additionally stream through the FanStore engine itself
+(--ckpt-fanstore): shards chunk through the session's CheckpointWriter on
+the concurrent write lane, so the modeled clocks show checkpoint I/O
+overlapped with the data plane instead of serialized in front of it.
 
 Usage (CPU example, ~1 minute):
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-72b \
@@ -26,10 +32,12 @@ from repro.configs import ARCH_IDS, get_config, get_smoke
 from repro.data.pipeline import PrefetchLoader
 from repro.data.sampler import GlobalUniformSampler, StratifiedSampler
 from repro.data.synthetic import files_to_tokens, token_dataset, tokens_to_files
+from repro.fanstore.api import FanStoreSession
 from repro.fanstore.cluster import FanStoreCluster
 from repro.fanstore.prepare import prepare_dataset
 from repro.models import build_model
-from repro.train.checkpoint import CheckpointManager, restore_checkpoint
+from repro.train.checkpoint import (CheckpointManager, restore_checkpoint,
+                                    save_to_session)
 from repro.train.optimizer import OptimizerConfig
 from repro.train.train_step import init_state, make_train_step
 
@@ -51,6 +59,10 @@ def main() -> None:
                     choices=["uniform", "stratified"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--ckpt-fanstore", action="store_true",
+                    help="also stream checkpoint shards through the "
+                         "FanStore session write path (concurrent write "
+                         "lane, placement-owned outputs)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--io-threads", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
@@ -83,15 +95,24 @@ def main() -> None:
         sampler = GlobalUniformSampler(args.num_samples, args.global_batch,
                                        seed=args.seed)
 
-    def fetch(idx: int) -> bytes:
-        node = idx % args.nodes        # reading process round-robins nodes
-        return cluster.read(node, paths[idx])
+    # one descriptor-based session per simulated node; every read and write
+    # below goes through this surface (no raw cluster calls)
+    sessions = {nid: FanStoreSession(cluster, nid)
+                for nid in range(args.nodes)}
+    step_counter = {"n": 0}
+
+    def fetch_many(idxs) -> list:
+        # each training step's batch is ONE coalesced read_many on the
+        # node whose turn it is (one modeled round trip per owner)
+        node = step_counter["n"] % args.nodes
+        step_counter["n"] += 1
+        return sessions[node].read_many([paths[i] for i in idxs])
 
     def decode(blobs_list):
         return {"tokens": jnp.asarray(files_to_tokens(blobs_list,
                                                       args.seq_len))}
 
-    loader = PrefetchLoader(sampler, fetch, decode,
+    loader = PrefetchLoader(sampler, fetch_many=fetch_many, decode=decode,
                             num_threads=args.io_threads, depth=2)
 
     # ---- train state / restore ------------------------------------------------
@@ -119,16 +140,26 @@ def main() -> None:
             print(f"step {n_done:5d} loss={float(metrics['loss']):.4f} "
                   f"lr={float(metrics['lr']):.2e} "
                   f"throughput={items:.1f} items/s", flush=True)
-        if mgr is not None and n_done % args.ckpt_every == 0:
-            mgr.save(n_done, state,
-                     extra={"sampler_step": sampler.state.step,
-                            "sampler_epoch": sampler.state.epoch})
+        if n_done % args.ckpt_every == 0:
+            extra = {"sampler_step": sampler.state.step,
+                     "sampler_epoch": sampler.state.epoch}
+            if mgr is not None:
+                mgr.save(n_done, state, extra=extra)
+            if args.ckpt_fanstore:
+                save_to_session(sessions[0], n_done, state, extra=extra)
+    extra = {"sampler_step": sampler.state.step,
+             "sampler_epoch": sampler.state.epoch}
     if mgr is not None:
-        mgr.save(n_done, state, blocking=True,
-                 extra={"sampler_step": sampler.state.step,
-                        "sampler_epoch": sampler.state.epoch})
+        mgr.save(n_done, state, blocking=True, extra=extra)
+    if args.ckpt_fanstore and n_done % args.ckpt_every != 0:
+        save_to_session(sessions[0], n_done, state, extra=extra)
     print(f"done: {n_done} steps, local-hit-rate="
           f"{cluster.local_hit_rate():.3f}")
+    if args.ckpt_fanstore:
+        clock = cluster.clocks[0]
+        print(f"fanstore-ckpt: write_bytes={clock.write_bytes} "
+              f"write_s={clock.write_s:.6f} consume_s={clock.consume_s:.6f} "
+              f"(write lane overlaps the data plane; busy={clock.busy_s:.6f})")
 
 
 if __name__ == "__main__":

@@ -7,9 +7,18 @@ crash mid-write never corrupts the latest checkpoint — users resume from
 the newest complete manifest, exactly the paper's recommended recovery
 story. An async writer thread keeps the train loop off the write path;
 ``keep`` bounds retained checkpoints.
+
+Beyond the on-disk path, checkpoints can stream through the FanStore
+engine itself (``save_to_session``/``restore_from_session``): one shard
+per pytree leaf written via :class:`repro.fanstore.api.CheckpointWriter`,
+so shard bytes ride the concurrent write lane to their placement owners
+(overlapping prefetch/compute) and the manifest — written LAST — is the
+commit marker, mirroring the atomic-rename story. Restores are one
+batched ``read_many`` (one round trip per owner).
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
@@ -112,6 +121,97 @@ def restore_checkpoint(ckpt_dir: str, target: Any, *,
         leaves = [jax.device_put(a, s) for a, s in zip(leaves, sh_leaves)]
     else:
         leaves = [jax.device_put(a) for a in leaves]
+    state = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target), leaves)
+    return state, manifest
+
+
+# ---- FanStore-session checkpoints (write path through the engine) ----------
+
+def _npy_bytes(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def save_to_session(session, step: int, state: Any, *,
+                    extra: Optional[Dict] = None, prefix: str = "ckpt",
+                    chunk_bytes: int = 1 << 20) -> str:
+    """Stream a checkpoint into the FanStore output tier: one shard per
+    pytree leaf through the session's :class:`CheckpointWriter` (chunked
+    ``write``+``fsync`` on the concurrent write lane), manifest last as
+    the commit marker. Returns the checkpoint's store directory.
+
+    FanStore outputs are single-write: saving the same step twice raises
+    ``PermissionError`` (checkpoints are immutable once committed).
+    """
+    root = f"{prefix}/step_{step:08d}"
+    arrays = _flatten_with_names(state)
+    writer = session.checkpoint_writer(chunk_bytes=chunk_bytes)
+    for name in sorted(arrays):
+        writer.write_shard(f"{root}/arrays/{name}.npy",
+                           _npy_bytes(arrays[name]))
+    manifest = {"step": step, "keys": sorted(arrays), "extra": extra or {}}
+    writer.write_json(f"{root}/manifest.json", manifest)
+    return root
+
+
+def list_session_checkpoints(session, *, prefix: str = "ckpt"
+                             ) -> List[Tuple[int, str]]:
+    """Complete (manifest-visible) checkpoints in the store, sorted by step."""
+    if not session.exists(prefix):
+        return []
+    out = []
+    for name in session.listdir(prefix):
+        if not name.startswith("step_"):
+            continue
+        full = f"{prefix}/{name}"
+        if session.exists(f"{full}/manifest.json"):
+            out.append((int(name.split("_")[1]), full))
+    return sorted(out)
+
+
+def restore_from_session(session, target: Any, *, step: Optional[int] = None,
+                         prefix: str = "ckpt") -> Tuple[Any, Dict]:
+    """Restore a session-written checkpoint into ``target``'s structure.
+
+    All shards are fetched with ONE batched ``read_many`` (one modeled
+    round trip per owning node) instead of a per-leaf open/read loop.
+    """
+    ckpts = list_session_checkpoints(session, prefix=prefix)
+    if not ckpts:
+        raise FileNotFoundError(f"no checkpoints under {prefix}")
+    if step is None:
+        step, root = ckpts[-1]
+    else:
+        match = [p for s, p in ckpts if s == step]
+        if not match:
+            raise FileNotFoundError(f"step {step} not in {prefix}")
+        root = match[0]
+    manifest = json.loads(
+        session.read_many([f"{root}/manifest.json"])[0].decode())
+    shard_paths = [f"{root}/arrays/{k}.npy" for k in manifest["keys"]]
+    payloads = session.read_many(shard_paths)
+    arrays = {k: np.load(io.BytesIO(p), allow_pickle=False)
+              for k, p in zip(manifest["keys"], payloads)}
+    flat_target = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for p, leaf in flat_target[0]:
+        keys = []
+        for k in p:
+            if hasattr(k, "key"):
+                keys.append(str(k.key))
+            elif hasattr(k, "idx"):
+                keys.append(str(k.idx))
+            else:
+                keys.append(str(k))
+        name = "/".join(keys)
+        if name not in arrays:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = arrays[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{name}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jax.device_put(arr))
     state = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(target), leaves)
     return state, manifest

@@ -1,0 +1,386 @@
+"""FanStoreSession descriptor API, the engine write path (write_many /
+streaming CheckpointWriter / write lane), cross-node write visibility
+through the FS + intercept adapters, and the readdir/seek satellites."""
+import io
+import os
+
+import pytest
+
+from repro.fanstore.api import FD_BASE, CheckpointWriter, FanStoreSession
+from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.fs import FanStoreFS
+from repro.fanstore.intercept import intercept
+from repro.fanstore.prepare import prepare_dataset
+
+
+def make_cluster(num_nodes, files, *, replication=1, partitions=4, **kw):
+    blobs, _ = prepare_dataset(files, partitions, compress=False)
+    cluster = FanStoreCluster(num_nodes, **kw)
+    cluster.load_partitions(blobs, replication=replication)
+    return cluster
+
+
+def small_files(n=12, size=300):
+    return {f"train/f{i:03d}.bin": bytes([i % 250]) * size for i in range(n)}
+
+
+# ---- descriptor table -------------------------------------------------------
+
+def test_session_fd_read_pread_lseek():
+    files = small_files()
+    cluster = make_cluster(2, files)
+    s = FanStoreSession(cluster, 0)
+    fd = s.open("/fanstore/train/f003.bin")
+    assert fd >= FD_BASE
+    data = files["train/f003.bin"]
+    assert s.pread(fd, 10, 0) == data[:10]        # explicit offset: no cursor
+    assert s.read(fd, 5) == data[:5]              # cursor advances
+    assert s.lseek(fd, -5, os.SEEK_END) == len(data) - 5
+    assert s.read(fd) == data[-5:]
+    assert s.fstat(fd).st_size == len(data)
+    s.close(fd)
+    with pytest.raises(OSError):
+        s.read(fd, 1)                             # EBADF after close
+    assert s.open_fds == 0
+
+
+def test_session_accepts_relative_and_mounted_paths():
+    files = small_files()
+    cluster = make_cluster(2, files)
+    s = FanStoreSession(cluster, 0)
+    a = s.open("train/f000.bin")
+    b = s.open("/fanstore/train/f000.bin")
+    assert s.read(a) == s.read(b)
+    s.close(a), s.close(b)
+    with pytest.raises(FileNotFoundError):
+        s.open("/elsewhere/f.bin")
+
+
+def test_session_write_fsync_close_visible_cross_node():
+    files = small_files()
+    cluster = make_cluster(4, files)
+    writer = FanStoreSession(cluster, 0)
+    reader = FanStoreSession(cluster, 3)
+    fd = writer.open("out/gen.bin", "wb")
+    writer.write(fd, b"A" * 100)
+    assert not reader.exists("out/gen.bin")       # visible only on close
+    assert writer.fsync(fd) == 100                # streamed to the owner
+    writer.write(fd, b"B" * 50)
+    st = writer.close(fd)
+    assert st.st_size == 150                      # flushed + buffered
+    assert reader.read_many(["out/gen.bin"])[0] == b"A" * 100 + b"B" * 50
+    assert reader.getsize("/fanstore/out/gen.bin") == 150
+    # single write: a second committer loses at close time
+    fd2 = writer.open("out/gen.bin", "wb")
+    writer.write(fd2, b"clobber")
+    with pytest.raises(PermissionError):
+        writer.close(fd2)
+    assert reader.read_many(["out/gen.bin"])[0][:1] == b"A"
+
+
+def test_abort_drops_fsynced_staging():
+    """Regression: an aborted write's already-fsync'd chunks must not leak
+    into a later writer's commit of the same path."""
+    cluster = make_cluster(2, small_files())
+    s = FanStoreSession(cluster, 0)
+    fd = s.open("out/ck.bin", "wb")
+    s.write(fd, b"OLD!")
+    s.fsync(fd)                                   # chunk staged at the owner
+    s.abort(fd)
+    assert not s.exists("out/ck.bin")
+    fd = s.open("out/ck.bin", "wb")
+    s.write(fd, b"NEW-PAYLOAD")
+    st = s.close(fd)
+    assert st.st_size == 11
+    assert s.read_many(["out/ck.bin"])[0] == b"NEW-PAYLOAD"
+    # close_all takes the same path (session as context manager)
+    with FanStoreSession(cluster, 1) as s1:
+        fd = s1.open("out/ck2.bin", "wb")
+        s1.write(fd, b"half")
+        s1.fsync(fd)
+    FanStoreSession(cluster, 1).write_many([("out/ck2.bin", b"whole")])
+    assert cluster.read(0, "out/ck2.bin") == b"whole"
+
+
+def test_seek_back_write_rejected():
+    """Regression: lseek-then-write on a write fd must error, not silently
+    append (same contract pwrite enforces for explicit offsets)."""
+    cluster = make_cluster(2, small_files())
+    s = FanStoreSession(cluster, 0)
+    fd = s.open("out/h.bin", "wb")
+    s.write(fd, b"HEADER00")
+    s.lseek(fd, 0, os.SEEK_SET)
+    with pytest.raises(io.UnsupportedOperation):
+        s.write(fd, b"HEADER99")
+    s.lseek(fd, 0, os.SEEK_CUR)                   # restoring the cursor is OK
+    s.lseek(fd, 8, os.SEEK_SET)
+    s.write(fd, b"!")
+    assert s.close(fd).st_size == 9
+
+
+def test_session_pwrite_appends_only():
+    cluster = make_cluster(2, small_files())
+    s = FanStoreSession(cluster, 0)
+    fd = s.open("out/w.bin", "wb")
+    assert s.pwrite(fd, b"xxxx", 0) == 4
+    assert s.pwrite(fd, b"yy", 4) == 2            # offset == size: OK
+    with pytest.raises(io.UnsupportedOperation):
+        s.pwrite(fd, b"z", 1)                     # holes/overwrites rejected
+    with pytest.raises(io.UnsupportedOperation):
+        s.lseek(fd, 0, os.SEEK_END)               # size undefined until close
+    s.close(fd)
+    assert s.read_many(["out/w.bin"])[0] == b"xxxxyy"
+
+
+def test_session_payload_lands_on_placement_owner():
+    """End-to-end ring routing: the committed payload lives on the
+    placement owner's output tier, not stranded on the writer."""
+    cluster = make_cluster(4, small_files())
+    s = FanStoreSession(cluster, 1)
+    s.write_many([(f"out/o{i}.bin", bytes([i]) * 64) for i in range(8)])
+    for i in range(8):
+        path = f"out/o{i}.bin"
+        owner = cluster.placement.owner(path)
+        assert cluster.nodes[owner].has_output(path)
+        for nid in range(4):
+            if nid != owner:
+                assert not cluster.nodes[nid].has_output(path)
+        # reads are served by the owner (remote for everyone else)
+        st, loc = cluster.output_ns.lookup(path)
+        assert loc.node_id == owner and st.st_size == 64
+
+
+# ---- batched write path -----------------------------------------------------
+
+def test_write_many_one_round_trip_per_owner_pair():
+    """K files bound for one owner accrue exactly one latency_s on the
+    writer's write lane — the mirror of read_many's coalescing."""
+    cluster = FanStoreCluster(4)
+    net = cluster.net
+    entries = [(f"out/b{i:02d}.bin", b"z" * 1000) for i in range(16)]
+    owners = {p: cluster.placement.owner(p) for p, _ in entries}
+    remote_groups = {o for o in owners.values() if o != 1}
+    cluster.write_many(1, entries)
+    clock = cluster.clocks[1]
+    local_bytes = sum(len(d) for p, d in entries if owners[p] == 1)
+    remote_bytes = sum(len(d) for p, d in entries if owners[p] != 1)
+    n_local = sum(1 for o in owners.values() if o == 1)
+    expect = (len(remote_groups) * net.latency_s
+              + remote_bytes / net.bandwidth_Bps
+              + n_local * net.open_overhead_s
+              + local_bytes / net.disk_bw_Bps)
+    assert abs(clock.write_s - expect) < 1e-12
+    assert clock.write_bytes == 16 * 1000
+    assert clock.consume_s == 0.0                 # nothing on the demand lane
+
+
+def test_write_many_cheaper_than_perfile_loop_at_8_nodes():
+    """Acceptance pin: batched write_many strictly beats the per-file
+    write_file loop at >= 8 nodes (engine level)."""
+    payload = bytes(4096)
+    a = FanStoreCluster(8)
+    b = FanStoreCluster(8)
+    for nid in range(8):
+        entries = [(f"out/n{nid}/f{i:03d}.bin", payload) for i in range(16)]
+        a.write_many(nid, entries)
+        for p, d in entries:
+            b.write_file(nid, p, d)
+    assert a.makespan_s() < b.makespan_s()
+    # and through the benchmark arm
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.io_scaling import CPU_NET, run_write_one
+    wm = run_write_one(8, 8192, 16, CPU_NET, batched=True)
+    wp = run_write_one(8, 8192, 16, CPU_NET, batched=False)
+    assert wm["makespan_s"] < wp["makespan_s"]
+
+
+def test_write_many_async_future_and_errors():
+    cluster = FanStoreCluster(3)
+    fut = cluster.write_many_async(0, [("out/a.bin", b"x" * 10)])
+    assert fut.result(timeout=30)[0].st_size == 10
+    with pytest.raises(ValueError):
+        cluster.write_many(0, [("out/d.bin", b"1"), ("out/d.bin", b"2")])
+    with pytest.raises(PermissionError):
+        cluster.write_many(1, [("out/a.bin", b"again")])
+    cluster.shutdown()
+
+
+def test_write_many_rejects_immutable_inputs():
+    files = small_files()
+    cluster = make_cluster(2, files, partitions=1)
+    owner_node = 0 if cluster.nodes[0].has("train/f000.bin") else 1
+    with pytest.raises(PermissionError):
+        cluster.write_many(owner_node, [("train/f000.bin", b"overwrite")])
+
+
+# ---- streaming checkpoint writer -------------------------------------------
+
+def test_checkpoint_writer_chunks_on_write_lane():
+    cluster = make_cluster(2, small_files())
+    s = FanStoreSession(cluster, 0)
+    w = s.checkpoint_writer(chunk_bytes=256)
+    payload = bytes(range(256)) * 5               # 1280 B -> 5 chunks
+    st = w.write_shard("ckpt/step_1/shard_0.npy", payload)
+    assert st.st_size == len(payload)
+    assert w.chunks_flushed == 5 and w.shards_written == 1
+    assert s.read_many(["ckpt/step_1/shard_0.npy"])[0] == payload
+    # every byte rode the concurrent write lane, not the demand lane
+    assert cluster.clocks[0].write_bytes == len(payload)
+    assert cluster.clocks[0].write_s > 0.0
+
+
+def test_checkpoint_overlap_beats_serialized():
+    """Acceptance pin: a shard flush overlapped with an active prefetch
+    window yields strictly lower epoch makespan than serialized
+    write-then-prefetch."""
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.io_scaling import CPU_NET, run_checkpoint_overlap
+    r = run_checkpoint_overlap(8, 64 * 1024, 128, CPU_NET,
+                               reads_per_node=64, shard_bytes=1 << 20,
+                               chunk_bytes=1 << 18)
+    assert r["overlapped_makespan_s"] < r["serialized_makespan_s"]
+    assert r["overlap_speedup"] > 1.0
+
+
+def test_session_checkpoint_save_restore_roundtrip():
+    import numpy as np
+    from repro.train.checkpoint import (list_session_checkpoints,
+                                        restore_from_session,
+                                        save_to_session)
+    cluster = make_cluster(2, small_files())
+    s = FanStoreSession(cluster, 0)
+    state = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+             "opt": {"mu": np.ones((5,), dtype=np.float32)}}
+    save_to_session(s, 10, state, extra={"sampler_step": 7})
+    save_to_session(s, 20, state)
+    assert [st for st, _ in list_session_checkpoints(s)] == [10, 20]
+    target = {"w": np.zeros((3, 4), dtype=np.float32),
+              "opt": {"mu": np.zeros((5,), dtype=np.float32)}}
+    restored, manifest = restore_from_session(s, target, step=10)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), state["w"])
+    assert manifest["extra"]["sampler_step"] == 7
+    with pytest.raises(PermissionError):
+        save_to_session(s, 10, state)             # checkpoints are immutable
+
+
+# ---- readdir satellite: outputs list everywhere -----------------------------
+
+def test_written_files_appear_in_readdir_and_walk():
+    files = small_files()
+    cluster = make_cluster(3, files)
+    s = FanStoreSession(cluster, 1)
+    before = s.walk_count()
+    with pytest.raises(FileNotFoundError):
+        cluster.readdir("out")
+    s.write_many([("out/preds/a.bin", b"x"), ("out/preds/b.bin", b"y")])
+    assert cluster.readdir("out") == ["preds"]
+    assert cluster.readdir("out/preds") == ["a.bin", "b.bin"]
+    assert "out" in cluster.readdir("")           # parent dirs materialize
+    assert cluster.is_dir("out/preds")
+    assert s.walk_count() == before + 2
+    # merged listing: inputs and outputs under one root
+    assert set(s.listdir("")) >= {"train", "out"}
+
+
+def test_scandir_entries_cover_both_namespaces():
+    files = small_files(4)
+    cluster = make_cluster(2, files)
+    s = FanStoreSession(cluster, 0)
+    s.write_many([("train_out.bin", b"q" * 9)])
+    entries = {e.name: e for e in s.scandir("/fanstore")}
+    assert entries["train"].is_dir()
+    assert entries["train_out.bin"].is_file()
+    assert entries["train_out.bin"].stat().st_size == 9
+    assert entries["train"].path == "/fanstore/train"
+
+
+# ---- FS adapter seek satellite ---------------------------------------------
+
+def test_fs_seek_invalid_whence_and_seek_end_on_write():
+    files = small_files(4)
+    cluster = make_cluster(2, files)
+    fs = FanStoreFS(cluster, node_id=0)
+    with fs.open("/fanstore/train/f000.bin") as f:
+        with pytest.raises(ValueError):
+            f.seek(0, 3)                          # nonstandard whence
+        assert f.seek(-10, os.SEEK_END) == 290
+    f = fs.open("/fanstore/out/w.bin", "wb")
+    f.write(b"abc")
+    with pytest.raises(ValueError):
+        f.seek(0, 99)
+    with pytest.raises(io.UnsupportedOperation):
+        f.seek(0, os.SEEK_END)                    # size undefined mid-write
+    f.close()
+
+
+# ---- cross-node visibility through FS / intercept ---------------------------
+
+def test_cross_node_write_visibility_through_fs_and_intercept():
+    """Write on node A via intercepted open(..., 'wb'); read + stat +
+    listdir on node B; second writer gets PermissionError."""
+    files = small_files()
+    cluster = make_cluster(4, files)
+    fs_a = FanStoreFS(cluster, node_id=0)
+    fs_b = FanStoreFS(cluster, node_id=2)
+    with intercept(fs_a):
+        with open("/fanstore/out/epoch1/model.bin", "wb") as f:
+            f.write(b"M" * 333)
+    with intercept(fs_b):
+        assert open("/fanstore/out/epoch1/model.bin", "rb").read() == b"M" * 333
+        assert os.stat("/fanstore/out/epoch1/model.bin").st_size == 333
+        assert os.listdir("/fanstore/out/epoch1") == ["model.bin"]
+        assert os.listdir("/fanstore/out") == ["epoch1"]
+        assert os.path.getsize("/fanstore/out/epoch1/model.bin") == 333
+        with pytest.raises(PermissionError):
+            with open("/fanstore/out/epoch1/model.bin", "wb") as f:
+                f.write(b"clobber")
+    # the committed payload survived the losing writer
+    assert cluster.read(1, "out/epoch1/model.bin") == b"M" * 333
+
+
+def test_fd_level_intercept_roundtrip():
+    files = small_files()
+    cluster = make_cluster(3, files)
+    s = FanStoreSession(cluster, 1)
+    with intercept(s):
+        fd = os.open("/fanstore/out/fd.bin", os.O_WRONLY | os.O_CREAT)
+        assert fd >= FD_BASE
+        assert os.write(fd, b"hello ") == 6
+        assert os.write(fd, b"world") == 5
+        os.close(fd)
+        fd = os.open("/fanstore/out/fd.bin", os.O_RDONLY)
+        assert os.read(fd, 5) == b"hello"
+        assert os.fstat(fd).st_size == 11         # stat-by-descriptor
+        assert os.lseek(fd, 6, os.SEEK_SET) == 6
+        assert os.read(fd, 100) == b"world"
+        os.close(fd)
+        # os.walk over the mount uses intercepted scandir
+        seen = {root: sorted(names)
+                for root, _, names in os.walk("/fanstore/out")}
+        assert seen["/fanstore/out"] == ["fd.bin"]
+        # real fds still work through the patched os.* entry points
+        rfd = os.open(os.devnull, os.O_RDONLY)
+        assert rfd < FD_BASE
+        os.read(rfd, 1)
+        os.close(rfd)
+    assert cluster.read(0, "out/fd.bin") == b"hello world"
+
+
+def test_session_write_visible_from_prefetch_loader_consumers():
+    """The whole surface hangs together: a session write is readable via
+    read_many on another node's session in the same batch as inputs."""
+    files = small_files()
+    cluster = make_cluster(2, files)
+    FanStoreSession(cluster, 0).write_many([("out/extra.bin", b"E" * 20)])
+    out = FanStoreSession(cluster, 1).read_many(
+        ["train/f000.bin", "out/extra.bin"])
+    assert out[0] == files["train/f000.bin"]
+    assert out[1] == b"E" * 20
