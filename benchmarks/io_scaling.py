@@ -25,16 +25,25 @@ Beyond the paper, three engine axes::
                    (writer, owner) pair on the concurrent write lane) vs
                    the per-file ``write_file`` loop; reports the makespan
                    win per node count
+    --backend B    run the SAME fixed trace over a real wire
+                   (``socket``: framed TCP serving loops; ``shm``:
+                   zero-copy co-located fast path) and report MEASURED
+                   wall-clock makespans instead of modeled ones — the
+                   repo's hardware-truth numbers. Small node counts only
+                   (every node is a real serving loop on this host).
 
 ``bench_json`` packages the seed / batched / prefetched arms, the
 write_many-vs-perfile arm, checkpoint-flush makespan with/without
-prefetch-lane overlap, and an LRU-vs-Belady hit-rate comparison as the
-machine-readable dict that ``benchmarks/run.py --io-json`` writes to
+prefetch-lane overlap, an LRU-vs-Belady hit-rate comparison, and the
+``measured`` block (socket vs shm on one trace, teardown-verified) as
+the machine-readable dict that ``benchmarks/run.py --io-json`` writes to
 BENCH_io.json.
 """
 from __future__ import annotations
 
 import argparse
+import threading
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -57,8 +66,8 @@ BATCH = 32      # samples per coalesced read_many call (one training step)
 
 def _build_cluster(nodes: int, file_size: int, count: int,
                    net: InterconnectModel, *, replication: int,
-                   cache_mb: int, cache_policy: str = "lru"
-                   ) -> FanStoreCluster:
+                   cache_mb: int, cache_policy: str = "lru",
+                   backend: str = "modeled") -> FanStoreCluster:
     # one shared payload per size: content is timing-irrelevant here and
     # generating count x file_size of RNG bytes dominated the wall time
     payload = bytes(np.random.default_rng(1).integers(
@@ -67,7 +76,8 @@ def _build_cluster(nodes: int, file_size: int, count: int,
     blobs, _ = prepare_dataset(files, max(nodes, 8), compress=False)
     cluster = FanStoreCluster(nodes, interconnect=net,
                               cache_bytes=cache_mb * 1024 * 1024,
-                              cache_policy=cache_policy)
+                              cache_policy=cache_policy,
+                              backend=backend)
     cluster.load_partitions(blobs, replication=replication)
     return cluster
 
@@ -157,6 +167,111 @@ def _drive_prefetched_epoch(cluster: FanStoreCluster,
                 cluster.read_many(nid, steps[step], materialize=False)
     for pf in schedulers.values():
         pf.close()
+
+
+def run_measured_one(backend: str, *, nodes: int = 4,
+                     file_size: int = 256 * 1024, count: int = 64,
+                     reads_per_node: int = 64, write_files: int = 8,
+                     write_size: int = 64 * 1024,
+                     repeats: int = 3) -> Dict:
+    """One REAL-wire arm: drive a fixed read+write trace over ``backend``
+    (``socket`` or ``shm``) and report measured wall-clock numbers.
+
+    Unlike every other arm in this file, nothing here is modeled: bytes
+    actually cross the backend (TCP frames, or zero-copy views), and the
+    reported makespans come from the ``WallClock`` ledgers the backend
+    accrued plus the end-to-end loop time. ``repeats`` runs the whole
+    trace fresh several times and keeps the fastest (standard
+    best-of-N for wall timing). Teardown is verified: a leaked
+    ``fanstore-*`` thread fails the benchmark rather than hanging CI.
+    """
+    already = {t for t in threading.enumerate()
+               if t.name.startswith("fanstore")}
+    best: Optional[Dict] = None
+    for _ in range(repeats):
+        with _build_cluster(nodes, file_size, count, CPU_NET, replication=1,
+                            cache_mb=0, backend=backend) as cluster:
+            paths = sorted(f"bench/f_{i:06d}.bin" for i in range(count))
+            rng = np.random.default_rng(7)
+            traces = {
+                nid: [paths[int(i)] for i in rng.choice(
+                    len(paths), size=min(reads_per_node, count),
+                    replace=False)]
+                for nid in range(nodes)}
+            # wire-up cost stays outside the clock: bring the serving
+            # loops up AND dial every (requester, owner) connection with
+            # one warm-up read per pair before timing starts — otherwise
+            # the socket arm pays its TCP handshakes inside the window
+            # while the shm arm pays nothing
+            warm = [ns.local_paths()[0] for ns in cluster.nodes.values()
+                    if ns.local_paths()]
+            for nid in range(nodes):
+                cluster.read_many(nid, warm)
+            cluster.reset_clocks()
+            t0 = time.perf_counter()
+            read_bytes = 0
+            for nid, chosen in traces.items():
+                for s in range(0, len(chosen), BATCH):
+                    for data in cluster.read_many(nid, chosen[s:s + BATCH]):
+                        read_bytes += len(data)
+            payload = bytes(write_size)
+            for nid in range(nodes):
+                cluster.write_many(nid, [
+                    (f"out/n{nid:03d}/f{i:04d}.bin", payload)
+                    for i in range(write_files)])
+            moved = read_bytes + nodes * write_files * write_size
+            elapsed = time.perf_counter() - t0
+            row = {"backend": backend, "nodes": nodes,
+                   "file_size": file_size, "count": count,
+                   "reads_per_node": min(reads_per_node, count),
+                   "elapsed_s": elapsed,
+                   "measured_makespan_s": cluster.measured_makespan_s(),
+                   "measured_total_s": cluster.accounting.measured_total_s(),
+                   "measured_bytes": cluster.accounting.measured_bytes(),
+                   "measured_requests": cluster.accounting.measured_requests(),
+                   "read_bytes": read_bytes,
+                   "bytes_moved": moved,
+                   "throughput_MBps": moved / elapsed / 1e6
+                   if elapsed else 0.0,
+                   "modeled_makespan_s": cluster.makespan_s()}
+        if best is None or row["elapsed_s"] < best["elapsed_s"]:
+            best = row
+    # only threads THIS function spawned count — a modeled arm elsewhere in
+    # the process may hold a lazily-built pool whose workers die with it
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith("fanstore") and t.is_alive()
+              and t not in already]
+    if leaked:
+        raise RuntimeError(f"serving-loop teardown leaked threads: {leaked}")
+    best["teardown_clean"] = True
+    return best
+
+
+def measured_comparison(*, smoke: bool = False) -> Dict:
+    """Socket vs shared-memory on the SAME trace: the co-located zero-copy
+    path must beat the framed-TCP path on real wall clocks (the Hoard
+    node-local-tier claim, measured instead of modeled)."""
+    kw = dict(nodes=4, count=32 if smoke else 64,
+              file_size=(128 if smoke else 256) * 1024,
+              reads_per_node=32 if smoke else 64,
+              write_files=4 if smoke else 8)
+    sock = run_measured_one("socket", **kw)
+    shm = run_measured_one("shm", **kw)
+    return {"config": kw, "socket": sock, "shm": shm,
+            "shm_speedup_vs_socket": (
+                sock["elapsed_s"] / shm["elapsed_s"]
+                if shm["elapsed_s"] else 1.0),
+            "teardown_clean": sock["teardown_clean"]
+            and shm["teardown_clean"]}
+
+
+def format_measured_rows(rows: List[Dict]) -> List[str]:
+    return [(f"measured,backend={r['backend']},nodes={r['nodes']},"
+             f"size={r['file_size']//1024}KB,"
+             f"elapsed={r['elapsed_s']:.4f}s,"
+             f"measured_makespan={r['measured_makespan_s']:.4f}s,"
+             f"throughput={r['throughput_MBps']:.0f}MB/s,"
+             f"requests={r['measured_requests']}") for r in rows]
 
 
 def run_write_one(nodes: int, file_size: int, files_per_node: int,
@@ -459,14 +574,23 @@ def bench_json(*, nodes_list=(8, 64), smoke: bool = False) -> Dict:
             "overlap_speedup": ov["overlap_speedup"]}
         results["arms"].append(entry)
     results["cache_policies"] = cache_policy_comparison()
+    # the hardware-truth block: the same trace over real wires (socket vs
+    # shared memory), measured wall clocks — not modeled predictions
+    results["measured"] = measured_comparison(smoke=smoke)
     return results
 
 
 def main(*, batched: bool = False, prefetch: bool = False, window: int = 4,
          cache_mb: int = 0, epochs: Optional[int] = None,
-         arms: Optional[List[str]] = None, write: bool = False) -> List[str]:
+         arms: Optional[List[str]] = None, write: bool = False,
+         backend: str = "modeled") -> List[str]:
     if epochs is None:
         epochs = 2 if cache_mb else 1
+    if backend != "modeled":
+        # real wires: every node is an actual serving loop on this host,
+        # so the measured axis sweeps small node counts only
+        rows = [run_measured_one(backend, nodes=n) for n in (1, 2, 4, 8)]
+        return format_measured_rows(rows)
     out = []
     for arm, fig in (("gpu", "fig5"), ("cpu", "fig6")):
         if arms and arm not in arms:
@@ -501,10 +625,15 @@ if __name__ == "__main__":
                     help="write-path scaling: batched write_many (one round "
                          "trip per (writer, owner) pair, write lane) vs the "
                          "per-file write_file loop")
+    ap.add_argument("--backend", choices=["modeled", "socket", "shm"],
+                    default="modeled",
+                    help="transport backend: 'modeled' runs the paper-scale "
+                         "modeled sweeps; 'socket'/'shm' drive a real wire "
+                         "and report MEASURED wall-clock makespans")
     args = ap.parse_args()
     for line in main(batched=args.batched, prefetch=args.prefetch,
                      window=args.window, cache_mb=args.cache_mb,
                      epochs=args.epochs,
                      arms=[args.arm] if args.arm else None,
-                     write=args.write):
+                     write=args.write, backend=args.backend):
         print(line)

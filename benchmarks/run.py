@@ -51,6 +51,20 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
     cp = result["cache_policies"]
     assert cp["belady_hit_rate"] > cp["lru_hit_rate"], (
         "Belady no longer beats LRU at equal byte budget")
+    # hardware-truth guards: real bytes moved over real wires, serving
+    # loops torn down, and the co-located shm path beat the socket path
+    m = result["measured"]
+    assert m["teardown_clean"], "serving-loop teardown leaked threads"
+    for wire_arm in ("socket", "shm"):
+        w = m[wire_arm]
+        assert w["elapsed_s"] > 0 and w["measured_makespan_s"] > 0, (
+            f"{wire_arm} backend recorded no measured time — the wire "
+            f"path did not actually run")
+        assert w["measured_bytes"] == w["read_bytes"] > 0, (
+            f"{wire_arm} backend measured-byte ledger disagrees with the "
+            f"trace ({w['measured_bytes']} != {w['read_bytes']})")
+    assert m["shm_speedup_vs_socket"] > 1.0, (
+        "co-located shared-memory path no longer beats the socket path")
     for entry in result["arms"]:
         w = entry["write"]
         print(f"io_json,nodes={entry['nodes']},"
@@ -62,6 +76,9 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
     print(f"io_json,lru_hit={cp['lru_hit_rate']:.3f},"
           f"belady_hit={cp['belady_hit_rate']:.3f},"
           f"twoq_hit={cp['2q_hit_rate']:.3f}", flush=True)
+    print(f"io_json,measured_socket={m['socket']['elapsed_s']:.4f}s,"
+          f"measured_shm={m['shm']['elapsed_s']:.4f}s,"
+          f"shm_speedup={m['shm_speedup_vs_socket']:.2f}", flush=True)
     print(f"io_json,wrote={path}", flush=True)
 
 

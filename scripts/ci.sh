@@ -12,9 +12,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 case "$lane" in
   fast)
-    python -m pytest -x -q -m "not slow"
+    # backend-parity first: identical payloads/visibility/modeled clocks on
+    # modeled vs socket vs shm wires, racing-writer commit atomicity, and
+    # deterministic serving-loop teardown (the conftest leak fixture fails
+    # any test that strands a fanstore-* thread, so this lane cannot hang)
+    python -m pytest -x -q tests/test_backends.py
+    python -m pytest -x -q -m "not slow" --ignore=tests/test_backends.py
     # perf trajectory smoke: seed/batched/prefetched arms + cache policies
-    # (writes BENCH_io.json; asserts prefetch beats batched, Belady beats LRU)
+    # + the MEASURED block (socket + shm wires actually run; guards assert
+    # nonzero measured time, ledger==trace bytes, shm beats socket, and
+    # clean serving-loop teardown). Writes BENCH_io.json.
     python benchmarks/run.py --only io-json --io-json BENCH_io.json --smoke
     ;;
   full)

@@ -7,8 +7,12 @@ Layers:
   placement   path -> owner policies (modulo / consistent-hash ring) and
               replica selection (least-loaded / power-of-two-choices)
   store       per-node store: partitions, refcount cache, write buffers
-  transport   interconnect cost model + payload movement (per-file,
-              batched, and window-level round trips, thread-pool futures)
+  wire        framed message protocol (the byte format real backends speak)
+  backends    pluggable transports behind one verb seam: modeled
+              (interconnect cost model), socket (real TCP serving loops),
+              shm (zero-copy co-located fast path)
+  transport   compatibility shim over wire + backends (Transport is the
+              modeled backend)
   cache       optional per-node byte-budget read cache (LRU / Belady / 2Q)
   prefetch    clairvoyant epoch-horizon schedule + window prefetch driver
   accounting  per-node clocks + cluster aggregates for the benchmarks
@@ -25,7 +29,11 @@ from repro.fanstore.placement import (ConsistentHashRing, ModuloPlacement,
                                       RingPlacement, LeastLoadedSelector,
                                       PowerOfTwoSelector)
 from repro.fanstore.store import NodeStore
-from repro.fanstore.accounting import ClusterAccounting, NodeClock, WindowAccount
+from repro.fanstore.accounting import (ClusterAccounting, NodeClock,
+                                       WallClock, WindowAccount)
+from repro.fanstore.backends import (BACKENDS, ModeledBackend, SharedMemoryBackend,
+                                     ShmArena, SocketBackend, TransportBackend,
+                                     make_backend)
 from repro.fanstore.transport import FetchItem, InterconnectModel, Transport
 from repro.fanstore.cache import (BeladyCache, ByteCache, ByteLRUCache,
                                   CacheStats, TwoQCache, make_cache)
@@ -41,8 +49,10 @@ __all__ = [
     "Partition", "pack_partition", "iter_partition", "FileRecord",
     "StatRecord", "ConsistentHashRing", "MetadataTable",
     "ModuloPlacement", "RingPlacement", "LeastLoadedSelector",
-    "PowerOfTwoSelector", "ClusterAccounting", "NodeClock", "WindowAccount",
-    "FetchItem", "Transport", "ByteCache", "ByteLRUCache", "BeladyCache",
+    "PowerOfTwoSelector", "ClusterAccounting", "NodeClock", "WallClock",
+    "WindowAccount", "FetchItem", "Transport", "TransportBackend",
+    "ModeledBackend", "SocketBackend", "SharedMemoryBackend", "ShmArena",
+    "BACKENDS", "make_backend", "ByteCache", "ByteLRUCache", "BeladyCache",
     "TwoQCache", "CacheStats", "make_cache",
     "EpochSchedule", "PrefetchScheduler", "ScheduledRead",
     "NodeStore", "FanStoreCluster", "InterconnectModel",

@@ -1,11 +1,26 @@
-"""Accounting layer: per-node modeled timelines and cluster aggregates.
+"""Accounting layer: modeled AND measured per-node timelines.
 
-The simulated cluster never sleeps; instead every I/O operation *accrues*
-modeled time onto the node that paid it. ``NodeClock`` is that ledger —
-consume time (reads the node issued), serve time (reads it answered), byte
-counters, and the client-side read-cache counters the cache layer reports
-through it. ``ClusterAccounting`` owns one clock per node and computes the
-aggregates the benchmarks plot (makespan, aggregate bandwidth, hit rates).
+Two kinds of clocks, one per node each:
+
+* ``NodeClock`` — the *modeled* ledger. The simulated cluster never
+  sleeps; every I/O operation accrues modeled time onto the node that
+  paid it: consume time (reads the node issued), serve time (reads it
+  answered), byte counters, and the client-side read-cache counters the
+  cache layer reports through it. Every backend accrues these
+  identically, so modeled quantities stay comparable (and
+  regression-pinnable) whichever backend moved the bytes.
+* ``WallClock`` — the *measured* ledger. The real-wire backends
+  (:mod:`repro.fanstore.backends.socket` / ``.shm``) additionally record
+  wall-clock nanoseconds around every actual transfer: requester-side
+  time per lane, server-side handling time (shipped back inside the
+  response frame), and real bytes moved. The modeled backend leaves it
+  at zero. Measured lanes are *activity totals* — concurrent transfers
+  on one node sum, so ``busy_s`` is an upper bound on that node's
+  measured wall time, not an exact makespan.
+
+``ClusterAccounting`` owns one clock of each kind per node and reports
+either view: ``makespan_s()`` (modeled) vs ``measured_makespan_s()``
+(hardware truth), plus the aggregates the benchmarks plot.
 """
 from __future__ import annotations
 
@@ -72,26 +87,88 @@ class NodeClock:
         return self.cache_hits / n if n else 0.0
 
 
+@dataclass
+class WallClock:
+    """Per-node MEASURED timeline: real nanoseconds spent moving bytes.
+
+    Lanes mirror ``NodeClock`` (consume / serve / prefetch / write) so the
+    two ledgers line up column-for-column; values are wall-clock activity
+    totals recorded by the real-wire backends around every transfer.
+    """
+    consume_ns: int = 0
+    serve_ns: int = 0
+    prefetch_ns: int = 0
+    write_ns: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+    requests: int = 0
+
+    def accrue(self, lane: str, dt_ns: int) -> None:
+        if lane == "prefetch":
+            self.prefetch_ns += dt_ns
+        elif lane == "write":
+            self.write_ns += dt_ns
+        elif lane == "serve":
+            self.serve_ns += dt_ns
+        else:
+            self.consume_ns += dt_ns
+
+    @property
+    def busy_s(self) -> float:
+        # same optimistic-overlap bound as NodeClock.busy_s: the lanes run
+        # on separate threads, so a node is busy at least max() of them
+        return max(self.consume_ns, self.serve_ns, self.prefetch_ns,
+                   self.write_ns) / 1e9
+
+    @property
+    def total_s(self) -> float:
+        """Serialized (no-overlap) bound: the sum of every lane."""
+        return (self.consume_ns + self.serve_ns + self.prefetch_ns
+                + self.write_ns) / 1e9
+
+
 class ClusterAccounting:
-    """One clock per node + the cluster-level aggregates benchmarks read."""
+    """One modeled + one measured clock per node, plus the cluster-level
+    aggregates benchmarks read. Modeled quantities are deterministic;
+    measured ones exist only after a real-wire backend moved bytes."""
 
     def __init__(self, node_ids: Iterable[int]):
-        self.clocks: Dict[int, NodeClock] = {i: NodeClock() for i in node_ids}
+        ids = list(node_ids)
+        self.clocks: Dict[int, NodeClock] = {i: NodeClock() for i in ids}
+        self.wall: Dict[int, WallClock] = {i: WallClock() for i in ids}
 
     def __getitem__(self, node_id: int) -> NodeClock:
         return self.clocks[node_id]
 
     def add_node(self, node_id: int) -> None:
         self.clocks.setdefault(node_id, NodeClock())
+        self.wall.setdefault(node_id, WallClock())
 
     def reset(self) -> None:
-        # in place, so every holder of the clocks dict (e.g. Transport)
-        # observes the reset without re-pointing
+        # in place, so every holder of the clocks dict (e.g. the transport
+        # backend) observes the reset without re-pointing
         for i in list(self.clocks):
             self.clocks[i] = NodeClock()
+        for i in list(self.wall):
+            self.wall[i] = WallClock()
 
     def makespan_s(self) -> float:
         return max((c.busy_s for c in self.clocks.values()), default=0.0)
+
+    # ---- measured (wall-clock) view ----------------------------------------
+    def measured_makespan_s(self) -> float:
+        """Max per-node measured busy time (optimistic-overlap bound)."""
+        return max((w.busy_s for w in self.wall.values()), default=0.0)
+
+    def measured_total_s(self) -> float:
+        """Whole-cluster measured activity (sum of every node's lanes)."""
+        return sum(w.total_s for w in self.wall.values())
+
+    def measured_bytes(self) -> int:
+        return sum(w.bytes_in for w in self.wall.values())
+
+    def measured_requests(self) -> int:
+        return sum(w.requests for w in self.wall.values())
 
     def aggregate_bandwidth(self) -> float:
         total = sum(c.local_bytes + c.bytes_in + c.cache_hit_bytes

@@ -315,6 +315,16 @@ class FanStoreSession:
     def listdir(self, path: str = "") -> List[str]:
         return self.cluster.readdir(self.resolve(path) if path else "")
 
+    def unlink(self, path: str) -> None:
+        """Delete a committed output file (output GC): the owner-side
+        payload and the replicated metadata record drop together, and the
+        name becomes writable again. Inputs are immutable
+        (``PermissionError``); missing paths raise ``FileNotFoundError``.
+        ``os.unlink``/``os.remove`` detour here under ``intercept()``."""
+        self.cluster.unlink(self.node_id, self.resolve(path))
+
+    remove = unlink
+
     def scandir(self, path: str = "") -> _ScandirIterator:
         """``os.scandir`` equivalent: entries carry name, joined path, and
         a ready stat (the paper's preprocessed metadata hash table — no
@@ -388,9 +398,15 @@ class FanStoreSession:
     def close_all(self) -> None:
         """Abort open writes (uncommitted data is discarded — visible-until-
         finish means nothing published, including owner-staged fsync'd
-        chunks) and drop all descriptors."""
+        chunks) and drop all descriptors. The cluster (and its transport
+        backend) stays up: sessions are per-process views, many share one
+        cluster — tear the wire itself down with ``cluster.close()``."""
         for fd in list(self._fds):
             self.abort(fd)
+
+    def close_session(self) -> None:
+        """Session teardown: drop every descriptor (open writes abort)."""
+        self.close_all()
 
     def __enter__(self) -> "FanStoreSession":
         return self

@@ -1,0 +1,54 @@
+"""Pluggable transport backends behind the one verb seam.
+
+Three interchangeable wires (pick one with
+``FanStoreCluster(backend=...)``):
+
+=========  ========================  =====================================
+name       moves bytes via           accounts
+=========  ========================  =====================================
+modeled    in-process references     modeled clocks only (deterministic)
+socket     framed TCP, one serving   modeled clocks + measured wall time
+           loop per node             (requester lanes + server serve_ns)
+shm        zero-copy memoryviews /   modeled clocks + measured wall time
+           shared-memory segments
+=========  ========================  =====================================
+
+All three speak the same verbs and accrue the same modeled costs, so the
+engine above the seam (cluster, session, prefetch scheduler, write path)
+is backend-agnostic; only payload movement and measured accounting
+differ. RDMA/UCX-style backends slot in by subclassing
+:class:`~repro.fanstore.backends.base.TransportBackend` and registering
+here.
+"""
+from __future__ import annotations
+
+from typing import Dict, Type
+
+from repro.fanstore.backends.base import TransportBackend
+from repro.fanstore.backends.modeled import InterconnectModel, ModeledBackend
+from repro.fanstore.backends.shm import SharedMemoryBackend, ShmArena
+from repro.fanstore.backends.socket import SocketBackend
+
+__all__ = ["TransportBackend", "ModeledBackend", "SocketBackend",
+           "SharedMemoryBackend", "ShmArena", "InterconnectModel",
+           "BACKENDS", "make_backend"]
+
+BACKENDS: Dict[str, Type[TransportBackend]] = {
+    "modeled": ModeledBackend,
+    "socket": SocketBackend,
+    "shm": SharedMemoryBackend,
+}
+
+
+def make_backend(name: str, net, nodes, clocks, *, wall=None,
+                 num_threads: int = 8, **options) -> TransportBackend:
+    """Construct a registered backend by name (``backend_options`` from
+    the cluster land in ``options``, e.g. ``host=`` for sockets)."""
+    try:
+        cls = BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport backend {name!r}; "
+            f"choose from {sorted(BACKENDS)}") from None
+    return cls(net, nodes, clocks, wall=wall, num_threads=num_threads,
+               **options)

@@ -1,0 +1,439 @@
+"""The transport backend seam: one verb surface, interchangeable wires.
+
+Every byte in the cluster crosses a :class:`TransportBackend`. The base
+class owns everything the backends must agree on — the verb surface the
+engine calls (``fetch_local`` / ``fetch_remote`` / ``fetch_remote_batch``
+/ ``fetch_window`` / ``prefetch_local`` / ``put_local`` /
+``put_remote_batch``), the *modeled* cost accounting those verbs accrue
+onto the per-node ``NodeClock`` timelines (identical for every backend,
+so modeled quantities never depend on which wire moved the bytes), the
+shared thread pool behind the async ``submit`` API, and the lifecycle
+(``start``/``close``, context manager).
+
+Subclasses override only the two payload-movement primitives:
+
+* :meth:`_move_fetch` — how bytes travel from an owner's ``NodeStore`` to
+  the requester;
+* :meth:`_move_put` — how output chunks travel to the placement owner's
+  staging area.
+
+A backend that sets ``measured = True`` additionally gets wall-clock
+accounting for free: the base times every movement with
+``time.perf_counter_ns`` and accrues the duration onto the requester's
+measured :class:`~repro.fanstore.accounting.WallClock` lane, plus the
+server-side handling time (returned by ``_move_fetch``/``_move_put``)
+onto the owner's measured serve lane. The modeled backend leaves the
+wall clocks untouched — ``ClusterAccounting`` then reports whichever
+view exists.
+
+Callers hand the verbs resolved :class:`~repro.fanstore.wire.FetchItem`
+tuples (path + sizes); the backend knows nothing about placement or
+metadata.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.fanstore.accounting import NodeClock, WallClock, WindowAccount
+from repro.fanstore.store import NodeStore
+from repro.fanstore.wire import FetchItem
+
+__all__ = ["TransportBackend"]
+
+
+class TransportBackend:
+    """Moves payloads between node stores; accounts modeled (and, for real
+    wires, measured) cost. Abstract over the movement mechanism only."""
+
+    #: registry name ("modeled" / "socket" / "shm")
+    name = "base"
+    #: True when the backend performs real transfers worth wall-clock timing
+    measured = False
+
+    def __init__(self, net, nodes: Dict[int, NodeStore],
+                 clocks: Dict[int, NodeClock], *,
+                 wall: Optional[Dict[int, WallClock]] = None,
+                 num_threads: int = 8):
+        self.net = net
+        self.nodes = nodes
+        self.clocks = clocks
+        self.wall = wall if wall is not None else {
+            i: WallClock() for i in nodes}
+        self._lock = threading.Lock()     # clock accrual from pool threads
+        self._lifecycle = threading.Lock()  # start/close state transitions
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._num_threads = num_threads
+        self._started = False
+        self._closed = False
+
+    # ---- lifecycle ---------------------------------------------------------
+    def start(self) -> "TransportBackend":
+        """Bring the wire up (idempotent). The modeled backend has nothing
+        to start; the socket backend spawns its per-node serving loops.
+        Explicit ``start()`` also REOPENS a closed backend; the lazy path
+        remote verbs use (:meth:`_lazy_start`) refuses to, so an
+        undrained pool task racing ``close()`` errors instead of silently
+        respawning serving loops the teardown will never see."""
+        with self._lifecycle:
+            if not self._started:
+                self._started = True
+                self._closed = False
+                self._start_serving()
+        return self
+
+    def _lazy_start(self) -> None:
+        """Bring the wire up from a verb (exactly once, locked). Unlike
+        :meth:`start` this raises on a closed backend: the only way to get
+        here after ``close()`` is an in-flight task the caller failed to
+        drain, and respawning serving loops for it would leak them."""
+        with self._lifecycle:
+            if self._closed:
+                raise RuntimeError(
+                    "transport backend is closed (drain futures before "
+                    "close(), or call start() to reopen)")
+            if not self._started:
+                self._started = True
+                self._start_serving()
+
+    def close(self) -> None:
+        """Deterministic teardown: stop serving loops, drop connections,
+        and join the shared I/O pool. Idempotent; the backend may be
+        restarted with :meth:`start` afterwards. The state flip is locked
+        against :meth:`start`; the joins run outside the lock so an
+        in-flight pool task that lazily calls ``start()`` cannot deadlock
+        the shutdown (callers drain their futures before closing)."""
+        with self._lifecycle:
+            if self._closed:
+                return
+            self._closed = True
+            self._started = False
+            pool, self._pool = self._pool, None
+        self._stop_serving()
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    # legacy name from the PR-1 Transport; same full teardown
+    shutdown = close
+
+    def __enter__(self) -> "TransportBackend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _start_serving(self) -> None:
+        """Subclass hook: spawn serving loops / map segments."""
+
+    def _stop_serving(self) -> None:
+        """Subclass hook: join serving loops, close connections."""
+
+    # ---- movement primitives (the only parts a wire must provide) ----------
+    def _move_fetch(self, requester: int, owner: int,
+                    items: Sequence[FetchItem], materialize: bool,
+                    verb: str) -> Tuple[List[bytes], int]:
+        """Move ``items``'s payloads from ``owner`` to ``requester``.
+
+        ``verb`` is ``"fetch"`` / ``"fetch_batch"`` / ``"fetch_window"`` so
+        a framed wire can keep the transport's intent visible. Returns
+        (payloads in item order, server-side handling nanoseconds — 0 when
+        the wire cannot observe it)."""
+        raise NotImplementedError
+
+    def _move_put(self, writer: int, owner: int,
+                  pairs: Sequence[Tuple[FetchItem, bytes]]) -> int:
+        """Ship output chunks into ``owner``'s per-(writer, path) staging.
+        Returns server-side handling nanoseconds."""
+        raise NotImplementedError
+
+    # ---- measured (wall-clock) accrual -------------------------------------
+    def _wall_accrue(self, node_id: int, lane: str, dt_ns: int, *,
+                     bytes_in: int = 0, bytes_out: int = 0,
+                     requests: int = 0, owner: Optional[int] = None,
+                     serve_ns: int = 0) -> None:
+        with self._lock:
+            w = self.wall[node_id]
+            w.accrue(lane, dt_ns)
+            w.bytes_in += bytes_in
+            w.requests += requests
+            if owner is not None:
+                ow = self.wall[owner]
+                ow.accrue("serve", serve_ns)
+                ow.bytes_out += bytes_out
+
+    # ---- local tier --------------------------------------------------------
+    def fetch_local(self, node_id: int, item: FetchItem, *,
+                    materialize: bool = True) -> bytes:
+        """Read a file the requesting node already holds (SSD tier)."""
+        node = self.nodes[node_id]
+        if materialize:
+            t0 = time.perf_counter_ns() if self.measured else 0
+            data = node.open_local(item.path)
+            node.release(item.path)
+            if self.measured:
+                self._wall_accrue(node_id, "consume",
+                                  time.perf_counter_ns() - t0,
+                                  bytes_in=len(data), requests=1)
+        else:
+            data = b""
+        with self._lock:
+            clock = self.clocks[node_id]
+            clock.consume_s += self.net.local_cost(item.size,
+                                                   compressed=item.compressed)
+            clock.local_bytes += item.size
+        return data
+
+    # ---- remote tier -------------------------------------------------------
+    def fetch_remote(self, requester: int, owner: int, item: FetchItem, *,
+                     materialize: bool = True) -> bytes:
+        """One synchronous round trip: one ``latency_s`` for one file."""
+        data = self._timed_fetch(requester, owner, [item], materialize,
+                                 "fetch", "consume")[0]
+        with self._lock:
+            self._account_remote(requester, owner, [item])
+        return data
+
+    def fetch_remote_batch(self, requester: int, owner: int,
+                           items: Sequence[FetchItem], *,
+                           materialize: bool = True) -> List[bytes]:
+        """Coalesced fetch: K files from one owner, ONE round-trip latency.
+
+        The requester pays ``latency_s`` once for the whole group and the
+        owner pays one request-handling ``open_overhead_s`` (one message,
+        one scatter-gather over its already-open partition blobs); per-byte
+        costs are unchanged. See ``_account_remote`` for the exact model.
+        """
+        if not items:
+            return []
+        out = self._timed_fetch(requester, owner, items, materialize,
+                                "fetch_batch", "consume")
+        with self._lock:
+            self._account_remote(requester, owner, items, round_trips=1)
+        return out
+
+    def fetch_window(self, requester: int, owner: int,
+                     items: Sequence[FetchItem], *,
+                     materialize: bool = True) -> List[bytes]:
+        """Scheduled-prefetch fetch: one round trip for a whole lookahead
+        WINDOW of files from one owner — the window may span many training
+        batches, so the per-owner latency is amortized far beyond per-batch
+        coalescing.
+
+        Cost accrues on the requester's *prefetch lane*
+        (``NodeClock.prefetch_s``), not ``consume_s``: the scheduler runs on
+        the transport pool concurrently with demand reads, so makespan
+        (``busy_s = max(consume, serve, prefetch)``) models the overlap
+        instead of serializing prefetch behind consumption. Each call appends
+        a :class:`WindowAccount` entry to the requester's per-window ledger.
+        The owner's serve side is accounted identically to
+        ``fetch_remote_batch`` (it answers one message either way).
+        """
+        if not items:
+            return []
+        out = self._timed_fetch(requester, owner, items, materialize,
+                                "fetch_window", "prefetch")
+        with self._lock:
+            self._account_remote(requester, owner, items, round_trips=1,
+                                 lane="prefetch")
+        return out
+
+    def _timed_fetch(self, requester: int, owner: int,
+                     items: Sequence[FetchItem], materialize: bool,
+                     verb: str, lane: str) -> List[bytes]:
+        """Run the movement primitive, wall-timing it on measured wires."""
+        if not self.measured:
+            out, _ = self._move_fetch(requester, owner, items, materialize,
+                                      verb)
+            return out
+        t0 = time.perf_counter_ns()
+        out, serve_ns = self._move_fetch(requester, owner, items,
+                                         materialize, verb)
+        moved = sum(len(d) for d in out)
+        self._wall_accrue(requester, lane, time.perf_counter_ns() - t0,
+                          bytes_in=moved, requests=1, owner=owner,
+                          bytes_out=moved, serve_ns=serve_ns)
+        return out
+
+    def prefetch_local(self, node_id: int, items: Sequence[FetchItem], *,
+                       materialize: bool = True) -> List[bytes]:
+        """Stage node-local files (SSD tier) into the client cache ahead of
+        demand; costs accrue on the prefetch lane so the disk reads overlap
+        the consume timeline."""
+        node = self.nodes[node_id]
+        out: List[bytes] = []
+        total = 0
+        cost = 0.0
+        t0 = time.perf_counter_ns() if self.measured else 0
+        for it in items:
+            if materialize:
+                data = node.open_local(it.path)
+                node.release(it.path)
+            else:
+                data = b""
+            out.append(data)
+            total += it.size
+            cost += self.net.local_cost(it.size, compressed=it.compressed)
+        if self.measured and materialize:
+            self._wall_accrue(node_id, "prefetch",
+                              time.perf_counter_ns() - t0,
+                              bytes_in=sum(len(d) for d in out),
+                              requests=1)
+        with self._lock:
+            clock = self.clocks[node_id]
+            clock.prefetch_s += cost
+            clock.prefetch_bytes += total    # sole ledger for staged bytes
+        return out
+
+    def _account_remote(self, requester: int, owner: int,
+                        items: Sequence[FetchItem], *,
+                        round_trips: Optional[int] = None,
+                        lane: str = "consume") -> None:
+        """Accrue modeled cost; ``round_trips`` defaults to one per item.
+
+        With ``round_trips=1`` (batched) the requester pays one ``latency_s``
+        for the whole group and the owner pays one request-handling
+        ``open_overhead_s``: the server answers a single message with one
+        scatter-gather over its already-open partition blobs instead of K
+        per-request handlings. Byte costs (NIC both sides, server storage
+        read, client decompress) are per-byte and unchanged.
+
+        ``lane="prefetch"`` books the requester side onto the concurrent
+        prefetch timeline (``prefetch_s`` + per-window ledger) instead of
+        ``consume_s``; the owner's serve side is lane-independent.
+        """
+        trips = len(items) if round_trips is None else round_trips
+        stored = sum(it.stored for it in items)
+        clock = self.clocks[requester]
+        cost = trips * self.net.latency_s + stored / self.net.bandwidth_Bps
+        for it in items:
+            if it.compressed:
+                cost += it.size / self.net.decompress_Bps
+        if lane == "prefetch":
+            clock.prefetch_s += cost
+            clock.prefetch_bytes += stored
+            clock.prefetch_windows += trips
+            clock.prefetch_log.append(WindowAccount(
+                owner=owner, files=len(items), bytes=stored, cost_s=cost))
+        else:
+            clock.consume_s += cost
+            clock.bytes_in += stored
+        oc = self.clocks[owner]
+        oc.serve_s += trips * self.net.open_overhead_s
+        oc.serve_s += stored / self.net.disk_bw_Bps
+        oc.serve_s += stored / self.net.bandwidth_Bps
+        oc.bytes_out += stored
+
+    # ---- write path (output payloads ship TO the placement owner) ----------
+    def put_local(self, node_id: int, pairs: Sequence[Tuple[FetchItem, bytes]],
+                  *, lane: str = "write") -> None:
+        """Persist output chunks on the writer's own store (writer == owner):
+        per-chunk SSD-tier flush cost on the writer's chosen lane."""
+        node = self.nodes[node_id]
+        total = 0
+        cost = 0.0
+        t0 = time.perf_counter_ns() if self.measured else 0
+        for item, data in pairs:
+            node.stage_output(node_id, item.path, data)
+            total += item.size
+            cost += self.net.open_overhead_s + item.size / self.net.disk_bw_Bps
+        if self.measured:
+            self._wall_accrue(node_id, lane, time.perf_counter_ns() - t0,
+                              requests=1)
+        with self._lock:
+            self._accrue_write(node_id, cost, total, len(pairs), lane)
+
+    def put_remote_batch(self, writer: int, owner: int,
+                         pairs: Sequence[Tuple[FetchItem, bytes]], *,
+                         lane: str = "write",
+                         round_trips: Optional[int] = None) -> None:
+        """Ship output chunks to the placement owner. With ``round_trips=1``
+        (the batched ``write_many`` fan-in) K chunks for one owner ride ONE
+        message: the writer pays ``latency_s`` once on its lane and the
+        owner handles one request (one ``open_overhead_s``) before the
+        per-byte NIC + SSD-flush costs — the exact mirror of
+        ``fetch_remote_batch`` on the read side. The carried metadata
+        publish rides the same message (no separate forward)."""
+        if not pairs:
+            return
+        if self.measured:
+            t0 = time.perf_counter_ns()
+            serve_ns = self._move_put(writer, owner, pairs)
+            shipped = sum(len(d) for _, d in pairs)
+            self._wall_accrue(writer, lane, time.perf_counter_ns() - t0,
+                              requests=1, owner=owner, bytes_out=shipped,
+                              serve_ns=serve_ns)
+        else:
+            self._move_put(writer, owner, pairs)
+        trips = len(pairs) if round_trips is None else round_trips
+        stored = sum(item.size for item, _ in pairs)
+        with self._lock:
+            cost = trips * self.net.latency_s + stored / self.net.bandwidth_Bps
+            self._accrue_write(writer, cost, stored, trips, lane)
+            oc = self.clocks[owner]
+            oc.serve_s += trips * self.net.open_overhead_s
+            oc.serve_s += stored / self.net.bandwidth_Bps
+            oc.serve_s += stored / self.net.disk_bw_Bps
+
+    def _accrue_write(self, node_id: int, cost: float, nbytes: int,
+                      rpcs: int, lane: str) -> None:
+        """Book writer-side cost: ``lane="write"`` is the concurrent write
+        timeline (overlaps consume/prefetch in ``busy_s``); ``"consume"``
+        is the legacy serialized path ``write_file``/``commit_write`` keeps."""
+        clock = self.clocks[node_id]
+        if lane == "write":
+            clock.write_s += cost
+            clock.write_bytes += nbytes
+            clock.write_rpcs += rpcs
+        else:
+            clock.consume_s += cost
+
+    # ---- cache tier (accounting only; payload comes from the cache) --------
+    def account_cache_hit(self, node_id: int, item: FetchItem) -> None:
+        with self._lock:
+            clock = self.clocks[node_id]
+            clock.consume_s += self.net.cache_cost(item.size)
+            clock.cache_hits += 1
+            clock.cache_hit_bytes += item.size
+
+    def account_cache_miss(self, node_id: int) -> None:
+        with self._lock:
+            self.clocks[node_id].cache_misses += 1
+
+    def account_cache_eviction(self, node_id: int, count: int = 1) -> None:
+        with self._lock:
+            self.clocks[node_id].cache_evictions += count
+
+    # ---- async future API --------------------------------------------------
+    @property
+    def pool(self) -> ThreadPoolExecutor:
+        with self._lifecycle:
+            if self._closed:
+                # same contract as _lazy_start: submitting after close()
+                # must error, not silently respawn workers that no further
+                # close() would ever join
+                raise RuntimeError(
+                    "transport backend is closed (drain futures before "
+                    "close(), or call start() to reopen)")
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self._num_threads,
+                    thread_name_prefix="fanstore-io")
+            return self._pool
+
+    def submit(self, fn: Callable, *args, **kwargs) -> Future:
+        """Run any fetch callable on the shared I/O pool; returns a Future."""
+        return self.pool.submit(fn, *args, **kwargs)
+
+    def fetch_remote_batch_async(self, requester: int, owner: int,
+                                 items: Sequence[FetchItem], *,
+                                 materialize: bool = True) -> Future:
+        return self.submit(self.fetch_remote_batch, requester, owner, items,
+                           materialize=materialize)
+
+    def fetch_window_async(self, requester: int, owner: int,
+                           items: Sequence[FetchItem], *,
+                           materialize: bool = True) -> Future:
+        return self.submit(self.fetch_window, requester, owner, items,
+                           materialize=materialize)

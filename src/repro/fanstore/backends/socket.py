@@ -1,0 +1,261 @@
+"""The socket backend: a real TCP wire path behind the transport seam.
+
+Every node runs one serving loop (paper §5.2's "I/O thread"): a
+``_NodeServer`` binds a loopback TCP socket, accepts connections, and
+answers framed :mod:`repro.fanstore.wire` requests by scatter-gathering
+from its own ``NodeStore`` — ``FETCH_BATCH``/``FETCH_WINDOW`` frames come
+back as one ``DATA`` frame carrying every payload in the group (the wire
+twin of the modeled one-round-trip-per-owner coalescing), ``PUT_BATCH``
+frames land in the owner's per-(writer, path) staging, and handler
+exceptions travel back as ``ERR`` frames that re-raise client-side as the
+same exception class.
+
+The client half keeps ONE persistent connection per (requester, owner)
+pair — connections are dialed lazily, serialized by a per-pair lock
+(one request frame, one response frame), and closed on backend
+``close()``. Serving loops are named ``fanstore-serve-*`` /
+``fanstore-conn-*`` so tests can assert deterministic teardown.
+
+Accounting is dual: the modeled clocks accrue exactly as on every other
+backend (so modeled quantities stay backend-independent), while measured
+wall time accrues onto the ``WallClock`` lanes — the requester pays the
+observed round-trip duration, and the owner's serve lane is credited with
+the handling time the server reports inside each response frame. These
+are the repo's first hardware-truth numbers (``BENCH_io.json``'s
+``measured`` block).
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.fanstore import wire
+from repro.fanstore.backends.base import TransportBackend
+from repro.fanstore.metadata import StatRecord
+from repro.fanstore.store import NodeStore
+from repro.fanstore.wire import FetchItem, MsgType
+
+__all__ = ["SocketBackend"]
+
+_FETCH_TYPES = {"fetch": MsgType.FETCH, "fetch_batch": MsgType.FETCH_BATCH,
+                "fetch_window": MsgType.FETCH_WINDOW}
+
+
+class _NodeServer:
+    """One node's serving loop: accept thread + per-connection handlers."""
+
+    def __init__(self, node_id: int, store: NodeStore, host: str):
+        self.node_id = node_id
+        self.store = store
+        self._listener = socket.create_server((host, 0))
+        self.address: Tuple[str, int] = self._listener.getsockname()
+        self._stop = threading.Event()
+        self._conn_lock = threading.Lock()
+        self._conns: List[socket.socket] = []
+        self._threads: List[threading.Thread] = []
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop,
+            name=f"fanstore-serve-{node_id}", daemon=True)
+        self._accept_thread.start()
+
+    # ---- serving loop ------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:           # listener closed: clean shutdown
+                return
+            if self._stop.is_set():   # the wake-up dial from close()
+                conn.close()
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            t = threading.Thread(
+                target=self._handle, args=(conn,),
+                name=f"fanstore-conn-{self.node_id}", daemon=True)
+            with self._conn_lock:
+                self._conns.append(conn)
+                self._threads.append(t)
+            t.start()
+
+    def _handle(self, conn: socket.socket) -> None:
+        try:
+            while not self._stop.is_set():
+                mtype, body = wire.read_frame(conn)
+                self._dispatch(conn, mtype, body)
+        except (ConnectionError, OSError):
+            pass                       # peer hung up / shutdown race
+        finally:
+            conn.close()
+
+    def _dispatch(self, conn: socket.socket, mtype: MsgType,
+                  body: bytes) -> None:
+        """Answer one request with exactly one response frame — a handler
+        exception (FileNotFoundError from a bad path, PermissionError,
+        anything the store raises) becomes an ERR frame and the connection
+        stays usable; only a failure to WRITE the response (peer gone)
+        propagates and closes the connection. The response is built before
+        any byte is sent, so request/response framing can never
+        desynchronize."""
+        rtype, rbody = self._answer(mtype, body)
+        wire.write_frame(conn, rtype, rbody)
+
+    def _answer(self, mtype: MsgType, body: bytes) -> Tuple[MsgType, bytes]:
+        t0 = time.perf_counter_ns()
+        try:
+            if mtype in (MsgType.FETCH, MsgType.FETCH_BATCH,
+                         MsgType.FETCH_WINDOW):
+                paths, materialize = wire.decode_fetch(body)
+                if materialize:        # ONE scatter-gather over local blobs
+                    payloads = [self.store.serve_remote(p) for p in paths]
+                else:
+                    payloads = [b"" for _ in paths]
+                return MsgType.DATA, wire.encode_data(
+                    payloads, serve_ns=time.perf_counter_ns() - t0)
+            if mtype == MsgType.PUT_BATCH:
+                writer, entries = wire.decode_put(body)
+                for path, data in entries:
+                    self.store.stage_output(writer, path, data)
+                return MsgType.OK, wire.encode_ok(
+                    serve_ns=time.perf_counter_ns() - t0)
+            if mtype == MsgType.STAT:
+                path = wire.decode_stat(body)
+                return MsgType.STAT_OK, wire.encode_stat_ok(
+                    self._stat(path), serve_ns=time.perf_counter_ns() - t0)
+            raise wire.WireError(f"unexpected request type {mtype!r}")
+        except BaseException as exc:   # noqa: BLE001 — becomes an ERR frame
+            return MsgType.ERR, wire.encode_error(exc)
+
+    def _stat(self, path: str) -> StatRecord:
+        rec = self.store.record_for(path)
+        if rec is not None:
+            return rec.stat
+        size = self.store.output_size(path)   # metadata-only: no read booked
+        if size is not None:
+            return StatRecord.for_data(size)
+        raise FileNotFoundError(path)
+
+    def close(self) -> None:
+        self._stop.set()
+        # a blocking accept() is not reliably interrupted by closing the
+        # listener from another thread; dial it once so it wakes, sees the
+        # stop flag, and exits deterministically
+        try:
+            socket.create_connection(self.address, timeout=1.0).close()
+        except OSError:
+            pass
+        self._listener.close()
+        with self._conn_lock:
+            conns, threads = list(self._conns), list(self._threads)
+            self._conns.clear()
+            self._threads.clear()
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            c.close()                  # unblocks recv()
+        self._accept_thread.join(timeout=5.0)
+        for t in threads:
+            t.join(timeout=5.0)
+
+
+class SocketBackend(TransportBackend):
+    """Framed TCP transfers between per-node serving loops (loopback)."""
+
+    name = "socket"
+    measured = True
+
+    def __init__(self, net, nodes, clocks, *, wall=None, num_threads: int = 8,
+                 host: str = "127.0.0.1"):
+        super().__init__(net, nodes, clocks, wall=wall,
+                         num_threads=num_threads)
+        self.host = host
+        self._servers: Dict[int, _NodeServer] = {}
+        # one persistent connection (+ request lock) per (requester, owner)
+        self._conns: Dict[Tuple[int, int],
+                          Tuple[socket.socket, threading.Lock]] = {}
+        self._dial_lock = threading.Lock()
+
+    # ---- lifecycle ---------------------------------------------------------
+    def _start_serving(self) -> None:
+        for nid, store in self.nodes.items():
+            if nid not in self._servers:
+                self._servers[nid] = _NodeServer(nid, store, self.host)
+
+    def _stop_serving(self) -> None:
+        with self._dial_lock:
+            conns = list(self._conns.values())
+            self._conns.clear()
+        for sock, _ in conns:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            sock.close()
+        for srv in self._servers.values():
+            srv.close()
+        self._servers.clear()
+
+    def server_address(self, node_id: int) -> Tuple[str, int]:
+        """The (host, port) a node's serving loop listens on."""
+        self.start()
+        return self._servers[node_id].address
+
+    def _conn(self, requester: int,
+              owner: int) -> Tuple[socket.socket, threading.Lock]:
+        key = (requester, owner)
+        hit = self._conns.get(key)      # GIL-atomic fast path
+        if hit is not None:
+            return hit
+        # _lazy_start takes the lifecycle lock, so run it BEFORE taking
+        # the dial lock (close() holds lifecycle while tearing down); it
+        # raises rather than respawning servers on a closed backend
+        self._lazy_start()
+        with self._dial_lock:
+            hit = self._conns.get(key)
+            if hit is None:
+                sock = socket.create_connection(
+                    self._servers[owner].address)
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                hit = (sock, threading.Lock())
+                self._conns[key] = hit
+        return hit
+
+    # ---- one round trip ----------------------------------------------------
+    def _request(self, requester: int, owner: int, mtype: MsgType,
+                 body: bytes) -> Tuple[MsgType, bytes]:
+        sock, lock = self._conn(requester, owner)
+        with lock:                     # one frame out, one frame back
+            wire.write_frame(sock, mtype, body)
+            rtype, rbody = wire.read_frame(sock)
+        if rtype == MsgType.ERR:
+            raise wire.decode_error(rbody)
+        return rtype, rbody
+
+    # ---- movement primitives -----------------------------------------------
+    def _move_fetch(self, requester: int, owner: int,
+                    items: Sequence[FetchItem], materialize: bool,
+                    verb: str) -> Tuple[List[bytes], int]:
+        _, rbody = self._request(
+            requester, owner, _FETCH_TYPES[verb],
+            wire.encode_fetch([it.path for it in items],
+                              materialize=materialize))
+        return wire.decode_data(rbody)
+
+    def _move_put(self, writer: int, owner: int,
+                  pairs: Sequence[Tuple[FetchItem, bytes]]) -> int:
+        _, rbody = self._request(
+            writer, owner, MsgType.PUT_BATCH,
+            wire.encode_put(writer, [(it.path, d) for it, d in pairs]))
+        return wire.decode_ok(rbody)
+
+    # ---- extra wire verb ---------------------------------------------------
+    def stat_remote(self, requester: int, owner: int,
+                    path: str) -> StatRecord:
+        """Ask an owner's serving loop for a file's stat over the wire."""
+        _, rbody = self._request(requester, owner, MsgType.STAT,
+                                 wire.encode_stat(path))
+        st, _ = wire.decode_stat_ok(rbody)
+        return st

@@ -64,7 +64,9 @@ class CacheStats:
 
 class ByteCache:
     """Byte-budgeted cache over immutable payloads (input files never
-    change, so entries are never invalidated — only evicted for space).
+    change, so entries are only evicted for space; the one exception is
+    :meth:`invalidate`, which output GC/unlink uses to drop a deleted
+    file's payload).
 
     Subclasses implement one seam, :meth:`_pick_victim`, and may override
     the access/admission hooks. Two event ledgers exist by design:
@@ -184,6 +186,24 @@ class ByteCache:
 
     def _evicted(self, path: str, entry: CachedEntry) -> None:
         """Post-eviction hook (2Q moves the key to its ghost list)."""
+
+    def _forget(self, path: str) -> None:
+        """Post-invalidation hook: drop any per-path policy state (2Q
+        removes the key from its probation/ghost queues). Unlike
+        ``_evicted``, the entry must leave no trace — the file is gone."""
+
+    def invalidate(self, path: str) -> bool:
+        """Drop a path outright (output GC/unlink): NOT an eviction — no
+        victim policy, no eviction counters, no ghost history. Inputs are
+        immutable so only unlinked outputs ever need this. Returns True
+        when the path was resident."""
+        with self._lock:
+            entry = self._entries.pop(path, None)
+            if entry is None:
+                return False
+            self._bytes -= entry.size
+            self._forget(path)
+            return True
 
     def clear(self) -> None:
         with self._lock:
@@ -346,6 +366,12 @@ class TwoQCache(ByteCache):
         if path in self._a1in:
             self._a1in_bytes -= self._a1in.pop(path)
             self._remember_ghost(path, entry.size)
+
+    def _forget(self, path: str) -> None:
+        if path in self._a1in:
+            self._a1in_bytes -= self._a1in.pop(path)
+        if path in self._ghost:
+            self._ghost_bytes -= self._ghost.pop(path)
 
     def clear(self) -> None:
         with self._lock:

@@ -8,14 +8,23 @@ pluggable (paper §5.1/§6 plus the beyond-paper scaling seams):
               ``hash % N``; RingPlacement = consistent hashing for
               elasticity) and which replica serves a read
               (least-loaded / power-of-two-choices)
-  transport   the InterconnectModel cost accounting + payload movement,
-              including the batched ``fetch_remote_batch`` that coalesces
-              all requests per (requester, owner) pair into one round trip,
+  transport   a pluggable backend behind one verb seam
+              (``backend="modeled"|"socket"|"shm"``): the modeled
+              in-process wire (InterconnectModel cost accounting), a real
+              framed-TCP wire with one serving loop per node, or the
+              zero-copy shared-memory fast path for co-located workers —
+              all with the batched ``fetch_remote_batch`` that coalesces
+              requests per (requester, owner) pair into one round trip
               and a thread-pool future API for async fetch
   cache       optional per-node byte-budget LRU read cache in front of
               both tiers (off by default; Hoard-style client caching)
-  accounting  per-node NodeClock timelines and the cluster aggregates the
-              scaling benchmarks plot
+  accounting  per-node NodeClock (modeled) + WallClock (measured)
+              timelines and the cluster aggregates the scaling
+              benchmarks plot
+
+The real-wire backends spawn serving loops and keep connections, so a
+cluster is a resource: use it as a context manager (or call ``close()``)
+to tear the transport down deterministically.
 
 ``FanStoreCluster`` composes them behind the same public surface the seed
 monolith had (``read``/``stat``/``write_file``/...), plus the batched
@@ -45,8 +54,10 @@ from repro.fanstore.metadata import (FileLocation, MetadataTable, StatRecord,
                                      modulo_placement, path_hash)
 from repro.fanstore.placement import (LeastLoadedSelector, ModuloPlacement,
                                       Placement, ReplicaSelector)
+from repro.fanstore.backends import make_backend
+from repro.fanstore.backends.modeled import InterconnectModel
 from repro.fanstore.store import NodeStore
-from repro.fanstore.transport import FetchItem, InterconnectModel, Transport
+from repro.fanstore.wire import FetchItem
 
 __all__ = ["FanStoreCluster", "InterconnectModel", "NodeClock"]
 
@@ -60,7 +71,9 @@ class FanStoreCluster:
                  selector: Optional[ReplicaSelector] = None,
                  cache_bytes: int = 0,
                  cache_policy: str = "lru",
-                 io_threads: int = 8) -> None:
+                 io_threads: int = 8,
+                 backend: str = "modeled",
+                 backend_options: Optional[Dict] = None) -> None:
         if num_nodes < 1:
             raise ValueError("need at least one node")
         self.codec = codec
@@ -77,9 +90,12 @@ class FanStoreCluster:
         self.accounting = ClusterAccounting(range(num_nodes))
         self.placement: Placement = placement or ModuloPlacement(num_nodes)
         self.selector: ReplicaSelector = selector or LeastLoadedSelector()
-        self.transport = Transport(self.net, self.nodes,
-                                   self.accounting.clocks,
-                                   num_threads=io_threads)
+        self.backend = backend
+        self.transport = make_backend(backend, self.net, self.nodes,
+                                      self.accounting.clocks,
+                                      wall=self.accounting.wall,
+                                      num_threads=io_threads,
+                                      **(backend_options or {}))
         self.cache_policy = cache_policy
         self.caches: Dict[int, ByteCache] = {
             i: make_cache(cache_policy, cache_bytes) for i in range(num_nodes)}
@@ -377,9 +393,28 @@ class FanStoreCluster:
         return self.transport.submit(self.prefetch_window, requester,
                                      list(paths), materialize=materialize)
 
-    def shutdown(self) -> None:
-        """Join the transport's I/O pool (spawned lazily by async reads)."""
-        self.transport.shutdown()
+    # ---- lifecycle ---------------------------------------------------------
+    def start(self) -> "FanStoreCluster":
+        """Bring the transport up (socket backend: bind + spawn the
+        per-node serving loops). Idempotent; remote verbs also start the
+        wire lazily, so this is only needed to pin startup cost."""
+        self.transport.start()
+        return self
+
+    def close(self) -> None:
+        """Deterministic teardown: stop serving loops, drop connections,
+        and join the transport's I/O pool (spawned lazily by async reads).
+        Safe to call twice; a closed cluster may be restarted."""
+        self.transport.close()
+
+    # legacy name (pre-lifecycle API); same full teardown
+    shutdown = close
+
+    def __enter__(self) -> "FanStoreCluster":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def stat(self, path: str) -> StatRecord:
         st = self.metadata.stat(path)
@@ -563,6 +598,38 @@ class FanStoreCluster:
                 out.append(st)
         return out
 
+    def unlink(self, requester: int, path: str) -> StatRecord:
+        """Delete a committed output file (output GC).
+
+        Drops the owner-side payload AND the replicated metadata record in
+        one atomic step, so the name is immediately reusable by a new
+        writer (single-write applies per-lifetime of a name, not forever).
+        Input files are immutable for the training lifetime — unlinking
+        one raises ``PermissionError``; a missing path raises
+        ``FileNotFoundError``. Returns the stat of the removed file.
+        """
+        if requester in self.failed:
+            raise IOError(f"node {requester} is failed")
+        path = path.strip("/")
+        if self.metadata.lookup(path) is not None:
+            raise PermissionError(
+                f"{path}: input files are immutable (cannot unlink)")
+        with self._lock:
+            hit = self.output_ns.lookup(path)
+            if hit is None:
+                raise FileNotFoundError(path)
+            st, loc = hit
+            owner = loc.node_id
+            self.nodes[owner].drop_output(path)
+            self.output_ns.remove(path)
+            self.output_meta[owner].pop(path, None)
+            # a reader may hold the dead payload in its client cache; a
+            # rewrite of the freed name must never serve the old bytes
+            for cache in self.caches.values():
+                if cache.enabled:
+                    cache.invalidate(path)
+        return st
+
     def write_many_async(self, writer: int,
                          entries: Sequence[Tuple[str, bytes]], *,
                          batched: bool = True, lane: str = "write"
@@ -577,6 +644,11 @@ class FanStoreCluster:
 
     def makespan_s(self) -> float:
         return self.accounting.makespan_s()
+
+    def measured_makespan_s(self) -> float:
+        """Measured (wall-clock) counterpart of :meth:`makespan_s` — only
+        nonzero after a real-wire backend (socket/shm) moved bytes."""
+        return self.accounting.measured_makespan_s()
 
     def aggregate_bandwidth(self) -> float:
         return self.accounting.aggregate_bandwidth()

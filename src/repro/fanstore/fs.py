@@ -138,6 +138,12 @@ class FanStoreFS:
         except FileNotFoundError:
             return False
 
+    def unlink(self, path: str) -> None:
+        """Delete a committed output file (output GC; inputs are
+        immutable). Mount-prefixed path, like every FS-adapter call."""
+        self.resolve(path)
+        self.session.unlink(path)
+
     def walk_count(self, path: str = "") -> int:
         """The start-of-training metadata traversal (paper §3.3): count files."""
         return self.session.walk_count(path)

@@ -4,8 +4,9 @@ The paper detours glibc entry points so unmodified binaries hit FanStore.
 In-process Python the analogous seam is the callable itself. Two levels:
 
 * path-level: ``builtins.open``, ``os.stat``, ``os.listdir``,
-  ``os.scandir``, ``os.path.exists`` and ``os.path.getsize`` route any
-  path under the mount prefix into the session;
+  ``os.scandir``, ``os.path.exists``, ``os.path.getsize`` and
+  ``os.unlink``/``os.remove`` (output GC) route any path under the mount
+  prefix into the session;
 * fd-level (the part a real detour library must get right): ``os.open``
   returns a session descriptor (numbered from ``FD_BASE``, far above any
   real fd), and ``os.read``/``os.write``/``os.lseek``/``os.close``/
@@ -53,6 +54,8 @@ def intercept(client: Union[FanStoreFS, FanStoreSession]
     real_os_lseek = os.lseek
     real_os_close = os.close
     real_os_fstat = os.fstat
+    real_unlink = os.unlink
+    real_remove = os.remove
 
     def _ours(path) -> bool:
         return isinstance(path, (str, os.PathLike)) and \
@@ -96,6 +99,16 @@ def intercept(client: Union[FanStoreFS, FanStoreSession]
         if _ours(path):
             return session.getsize(os.fspath(path))
         return real_getsize(path)
+
+    def _unlink(path, *a, **kw):
+        if _ours(path):
+            return session.unlink(os.fspath(path))
+        return real_unlink(path, *a, **kw)
+
+    def _remove(path, *a, **kw):
+        if _ours(path):
+            return session.unlink(os.fspath(path))
+        return real_remove(path, *a, **kw)
 
     # ---- fd level ----------------------------------------------------------
     def _os_open(path, flags, *a, **kw):
@@ -141,6 +154,8 @@ def intercept(client: Union[FanStoreFS, FanStoreSession]
     os.lseek = _os_lseek
     os.close = _os_close
     os.fstat = _os_fstat
+    os.unlink = _unlink
+    os.remove = _remove
     try:
         yield client
     finally:
@@ -156,3 +171,5 @@ def intercept(client: Union[FanStoreFS, FanStoreSession]
         os.lseek = real_os_lseek
         os.close = real_os_close
         os.fstat = real_os_fstat
+        os.unlink = real_unlink
+        os.remove = real_remove

@@ -149,6 +149,27 @@ class MetadataTable:
     def lookup(self, path: str) -> Optional[Tuple[StatRecord, FileLocation]]:
         return self._files.get(path.strip("/"))
 
+    def remove(self, path: str) -> bool:
+        """Unlink a file record and prune directories it leaves empty
+        (parent dirs materialize with their first file and dissolve with
+        their last; the root always exists). Returns False when the path
+        held no file."""
+        path = path.strip("/")
+        if self._files.pop(path, None) is None:
+            return False
+        child = path
+        for parent in reversed(self._parents(path)):
+            kids = self._dirs.get(parent)
+            name = child[len(parent):].lstrip("/") if parent \
+                else child.split("/")[0]
+            if kids is not None and name in kids:
+                kids.remove(name)
+            if parent == "" or (kids is not None and kids):
+                break                  # still-populated dir: stop pruning
+            self._dirs.pop(parent, None)
+            child = parent
+        return True
+
     def stat(self, path: str) -> Optional[StatRecord]:
         path = path.strip("/")
         hit = self._files.get(path)

@@ -19,6 +19,7 @@ Each compute node runs one ``NodeStore`` holding:
 from __future__ import annotations
 
 import os
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -66,6 +67,12 @@ class NodeStore:
         self._partitions: Dict[int, bytes] = {}
         self._index: Dict[str, Tuple[int, FileRecord]] = {}
         self._cache: Dict[str, _CacheEntry] = {}
+        # the refcount cache is mutated by every thread that serves this
+        # node — transport pool workers AND (socket backend) per-connection
+        # handler threads — so open/release are locked: an unlocked
+        # refcount ++/-- pair can double-delete an entry (spurious
+        # KeyError to an innocent client) or strand it forever
+        self._cache_lock = threading.Lock()
         self._writes: Dict[str, _WriteBuffer] = {}
         # output tier (this node as the placement owner of written files):
         # committed payloads plus per-(writer, path) staging for chunks
@@ -118,42 +125,44 @@ class NodeStore:
         placement target of committed writes); outputs are RAM-resident
         already, so they bypass the refcount cache.
         """
-        entry = self._cache.get(path)
-        if entry is not None:
-            entry.refcount += 1
-            self.stats["cache_hits"] += 1
-            return entry.data
-        hit = self._index.get(path)
-        if hit is None:
-            out = self._outputs.get(path)
-            if out is not None:
-                self.stats["local_opens"] += 1
-                self.stats["bytes_read"] += len(out)
-                return out
-            raise FileNotFoundError(path)
-        pid, rec = hit
-        blob = self._partitions[pid]
-        raw = blob[rec.data_offset: rec.data_offset + rec.stored_size]
-        if rec.compressed_size:
-            from repro.fanstore.layout import _decompress
-            data = _decompress(self.codec, bytes(raw), rec.stat.st_size)
-            self.stats["decompressed"] += 1
-        else:
-            data = bytes(raw)
-        self._cache[path] = _CacheEntry(data=data, refcount=1)
-        self.stats["local_opens"] += 1
-        self.stats["bytes_read"] += len(data)
-        return data
+        with self._cache_lock:
+            entry = self._cache.get(path)
+            if entry is not None:
+                entry.refcount += 1
+                self.stats["cache_hits"] += 1
+                return entry.data
+            hit = self._index.get(path)
+            if hit is None:
+                out = self._outputs.get(path)
+                if out is not None:
+                    self.stats["local_opens"] += 1
+                    self.stats["bytes_read"] += len(out)
+                    return out
+                raise FileNotFoundError(path)
+            pid, rec = hit
+            blob = self._partitions[pid]
+            raw = blob[rec.data_offset: rec.data_offset + rec.stored_size]
+            if rec.compressed_size:
+                from repro.fanstore.layout import _decompress
+                data = _decompress(self.codec, bytes(raw), rec.stat.st_size)
+                self.stats["decompressed"] += 1
+            else:
+                data = bytes(raw)
+            self._cache[path] = _CacheEntry(data=data, refcount=1)
+            self.stats["local_opens"] += 1
+            self.stats["bytes_read"] += len(data)
+            return data
 
     def release(self, path: str) -> None:
         """close(): refcount--; evict at zero (paper's counter table)."""
-        entry = self._cache.get(path)
-        if entry is None:
-            return
-        entry.refcount -= 1
-        if entry.refcount <= 0:
-            del self._cache[path]
-            self.stats["evictions"] += 1
+        with self._cache_lock:
+            entry = self._cache.get(path)
+            if entry is None:
+                return
+            entry.refcount -= 1
+            if entry.refcount <= 0:
+                del self._cache[path]
+                self.stats["evictions"] += 1
 
     def serve_remote(self, path: str) -> bytes:
         """Handle a peer's round-trip read request (no cache interaction)."""
@@ -162,6 +171,37 @@ class NodeStore:
         self.release(path)
         self.stats["bytes_served"] += len(data)
         return data
+
+    def serve_remote_view(self, path: str) -> memoryview:
+        """Zero-copy serve for co-located requesters (the shared-memory
+        backend): a borrowed ``memoryview`` over this store's own buffers.
+
+        Uncompressed partition records are served as a view straight into
+        the partition blob — the payload never exists twice; committed
+        outputs are viewed in place. Compressed records must decompress
+        (every backend pays that) and the view covers the fresh buffer.
+        The view is read-only borrowed memory: valid until the partition
+        (or output) is dropped, never to be mutated.
+        """
+        out = self._outputs.get(path)
+        if out is not None:
+            self.stats["bytes_served"] += len(out)
+            return memoryview(out)
+        hit = self._index.get(path)
+        if hit is None:
+            raise FileNotFoundError(path)
+        pid, rec = hit
+        blob = self._partitions[pid]
+        raw = memoryview(blob)[rec.data_offset:
+                               rec.data_offset + rec.stored_size]
+        if rec.compressed_size:
+            from repro.fanstore.layout import _decompress
+            data = _decompress(self.codec, bytes(raw), rec.stat.st_size)
+            self.stats["decompressed"] += 1
+            self.stats["bytes_served"] += len(data)
+            return memoryview(data)
+        self.stats["bytes_served"] += rec.stored_size
+        return raw
 
     @property
     def cached_bytes(self) -> int:
@@ -235,6 +275,19 @@ class NodeStore:
 
     def has_output(self, path: str) -> bool:
         return path in self._outputs
+
+    def output_size(self, path: str) -> Optional[int]:
+        """Size of a committed output payload WITHOUT booking a read
+        (metadata-only callers, e.g. the wire STAT verb); None when this
+        node does not own the path."""
+        data = self._outputs.get(path)
+        return len(data) if data is not None else None
+
+    def drop_output(self, path: str) -> int:
+        """Output GC: free a committed payload this node owns (unlink).
+        Returns the bytes reclaimed (0 when the path was not held)."""
+        data = self._outputs.pop(path, None)
+        return len(data) if data is not None else 0
 
     @property
     def output_bytes(self) -> int:

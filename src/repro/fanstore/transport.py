@@ -1,332 +1,27 @@
-"""Transport layer: the modeled fabric and the code that moves payloads.
+"""Compatibility shim: the transport layer moved behind a backend seam.
 
-``InterconnectModel`` is the first-order cost model (per-message latency +
-per-byte cost) the simulated cluster accounts against; it used to live in
-:mod:`repro.fanstore.cluster` and is re-exported there for compatibility.
+The PR-1 ``Transport`` (modeled fabric accounting + in-process payload
+movement) is now one of several interchangeable wires:
 
-``Transport`` is the seam every byte crosses. It knows nothing about
-placement or metadata — callers hand it resolved (path, owner, sizes)
-tuples and it (a) performs the actual payload movement against the
-``NodeStore`` instances and (b) accrues the modeled cost onto the right
-``NodeClock``. Two shapes:
+* :mod:`repro.fanstore.wire` — the framed message protocol and the
+  :class:`FetchItem` request descriptor;
+* :mod:`repro.fanstore.backends` — the backend package:
+  ``ModeledBackend`` (this module's old behavior, byte-for-byte),
+  ``SocketBackend`` (real TCP serving loops), ``SharedMemoryBackend``
+  (zero-copy co-located fast path), selected with
+  ``FanStoreCluster(backend=...)``.
 
-* ``fetch_local`` / ``fetch_remote`` — the per-file round trips the paper's
-  synchronous client issues (one ``latency_s`` per file).
-* ``fetch_remote_batch`` — the batched path: all requests for one
-  (requester, owner) pair ride a single round trip, so a batch of K files
-  from one owner accrues exactly one ``latency_s`` plus the summed byte
-  cost. This is what makes small-file workloads latency-bound -> bandwidth-
-  bound (Clairvoyant-prefetching-style request coalescing).
-* ``fetch_window`` / ``prefetch_local`` — the scheduled-prefetch lane used
-  by :mod:`repro.fanstore.prefetch`: one round trip per (requester, owner,
-  lookahead window) spanning many batches, accounted on the concurrent
-  ``NodeClock.prefetch_s`` timeline so makespan models I/O hidden behind
-  compute.
-* ``put_local`` / ``put_remote_batch`` — the write half, symmetric with the
-  read half: output payload chunks ship TO the placement owner (batched:
-  one round trip per (writer, owner) group), accounted on the concurrent
-  ``NodeClock.write_s`` lane so checkpoint flushes overlap the prefetch and
-  demand timelines instead of serializing in front of them. The legacy
-  ``write_file`` path books the same movement onto ``consume_s``.
-
-``submit``/``fetch_batch_async`` run any fetch on a shared thread pool and
-return a ``concurrent.futures.Future`` so data pipelines can overlap the
-next batch's I/O with compute without threading code of their own.
+Old imports keep working: ``Transport`` is the modeled backend,
+``InterconnectModel`` and ``FetchItem`` re-export from their new homes.
 """
 from __future__ import annotations
 
-import threading
-from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from repro.fanstore.backends.base import TransportBackend
+from repro.fanstore.backends.modeled import InterconnectModel, ModeledBackend
+from repro.fanstore.wire import FetchItem
 
-from repro.fanstore.accounting import NodeClock, WindowAccount
-from repro.fanstore.store import NodeStore
+# the pre-seam name: per-file + batched + window fetches, thread-pool
+# futures, modeled clocks — exactly what ModeledBackend preserves
+Transport = ModeledBackend
 
-
-@dataclass
-class InterconnectModel:
-    """First-order fabric model: per-message latency + per-byte cost.
-
-    Defaults approximate the paper's CPU cluster (100 Gb/s OPA, ~1.5 us):
-    latency_s per round trip, bandwidth_Bps per NIC direction. Local tier
-    is modeled with disk_bw_Bps (SSD) and a per-open syscall overhead.
-    cache_bw_Bps is the client-side read-cache (RAM) service rate.
-    """
-    latency_s: float = 1.5e-6
-    bandwidth_Bps: float = 100e9 / 8
-    disk_bw_Bps: float = 2.0e9
-    open_overhead_s: float = 3e-6
-    decompress_Bps: float = 1.5e9     # LZSS-class decode rate per core
-    cache_bw_Bps: float = 20e9        # DRAM-resident read cache
-
-    def remote_cost(self, nbytes: int) -> float:
-        return self.latency_s + nbytes / self.bandwidth_Bps
-
-    def local_cost(self, nbytes: int, *, compressed: bool = False) -> float:
-        t = self.open_overhead_s + nbytes / self.disk_bw_Bps
-        if compressed:
-            t += nbytes / self.decompress_Bps
-        return t
-
-    def cache_cost(self, nbytes: int) -> float:
-        return nbytes / self.cache_bw_Bps
-
-
-@dataclass(frozen=True)
-class FetchItem:
-    """One resolved read request: path + the sizes the cost model needs."""
-    path: str
-    size: int             # decompressed (st_size) bytes
-    stored: int           # bytes on the wire (compressed size if packed)
-    compressed: bool = False
-
-
-class Transport:
-    """Moves payloads between node stores and accounts the modeled cost."""
-
-    def __init__(self, net: InterconnectModel, nodes: Dict[int, NodeStore],
-                 clocks: Dict[int, NodeClock], *, num_threads: int = 8):
-        self.net = net
-        self.nodes = nodes
-        self.clocks = clocks
-        self._lock = threading.Lock()     # clock accrual from pool threads
-        self._pool: Optional[ThreadPoolExecutor] = None
-        self._num_threads = num_threads
-
-    # ---- local tier --------------------------------------------------------
-    def fetch_local(self, node_id: int, item: FetchItem, *,
-                    materialize: bool = True) -> bytes:
-        """Read a file the requesting node already holds (SSD tier)."""
-        node = self.nodes[node_id]
-        if materialize:
-            data = node.open_local(item.path)
-            node.release(item.path)
-        else:
-            data = b""
-        with self._lock:
-            clock = self.clocks[node_id]
-            clock.consume_s += self.net.local_cost(item.size,
-                                                   compressed=item.compressed)
-            clock.local_bytes += item.size
-        return data
-
-    # ---- remote tier -------------------------------------------------------
-    def fetch_remote(self, requester: int, owner: int, item: FetchItem, *,
-                     materialize: bool = True) -> bytes:
-        """One synchronous round trip: one ``latency_s`` for one file."""
-        data = self.nodes[owner].serve_remote(item.path) if materialize else b""
-        with self._lock:
-            self._account_remote(requester, owner, [item])
-        return data
-
-    def fetch_remote_batch(self, requester: int, owner: int,
-                           items: Sequence[FetchItem], *,
-                           materialize: bool = True) -> List[bytes]:
-        """Coalesced fetch: K files from one owner, ONE round-trip latency.
-
-        The requester pays ``latency_s`` once for the whole group and the
-        owner pays one request-handling ``open_overhead_s`` (one message,
-        one scatter-gather over its already-open partition blobs); per-byte
-        costs are unchanged. See ``_account_remote`` for the exact model.
-        """
-        if not items:
-            return []
-        if materialize:
-            out = [self.nodes[owner].serve_remote(it.path) for it in items]
-        else:
-            out = [b"" for _ in items]
-        with self._lock:
-            self._account_remote(requester, owner, items, round_trips=1)
-        return out
-
-    def fetch_window(self, requester: int, owner: int,
-                     items: Sequence[FetchItem], *,
-                     materialize: bool = True) -> List[bytes]:
-        """Scheduled-prefetch fetch: one round trip for a whole lookahead
-        WINDOW of files from one owner — the window may span many training
-        batches, so the per-owner latency is amortized far beyond per-batch
-        coalescing.
-
-        Cost accrues on the requester's *prefetch lane*
-        (``NodeClock.prefetch_s``), not ``consume_s``: the scheduler runs on
-        the transport pool concurrently with demand reads, so makespan
-        (``busy_s = max(consume, serve, prefetch)``) models the overlap
-        instead of serializing prefetch behind consumption. Each call appends
-        a :class:`WindowAccount` entry to the requester's per-window ledger.
-        The owner's serve side is accounted identically to
-        ``fetch_remote_batch`` (it answers one message either way).
-        """
-        if not items:
-            return []
-        if materialize:
-            out = [self.nodes[owner].serve_remote(it.path) for it in items]
-        else:
-            out = [b"" for _ in items]
-        with self._lock:
-            self._account_remote(requester, owner, items, round_trips=1,
-                                 lane="prefetch")
-        return out
-
-    def prefetch_local(self, node_id: int, items: Sequence[FetchItem], *,
-                       materialize: bool = True) -> List[bytes]:
-        """Stage node-local files (SSD tier) into the client cache ahead of
-        demand; costs accrue on the prefetch lane so the disk reads overlap
-        the consume timeline."""
-        node = self.nodes[node_id]
-        out: List[bytes] = []
-        total = 0
-        cost = 0.0
-        for it in items:
-            if materialize:
-                data = node.open_local(it.path)
-                node.release(it.path)
-            else:
-                data = b""
-            out.append(data)
-            total += it.size
-            cost += self.net.local_cost(it.size, compressed=it.compressed)
-        with self._lock:
-            clock = self.clocks[node_id]
-            clock.prefetch_s += cost
-            clock.prefetch_bytes += total    # sole ledger for staged bytes
-        return out
-
-    def _account_remote(self, requester: int, owner: int,
-                        items: Sequence[FetchItem], *,
-                        round_trips: Optional[int] = None,
-                        lane: str = "consume") -> None:
-        """Accrue modeled cost; ``round_trips`` defaults to one per item.
-
-        With ``round_trips=1`` (batched) the requester pays one ``latency_s``
-        for the whole group and the owner pays one request-handling
-        ``open_overhead_s``: the server answers a single message with one
-        scatter-gather over its already-open partition blobs instead of K
-        per-request handlings. Byte costs (NIC both sides, server storage
-        read, client decompress) are per-byte and unchanged.
-
-        ``lane="prefetch"`` books the requester side onto the concurrent
-        prefetch timeline (``prefetch_s`` + per-window ledger) instead of
-        ``consume_s``; the owner's serve side is lane-independent.
-        """
-        trips = len(items) if round_trips is None else round_trips
-        stored = sum(it.stored for it in items)
-        clock = self.clocks[requester]
-        cost = trips * self.net.latency_s + stored / self.net.bandwidth_Bps
-        for it in items:
-            if it.compressed:
-                cost += it.size / self.net.decompress_Bps
-        if lane == "prefetch":
-            clock.prefetch_s += cost
-            clock.prefetch_bytes += stored
-            clock.prefetch_windows += trips
-            clock.prefetch_log.append(WindowAccount(
-                owner=owner, files=len(items), bytes=stored, cost_s=cost))
-        else:
-            clock.consume_s += cost
-            clock.bytes_in += stored
-        oc = self.clocks[owner]
-        oc.serve_s += trips * self.net.open_overhead_s
-        oc.serve_s += stored / self.net.disk_bw_Bps
-        oc.serve_s += stored / self.net.bandwidth_Bps
-        oc.bytes_out += stored
-
-    # ---- write path (output payloads ship TO the placement owner) ----------
-    def put_local(self, node_id: int, pairs: Sequence[Tuple[FetchItem, bytes]],
-                  *, lane: str = "write") -> None:
-        """Persist output chunks on the writer's own store (writer == owner):
-        per-chunk SSD-tier flush cost on the writer's chosen lane."""
-        node = self.nodes[node_id]
-        total = 0
-        cost = 0.0
-        for item, data in pairs:
-            node.stage_output(node_id, item.path, data)
-            total += item.size
-            cost += self.net.open_overhead_s + item.size / self.net.disk_bw_Bps
-        with self._lock:
-            self._accrue_write(node_id, cost, total, len(pairs), lane)
-
-    def put_remote_batch(self, writer: int, owner: int,
-                         pairs: Sequence[Tuple[FetchItem, bytes]], *,
-                         lane: str = "write",
-                         round_trips: Optional[int] = None) -> None:
-        """Ship output chunks to the placement owner. With ``round_trips=1``
-        (the batched ``write_many`` fan-in) K chunks for one owner ride ONE
-        message: the writer pays ``latency_s`` once on its lane and the
-        owner handles one request (one ``open_overhead_s``) before the
-        per-byte NIC + SSD-flush costs — the exact mirror of
-        ``fetch_remote_batch`` on the read side. The carried metadata
-        publish rides the same message (no separate forward)."""
-        if not pairs:
-            return
-        node = self.nodes[owner]
-        for item, data in pairs:
-            node.stage_output(writer, item.path, data)
-        trips = len(pairs) if round_trips is None else round_trips
-        stored = sum(item.size for item, _ in pairs)
-        with self._lock:
-            cost = trips * self.net.latency_s + stored / self.net.bandwidth_Bps
-            self._accrue_write(writer, cost, stored, trips, lane)
-            oc = self.clocks[owner]
-            oc.serve_s += trips * self.net.open_overhead_s
-            oc.serve_s += stored / self.net.bandwidth_Bps
-            oc.serve_s += stored / self.net.disk_bw_Bps
-
-    def _accrue_write(self, node_id: int, cost: float, nbytes: int,
-                      rpcs: int, lane: str) -> None:
-        """Book writer-side cost: ``lane="write"`` is the concurrent write
-        timeline (overlaps consume/prefetch in ``busy_s``); ``"consume"``
-        is the legacy serialized path ``write_file``/``commit_write`` keeps."""
-        clock = self.clocks[node_id]
-        if lane == "write":
-            clock.write_s += cost
-            clock.write_bytes += nbytes
-            clock.write_rpcs += rpcs
-        else:
-            clock.consume_s += cost
-
-    # ---- cache tier (accounting only; payload comes from the cache) --------
-    def account_cache_hit(self, node_id: int, item: FetchItem) -> None:
-        with self._lock:
-            clock = self.clocks[node_id]
-            clock.consume_s += self.net.cache_cost(item.size)
-            clock.cache_hits += 1
-            clock.cache_hit_bytes += item.size
-
-    def account_cache_miss(self, node_id: int) -> None:
-        with self._lock:
-            self.clocks[node_id].cache_misses += 1
-
-    def account_cache_eviction(self, node_id: int, count: int = 1) -> None:
-        with self._lock:
-            self.clocks[node_id].cache_evictions += count
-
-    # ---- async future API --------------------------------------------------
-    @property
-    def pool(self) -> ThreadPoolExecutor:
-        if self._pool is None:
-            self._pool = ThreadPoolExecutor(
-                max_workers=self._num_threads,
-                thread_name_prefix="fanstore-io")
-        return self._pool
-
-    def submit(self, fn: Callable, *args, **kwargs) -> Future:
-        """Run any fetch callable on the shared I/O pool; returns a Future."""
-        return self.pool.submit(fn, *args, **kwargs)
-
-    def fetch_remote_batch_async(self, requester: int, owner: int,
-                                 items: Sequence[FetchItem], *,
-                                 materialize: bool = True) -> Future:
-        return self.submit(self.fetch_remote_batch, requester, owner, items,
-                           materialize=materialize)
-
-    def fetch_window_async(self, requester: int, owner: int,
-                           items: Sequence[FetchItem], *,
-                           materialize: bool = True) -> Future:
-        return self.submit(self.fetch_window, requester, owner, items,
-                           materialize=materialize)
-
-    def shutdown(self) -> None:
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
-            self._pool = None
+__all__ = ["FetchItem", "InterconnectModel", "Transport", "TransportBackend"]

@@ -1,0 +1,273 @@
+"""Wire protocol: the framed messages a real FanStore fabric speaks.
+
+The modeled transport never needed a byte format — payloads moved as
+Python references. A *real* backend (:mod:`repro.fanstore.backends.socket`)
+needs one, and this module is its single source of truth: every message is
+one length-prefixed frame, and every request/response body has an explicit
+``encode_*``/``decode_*`` pair so the server loop and the client stub can
+never drift apart.
+
+Frame layout (all integers big-endian)::
+
+    +------+----------+------------------+
+    | type | body len |       body       |
+    | u8   | u32      | <len> bytes      |
+    +------+----------+------------------+
+
+Request bodies:
+
+  FETCH / FETCH_BATCH / FETCH_WINDOW
+      u8 materialize | u32 count | count x (u16 path len + utf-8 path)
+      The three verbs share one body shape; the distinct type codes keep
+      the transport's intent (demand / batched / scheduled window) visible
+      on the wire, mirroring the modeled backend's accounting lanes.
+  PUT_BATCH
+      u32 writer | u32 count | count x (u16 path len + path
+                                        + u64 data len + data)
+      One frame carries a whole (writer, owner) fan-in group — the wire
+      twin of the modeled ``round_trips=1`` coalescing.
+  STAT
+      u16 path len + path
+
+Response bodies:
+
+  DATA      u64 serve_ns | u32 count | count x (u64 len + payload)
+            ``serve_ns`` is the server-side handling time, so the client
+            can account the owner's measured serve lane without a second
+            message.
+  OK        u64 serve_ns                      (PUT_BATCH acknowledgement)
+  STAT_OK   u64 serve_ns | 144-byte packed ``StatRecord``
+  ERR       u16 exc-name len + name | u16 msg len + msg
+            The server maps any handler exception into an error frame; the
+            client re-raises the same exception class (``decode_error``),
+            so remote failures surface exactly like local ones.
+
+``FetchItem`` also lives here: it is the resolved request descriptor every
+backend verb takes (path + the sizes the modeled cost accounting needs),
+shared by the wire encoders and the in-process backends alike.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+from dataclasses import dataclass
+from enum import IntEnum
+from typing import List, Sequence, Tuple
+
+from repro.fanstore.metadata import StatRecord
+
+__all__ = ["MsgType", "FetchItem", "WireError", "MAX_FRAME_BYTES",
+           "write_frame", "read_frame", "recv_exact",
+           "encode_fetch", "decode_fetch", "encode_data", "decode_data",
+           "encode_put", "decode_put", "encode_ok", "decode_ok",
+           "encode_stat", "decode_stat", "encode_stat_ok", "decode_stat_ok",
+           "encode_error", "decode_error"]
+
+
+class MsgType(IntEnum):
+    """Frame type codes. Requests < 16 <= responses."""
+    FETCH = 1          # one file, one round trip (the paper's sync client)
+    FETCH_BATCH = 2    # coalesced (requester, owner) group
+    FETCH_WINDOW = 3   # scheduled lookahead window (prefetch lane)
+    PUT_BATCH = 4      # output chunks fanned in to the placement owner
+    STAT = 5
+    DATA = 17
+    OK = 18
+    STAT_OK = 19
+    ERR = 20
+
+
+@dataclass(frozen=True)
+class FetchItem:
+    """One resolved read request: path + the sizes the cost model needs."""
+    path: str
+    size: int             # decompressed (st_size) bytes
+    stored: int           # bytes on the wire (compressed size if packed)
+    compressed: bool = False
+
+
+class WireError(IOError):
+    """Protocol-level failure (bad magic, truncated frame, oversized body)."""
+
+
+_HEADER = struct.Struct("!BI")
+_U8 = struct.Struct("!B")
+_U16 = struct.Struct("!H")
+_U32 = struct.Struct("!I")
+_U64 = struct.Struct("!Q")
+
+# one frame carries at most one coalesced window of payloads; 1 GiB bounds
+# a corrupted length prefix before it turns into an allocation bomb
+MAX_FRAME_BYTES = 1 << 30
+
+# exceptions a server may legitimately raise while serving; anything else
+# degrades to IOError on the client (same contract as a real RPC layer)
+_EXC_TYPES = {
+    "FileNotFoundError": FileNotFoundError,
+    "PermissionError": PermissionError,
+    "IsADirectoryError": IsADirectoryError,
+    "KeyError": KeyError,
+    "ValueError": ValueError,
+    "IOError": IOError,
+    "OSError": OSError,
+}
+
+
+# ---- framing ---------------------------------------------------------------
+def recv_exact(sock: socket.socket, n: int) -> memoryview:
+    """Read exactly ``n`` bytes (or raise ``ConnectionError`` on EOF),
+    returned as a memoryview over the single receive buffer — a frame
+    body is a whole coalesced window's payloads, so the decoders slice
+    payloads straight out of this buffer with exactly one copy each
+    instead of copying the full frame first."""
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        k = sock.recv_into(view[got:], n - got)
+        if k == 0:
+            raise ConnectionError("peer closed mid-frame")
+        got += k
+    return view
+
+
+def write_frame(sock: socket.socket, msg_type: MsgType, body: bytes) -> None:
+    if len(body) > MAX_FRAME_BYTES:
+        raise WireError(f"frame body {len(body)} exceeds {MAX_FRAME_BYTES}")
+    # two sendalls, not header+body concatenation: the body is a whole
+    # coalesced window's payloads and must not be copied a second time
+    sock.sendall(_HEADER.pack(int(msg_type), len(body)))
+    if body:
+        sock.sendall(body)
+
+
+def read_frame(sock: socket.socket) -> Tuple[MsgType, memoryview]:
+    mtype, length = _HEADER.unpack(recv_exact(sock, _HEADER.size))
+    if length > MAX_FRAME_BYTES:
+        raise WireError(f"frame body {length} exceeds {MAX_FRAME_BYTES}")
+    try:
+        mtype = MsgType(mtype)
+    except ValueError:
+        raise WireError(f"unknown frame type {mtype}")
+    return mtype, recv_exact(sock, length) if length else memoryview(b"")
+
+
+# ---- body encoders ---------------------------------------------------------
+def _put_str(out: List[bytes], s: str) -> None:
+    b = s.encode()
+    out.append(_U16.pack(len(b)))
+    out.append(b)
+
+
+def _get_str(body, off: int) -> Tuple[str, int]:
+    # body may be bytes or the frame memoryview; bytes() the short slice
+    (n,) = _U16.unpack_from(body, off)
+    off += _U16.size
+    return bytes(body[off:off + n]).decode(), off + n
+
+
+def encode_fetch(paths: Sequence[str], *, materialize: bool = True) -> bytes:
+    parts: List[bytes] = [_U8.pack(1 if materialize else 0),
+                          _U32.pack(len(paths))]
+    for p in paths:
+        _put_str(parts, p)
+    return b"".join(parts)
+
+
+def decode_fetch(body) -> Tuple[List[str], bool]:
+    materialize = bool(body[0])
+    (count,) = _U32.unpack_from(body, 1)
+    off = 1 + _U32.size
+    paths = []
+    for _ in range(count):
+        p, off = _get_str(body, off)
+        paths.append(p)
+    return paths, materialize
+
+
+def encode_data(payloads: Sequence[bytes], *, serve_ns: int = 0) -> bytes:
+    parts: List[bytes] = [_U64.pack(serve_ns), _U32.pack(len(payloads))]
+    for p in payloads:
+        parts.append(_U64.pack(len(p)))
+        parts.append(bytes(p))
+    return b"".join(parts)
+
+
+def decode_data(body) -> Tuple[List[bytes], int]:
+    (serve_ns,) = _U64.unpack_from(body, 0)
+    (count,) = _U32.unpack_from(body, _U64.size)
+    off = _U64.size + _U32.size
+    out = []
+    for _ in range(count):
+        (n,) = _U64.unpack_from(body, off)
+        off += _U64.size
+        # the payload's ONLY copy out of the receive buffer: it must own
+        # its memory (it outlives the frame — caches, output staging)
+        out.append(bytes(body[off:off + n]))
+        off += n
+    return out, serve_ns
+
+
+def encode_put(writer: int, entries: Sequence[Tuple[str, bytes]]) -> bytes:
+    parts: List[bytes] = [_U32.pack(writer), _U32.pack(len(entries))]
+    for path, data in entries:
+        _put_str(parts, path)
+        parts.append(_U64.pack(len(data)))
+        parts.append(bytes(data))
+    return b"".join(parts)
+
+
+def decode_put(body) -> Tuple[int, List[Tuple[str, bytes]]]:
+    (writer,) = _U32.unpack_from(body, 0)
+    (count,) = _U32.unpack_from(body, _U32.size)
+    off = 2 * _U32.size
+    entries = []
+    for _ in range(count):
+        path, off = _get_str(body, off)
+        (n,) = _U64.unpack_from(body, off)
+        off += _U64.size
+        entries.append((path, bytes(body[off:off + n])))
+        off += n
+    return writer, entries
+
+
+def encode_ok(*, serve_ns: int = 0) -> bytes:
+    return _U64.pack(serve_ns)
+
+
+def decode_ok(body) -> int:
+    (serve_ns,) = _U64.unpack(body)
+    return serve_ns
+
+
+def encode_stat(path: str) -> bytes:
+    parts: List[bytes] = []
+    _put_str(parts, path)
+    return b"".join(parts)
+
+
+def decode_stat(body) -> str:
+    path, _ = _get_str(body, 0)
+    return path
+
+
+def encode_stat_ok(st: StatRecord, *, serve_ns: int = 0) -> bytes:
+    return _U64.pack(serve_ns) + st.pack()
+
+
+def decode_stat_ok(body) -> Tuple[StatRecord, int]:
+    (serve_ns,) = _U64.unpack_from(body, 0)
+    return StatRecord.unpack(bytes(body[_U64.size:])), serve_ns
+
+
+def encode_error(exc: BaseException) -> bytes:
+    parts: List[bytes] = []
+    _put_str(parts, type(exc).__name__)
+    _put_str(parts, str(exc))
+    return b"".join(parts)
+
+
+def decode_error(body) -> BaseException:
+    name, off = _get_str(body, 0)
+    msg, _ = _get_str(body, off)
+    return _EXC_TYPES.get(name, IOError)(msg)

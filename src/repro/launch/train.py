@@ -4,9 +4,14 @@ Runs for real on this CPU container with the reduced (smoke) configs and on
 TPU with the full ones — the driver code is identical; only --preset and the
 mesh change. Demonstrates the whole system:
 
-  dataset -> fanstore partitions -> cluster (simulated nodes) ->
+  dataset -> fanstore partitions -> cluster (simulated nodes, pluggable
+  transport backend via --backend: modeled / socket / shm) ->
   FanStoreSession (descriptor API, batched read_many per step) ->
-  PrefetchLoader (threads) -> [optional device-store all_to_all fetch] ->
+  PrefetchLoader (threads; --prefetch-schedule switches it to the
+  clairvoyant schedule-driven mode: the epoch permutation materialized
+  from the sampler's peek_epoch() rides ahead of compute in
+  window-coalesced round trips) ->
+  [optional device-store all_to_all fetch] ->
   train_step (auto or int8 grad sync) -> CheckpointManager -> resume
 
 Checkpoints can additionally stream through the FanStore engine itself
@@ -34,6 +39,7 @@ from repro.data.sampler import GlobalUniformSampler, StratifiedSampler
 from repro.data.synthetic import files_to_tokens, token_dataset, tokens_to_files
 from repro.fanstore.api import FanStoreSession
 from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.prefetch import EpochSchedule, PrefetchScheduler
 from repro.fanstore.prepare import prepare_dataset
 from repro.models import build_model
 from repro.train.checkpoint import (CheckpointManager, restore_checkpoint,
@@ -66,6 +72,23 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--io-threads", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="modeled",
+                    choices=["modeled", "socket", "shm"],
+                    help="transport backend behind the cluster: the "
+                         "modeled interconnect, real TCP serving loops, "
+                         "or the zero-copy shared-memory fast path")
+    ap.add_argument("--prefetch-schedule", action="store_true",
+                    help="clairvoyant data plane: materialize the epoch's "
+                         "permutation from the sampler's peek_epoch() into "
+                         "an EpochSchedule and drive PrefetchLoader("
+                         "schedule=...) so whole lookahead windows of "
+                         "remote I/O ride ahead of compute (reads are "
+                         "pinned to node 0, which the schedule covers; "
+                         "steps past the first epoch fall back to demand "
+                         "reads)")
+    ap.add_argument("--prefetch-window", type=int, default=8,
+                    help="lookahead window in training steps for "
+                         "--prefetch-schedule")
     args = ap.parse_args()
 
     cfg = (get_smoke if args.preset == "smoke" else get_config)(args.arch)
@@ -82,11 +105,19 @@ def main() -> None:
     files = tokens_to_files(tokens)
     blobs, rep = prepare_dataset(files, num_partitions=args.nodes * 2,
                                  compress=False)
-    cluster = FanStoreCluster(args.nodes)
+    # the schedule-driven loader stages windows through the client cache;
+    # budget it to hold one epoch of node-0 reads (the whole dataset)
+    cache_bytes = 0
+    if args.prefetch_schedule:
+        cache_bytes = sum(len(b) for b in files.values()) + (1 << 20)
+    cluster = FanStoreCluster(args.nodes, backend=args.backend,
+                              cache_bytes=cache_bytes,
+                              cache_policy="belady" if cache_bytes else "lru")
     cluster.load_partitions(blobs, replication=args.replication)
     paths = sorted(files)
     print(f"fanstore: {rep.num_files} files in {rep.num_partitions} "
-          f"partitions on {args.nodes} nodes (R={args.replication})")
+          f"partitions on {args.nodes} nodes (R={args.replication}, "
+          f"backend={args.backend})")
 
     if args.sampler == "stratified":
         sampler = StratifiedSampler(args.num_samples, args.global_batch,
@@ -103,8 +134,11 @@ def main() -> None:
 
     def fetch_many(idxs) -> list:
         # each training step's batch is ONE coalesced read_many on the
-        # node whose turn it is (one modeled round trip per owner)
-        node = step_counter["n"] % args.nodes
+        # node whose turn it is (one modeled round trip per owner); under
+        # --prefetch-schedule every read is pinned to node 0, the
+        # requester the materialized schedule covers
+        node = 0 if args.prefetch_schedule \
+            else step_counter["n"] % args.nodes
         step_counter["n"] += 1
         return sessions[node].read_many([paths[i] for i in idxs])
 
@@ -112,8 +146,23 @@ def main() -> None:
         return {"tokens": jnp.asarray(files_to_tokens(blobs_list,
                                                       args.seq_len))}
 
+    scheduler = None
+    if args.prefetch_schedule:
+        # the epoch's permutation is fully determined by the sampler seed:
+        # materialize it WITHOUT advancing the sampler and let the loader
+        # keep lookahead windows of coalesced remote I/O in flight
+        schedule = EpochSchedule.from_sampler(sampler, paths,
+                                              num_requesters=1,
+                                              cluster=cluster)
+        scheduler = PrefetchScheduler(cluster, schedule, 0,
+                                      window_steps=args.prefetch_window)
+        print(f"prefetch-schedule: {scheduler.num_windows} windows of "
+              f"{args.prefetch_window} steps over "
+              f"{schedule.num_steps} steps")
+
     loader = PrefetchLoader(sampler, fetch_many=fetch_many, decode=decode,
-                            num_threads=args.io_threads, depth=2)
+                            num_threads=args.io_threads, depth=2,
+                            schedule=scheduler)
 
     # ---- train state / restore ------------------------------------------------
     state = init_state(model, jax.random.key(args.seed), ocfg,
@@ -131,30 +180,48 @@ def main() -> None:
                                       microbatches=args.microbatches))
     t0 = time.perf_counter()
     n_done = start_step
-    for batch in loader.batches(args.steps - start_step):
-        state, metrics = step_fn(state, batch)
-        n_done += 1
-        if n_done % 10 == 0 or n_done == args.steps:
-            dt = time.perf_counter() - t0
-            items = (n_done - start_step) * args.global_batch / dt
-            print(f"step {n_done:5d} loss={float(metrics['loss']):.4f} "
-                  f"lr={float(metrics['lr']):.2e} "
-                  f"throughput={items:.1f} items/s", flush=True)
-        if n_done % args.ckpt_every == 0:
-            extra = {"sampler_step": sampler.state.step,
-                     "sampler_epoch": sampler.state.epoch}
-            if mgr is not None:
-                mgr.save(n_done, state, extra=extra)
-            if args.ckpt_fanstore:
-                save_to_session(sessions[0], n_done, state, extra=extra)
-    extra = {"sampler_step": sampler.state.step,
-             "sampler_epoch": sampler.state.epoch}
-    if mgr is not None:
-        mgr.save(n_done, state, blocking=True, extra=extra)
-    if args.ckpt_fanstore and n_done % args.ckpt_every != 0:
-        save_to_session(sessions[0], n_done, state, extra=extra)
+    try:
+        for batch in loader.batches(args.steps - start_step):
+            state, metrics = step_fn(state, batch)
+            n_done += 1
+            if n_done % 10 == 0 or n_done == args.steps:
+                dt = time.perf_counter() - t0
+                items = (n_done - start_step) * args.global_batch / dt
+                print(f"step {n_done:5d} loss={float(metrics['loss']):.4f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"throughput={items:.1f} items/s", flush=True)
+            if n_done % args.ckpt_every == 0:
+                extra = {"sampler_step": sampler.state.step,
+                         "sampler_epoch": sampler.state.epoch}
+                if mgr is not None:
+                    mgr.save(n_done, state, extra=extra)
+                if args.ckpt_fanstore:
+                    save_to_session(sessions[0], n_done, state, extra=extra)
+        extra = {"sampler_step": sampler.state.step,
+                 "sampler_epoch": sampler.state.epoch}
+        if mgr is not None:
+            mgr.save(n_done, state, blocking=True, extra=extra)
+        if args.ckpt_fanstore and n_done % args.ckpt_every != 0:
+            save_to_session(sessions[0], n_done, state, extra=extra)
+    finally:
+        try:
+            loader.close()   # may re-raise an in-flight window error
+        finally:
+            cluster.close()  # join the I/O pool + any serving loops
     print(f"done: {n_done} steps, local-hit-rate="
           f"{cluster.local_hit_rate():.3f}")
+    if scheduler is not None:
+        clock = cluster.clocks[0]
+        print(f"prefetch-schedule: windows_issued="
+              f"{scheduler.windows_issued} "
+              f"bytes_scheduled={scheduler.bytes_scheduled} "
+              f"cache_hit_rate={clock.cache_hit_rate:.3f} "
+              f"prefetch_s={clock.prefetch_s:.6f} "
+              f"(prefetch lane overlaps demand; busy={clock.busy_s:.6f})")
+    if args.backend != "modeled":
+        print(f"measured: makespan={cluster.measured_makespan_s():.6f}s "
+              f"bytes={cluster.accounting.measured_bytes()} "
+              f"requests={cluster.accounting.measured_requests()}")
     if args.ckpt_fanstore:
         clock = cluster.clocks[0]
         print(f"fanstore-ckpt: write_bytes={clock.write_bytes} "

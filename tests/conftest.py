@@ -1,5 +1,7 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device;
 multi-device tests spawn subprocesses (tests/test_multidevice.py)."""
+import threading
+
 import numpy as np
 import pytest
 
@@ -7,3 +9,26 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def _fanstore_threads():
+    return {t for t in threading.enumerate()
+            if t.is_alive() and t.name.startswith("fanstore")}
+
+
+@pytest.fixture(autouse=True)
+def no_leaked_fanstore_threads():
+    """Every transport thread (I/O pool workers, socket serving loops,
+    connection handlers — all named ``fanstore-*``) must be torn down by
+    the test that spawned it: use the cluster as a context manager or
+    call ``cluster.close()``. Leaked pools outlive the test session and
+    leaked serving loops can hang CI, so the leaking test fails here.
+    ``close()`` joins everything (shutdown(wait=True) / thread joins), so
+    anything still alive after the test body IS a leak, not a race."""
+    before = _fanstore_threads()
+    yield
+    leaked = _fanstore_threads() - before
+    assert not leaked, (
+        "test leaked transport threads: "
+        f"{sorted(t.name for t in leaked)} — close the cluster "
+        "(with FanStoreCluster(...) as c: / c.close())")

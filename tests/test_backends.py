@@ -1,0 +1,430 @@
+"""Backend parity: the same traces over modeled / socket / shm wires.
+
+The transport seam's contract: every backend returns byte-identical
+payloads, enforces identical visibility semantics (visible-on-close,
+single-write), and accrues identical MODELED clocks — only payload
+movement (and measured wall accounting) may differ. Plus the seam's
+regression pin: ModeledBackend must reproduce the pre-refactor
+Transport's accounting exactly (hand-computed from the cost model), and
+socket teardown must be deterministic (the conftest leak fixture guards
+every test here too).
+"""
+import dataclasses
+import threading
+
+import pytest
+
+from repro.fanstore import wire
+from repro.fanstore.api import FanStoreSession
+from repro.fanstore.backends import BACKENDS, ShmArena, make_backend
+from repro.fanstore.cluster import FanStoreCluster, InterconnectModel
+from repro.fanstore.intercept import intercept
+from repro.fanstore.prepare import prepare_dataset
+
+ALL_BACKENDS = sorted(BACKENDS)
+
+
+def make_files(n=24, compress=True):
+    # mixed compressible / incompressible payloads so both the packed and
+    # raw partition-record paths cross every wire
+    files = {}
+    for i in range(n):
+        if i % 3 == 0:
+            files[f"train/f_{i:03d}.bin"] = bytes([i % 251]) * (2000 + i)
+        else:
+            files[f"train/f_{i:03d}.bin"] = bytes(
+                (i * j * 2654435761) % 256 for j in range(1500 + i))
+    return files
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    files = make_files()
+    blobs, _ = prepare_dataset(files, 8, compress=True)
+    return files, blobs
+
+
+def build(backend, blobs, *, nodes=4, cache_mb=0, policy="lru"):
+    c = FanStoreCluster(nodes, backend=backend,
+                        cache_bytes=cache_mb * 1024 * 1024,
+                        cache_policy=policy)
+    c.load_partitions(blobs, replication=1)
+    return c
+
+
+# ---- payload parity ---------------------------------------------------------
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_read_many_payload_parity(backend, dataset):
+    files, blobs = dataset
+    paths = sorted(files)
+    with build(backend, blobs) as c:
+        for requester in range(c.num_nodes):
+            got = [bytes(d) for d in c.read_many(requester, paths)]
+            assert got == [files[p] for p in paths]
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_prefetch_window_trace_parity(backend, dataset):
+    files, blobs = dataset
+    paths = sorted(files)
+    with build(backend, blobs, cache_mb=8, policy="lru") as c:
+        staged = c.prefetch_window(1, paths)
+        assert staged > 0
+        got = [bytes(d) for d in c.read_many(1, paths)]
+        assert got == [files[p] for p in paths]
+        # every non-local demand read must have hit the prefetched cache
+        assert c.clocks[1].cache_misses == 0
+        assert c.clocks[1].cache_hits > 0
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_write_many_and_checkpoint_trace(backend, dataset):
+    _, blobs = dataset
+    payloads = {f"out/w_{i:02d}.bin": bytes([i]) * (5000 + i)
+                for i in range(8)}
+    with build(backend, blobs) as c:
+        c.write_many(2, sorted(payloads.items()))
+        for reader in range(c.num_nodes):
+            got = [bytes(d) for d in c.read_many(reader, sorted(payloads))]
+            assert got == [payloads[p] for p in sorted(payloads)]
+        # streaming checkpoint shards ride the same put verbs
+        session = FanStoreSession(c, 1)
+        writer = session.checkpoint_writer(chunk_bytes=1024)
+        shard = bytes(range(256)) * 40
+        writer.write_shard("ckpt/step_1/shard_000.npy", shard)
+        assert bytes(c.read(3, "ckpt/step_1/shard_000.npy")) == shard
+        assert writer.chunks_flushed >= len(shard) // 1024
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_visibility_and_single_write_semantics(backend, dataset):
+    _, blobs = dataset
+    with build(backend, blobs) as c:
+        s_writer = FanStoreSession(c, 0)
+        s_reader = FanStoreSession(c, 3)
+        fd = s_writer.open("out/vis.bin", "wb")
+        s_writer.write(fd, b"payload")
+        s_writer.fsync(fd)                      # streamed, NOT yet visible
+        assert not s_reader.exists("out/vis.bin")
+        s_writer.close(fd)                      # visible-on-close
+        assert s_reader.exists("out/vis.bin")
+        assert s_reader.read_many(["out/vis.bin"])[0] == b"payload"
+        with pytest.raises(PermissionError):    # single-write
+            c.write_file(1, "out/vis.bin", b"other")
+        with pytest.raises(PermissionError):    # inputs immutable
+            c.write_file(1, c.nodes[1].local_paths()[0], b"x")
+
+
+def test_modeled_clock_parity_across_backends(dataset):
+    """The modeled timelines are backend-independent BY CONTRACT: the same
+    trace accrues identical NodeClocks whichever wire moved the bytes."""
+    files, blobs = dataset
+    paths = sorted(files)
+    snapshots = {}
+    for backend in ALL_BACKENDS:
+        with build(backend, blobs) as c:
+            for requester in range(c.num_nodes):
+                c.read_many(requester, paths[requester::2])
+            c.write_many(1, [("out/a.bin", b"A" * 4096)])
+            snapshots[backend] = {
+                nid: dataclasses.replace(clock, prefetch_log=[])
+                for nid, clock in c.clocks.items()}
+    base = snapshots["modeled"]
+    for backend in ALL_BACKENDS:
+        assert snapshots[backend] == base, (
+            f"{backend} modeled clocks drifted from the modeled backend")
+
+
+# ---- regression pin: modeled accounting == pre-refactor Transport ----------
+def test_modeled_accounting_regression_pin(dataset):
+    """Hand-computed pre-refactor model, pinned: a batched fetch of K
+    remote files from one owner costs the requester ONE latency plus the
+    byte time, and the owner one open_overhead plus disk+NIC byte time."""
+    files, blobs = dataset
+    net = InterconnectModel()
+    with FanStoreCluster(2, backend="modeled", interconnect=net) as c:
+        c.load_partitions(blobs, replication=1)
+        remote = [p for p in sorted(files) if not c.nodes[0].has(p)][:5]
+        items = []
+        for p in remote:
+            st, loc = c.metadata.lookup(p)
+            items.append(c._fetch_item(p, st, loc))
+        c.read_many(0, remote, batched=True)
+        stored = sum(it.stored for it in items)
+        expect = net.latency_s + stored / net.bandwidth_Bps
+        for it in items:
+            if it.compressed:
+                expect += it.size / net.decompress_Bps
+        assert c.clocks[0].consume_s == pytest.approx(expect, rel=0, abs=0)
+        expect_serve = (net.open_overhead_s + stored / net.disk_bw_Bps
+                        + stored / net.bandwidth_Bps)
+        assert c.clocks[1].serve_s == pytest.approx(expect_serve,
+                                                    rel=0, abs=0)
+        assert c.clocks[0].bytes_in == stored
+        assert c.clocks[1].bytes_out == stored
+
+
+# ---- measured accounting ----------------------------------------------------
+@pytest.mark.parametrize("backend", ["socket", "shm"])
+def test_measured_wall_clocks_accrue(backend, dataset):
+    files, blobs = dataset
+    paths = sorted(files)
+    with build(backend, blobs) as c:
+        c.read_many(0, paths)
+        c.write_many(0, [("out/m.bin", b"M" * 8192)])
+        wall = c.accounting.wall
+        assert c.measured_makespan_s() > 0
+        assert sum(w.consume_ns for w in wall.values()) > 0
+        assert sum(w.serve_ns for w in wall.values()) > 0
+        remote_bytes = sum(len(files[p]) for p in paths
+                           if not c.nodes[0].has(p))
+        local_bytes = sum(len(files[p]) for p in paths
+                          if c.nodes[0].has(p))
+        assert wall[0].bytes_in == remote_bytes + local_bytes
+        # reset_clocks clears the measured ledger with the modeled one
+        c.reset_clocks()
+        assert c.measured_makespan_s() == 0.0
+
+
+def test_modeled_backend_records_no_wall_time(dataset):
+    files, blobs = dataset
+    with build("modeled", blobs) as c:
+        c.read_many(0, sorted(files))
+        assert c.measured_makespan_s() == 0.0
+        assert c.accounting.measured_bytes() == 0
+
+
+# ---- commit atomicity under racing writers ---------------------------------
+@pytest.mark.parametrize("backend", ["socket", "shm"])
+def test_racing_writers_single_commit(backend, dataset):
+    """Two writers race the same path over a real wire: exactly one
+    commit wins, the loser gets PermissionError, and the committed
+    payload is exactly the winner's bytes (never an interleaving)."""
+    _, blobs = dataset
+    for trial in range(5):
+        with build(backend, blobs) as c:
+            path = f"out/race_{trial}.bin"
+            payloads = {1: b"\xaa" * 40000, 2: b"\xbb" * 40000}
+            errors = {}
+            barrier = threading.Barrier(2)
+
+            def contend(writer):
+                try:
+                    barrier.wait()
+                    c.write_many(writer, [(path, payloads[writer])])
+                except PermissionError as e:
+                    errors[writer] = e
+
+            ts = [threading.Thread(target=contend, args=(w,))
+                  for w in payloads]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            assert len(errors) == 1, "exactly one racer must lose"
+            winner = next(w for w in payloads if w not in errors)
+            assert bytes(c.read(3, path)) == payloads[winner]
+            # the loser's staged chunks were dropped on the owner
+            owner = c.placement.owner(path)
+            assert not c.nodes[owner]._staging
+
+
+# ---- the wire protocol itself ----------------------------------------------
+def test_wire_frame_roundtrips():
+    paths = ["a/b.bin", "c/d e.bin", "träin/ü.bin"]
+    body = wire.encode_fetch(paths, materialize=False)
+    assert wire.decode_fetch(body) == (paths, False)
+    payloads = [b"", b"x" * 10, bytes(range(256))]
+    data, serve_ns = wire.decode_data(wire.encode_data(payloads,
+                                                       serve_ns=1234))
+    assert [bytes(p) for p in data] == payloads and serve_ns == 1234
+    writer, entries = wire.decode_put(wire.encode_put(
+        7, [("out/x.bin", b"abc"), ("out/y.bin", b"")]))
+    assert writer == 7
+    assert [(p, bytes(d)) for p, d in entries] == [
+        ("out/x.bin", b"abc"), ("out/y.bin", b"")]
+    exc = wire.decode_error(wire.encode_error(FileNotFoundError("nope")))
+    assert isinstance(exc, FileNotFoundError) and str(exc) == "nope"
+    exc = wire.decode_error(wire.encode_error(RuntimeError("boom")))
+    assert isinstance(exc, IOError)          # unknown classes degrade
+
+
+def test_socket_error_frames_reraise(dataset):
+    """A server-side FileNotFoundError crosses the wire as an ERR frame
+    and re-raises client-side — and the connection stays usable."""
+    files, blobs = dataset
+    with build("socket", blobs) as c:
+        owner = next(i for i in range(4) if i != 1
+                     and c.nodes[i].local_paths())
+        item = wire.FetchItem(path="no/such.bin", size=10, stored=10)
+        with pytest.raises(FileNotFoundError):
+            c.transport.fetch_remote_batch(1, owner, [item])
+        good = c.nodes[owner].local_paths()[0]
+        st, loc = c.metadata.lookup(good)
+        out = c.transport.fetch_remote_batch(
+            1, owner, [c._fetch_item(good, st, loc)])
+        assert bytes(out[0]) == files[good]
+        # the STAT verb answers over the same connection
+        assert c.transport.stat_remote(1, owner, good).st_size == \
+            len(files[good])
+
+
+def test_socket_teardown_joins_serving_loops(dataset):
+    _, blobs = dataset
+    c = build("socket", blobs)
+    c.read_many(0, sorted(c.metadata.paths())[:6])
+    assert any(t.name.startswith("fanstore-serve")
+               for t in threading.enumerate())
+    c.close()
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("fanstore")]
+    c.close()                                  # idempotent
+
+
+# ---- shm extras -------------------------------------------------------------
+def test_shm_zero_copy_views(dataset):
+    files, blobs = dataset
+    with build("shm", blobs) as c:
+        owner = next(i for i in range(4) if c.nodes[i].local_paths())
+        path = c.nodes[owner].local_paths()[0]
+        st, loc = c.metadata.lookup(path)
+        views = c.transport.fetch_views(
+            1, owner, [c._fetch_item(path, st, loc)])
+        assert bytes(views[0]) == files[path]
+        rec = c.nodes[owner].record_for(path)
+        if not rec.compressed_size:            # raw record: true zero copy
+            assert views[0].obj is c.nodes[owner]._partitions[loc.partition_id]
+
+
+def test_shm_arena_cross_process_handle():
+    arena = ShmArena()
+    if not arena.available:
+        pytest.skip("multiprocessing.shared_memory unavailable")
+    payload = bytes(range(256)) * 16
+    try:
+        name, size = arena.export(payload)
+        assert bytes(arena.view(name, size)) == payload
+    finally:
+        arena.close()
+    assert len(arena) == 0
+
+
+def test_shm_arena_consumer_close_keeps_peer_export():
+    """Regression: a consumer arena's close() used to unlink segments it
+    had merely attached, destroying the producer's live export."""
+    producer, consumer = ShmArena(), ShmArena()
+    if not producer.available:
+        pytest.skip("multiprocessing.shared_memory unavailable")
+    payload = b"peer payload" * 100
+    try:
+        name, size = producer.export(payload)
+        assert bytes(consumer.view(name, size)) == payload
+        consumer.close()                   # unmap only — not unlink
+        late = ShmArena()
+        try:
+            assert bytes(late.view(name, size)) == payload
+        finally:
+            late.close()
+    finally:
+        producer.close()
+
+
+# ---- unlink / output GC -----------------------------------------------------
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_unlink_drops_payload_and_metadata(backend, dataset):
+    _, blobs = dataset
+    with build(backend, blobs) as c:
+        session = FanStoreSession(c, 0)
+        session.write_many([("gc/del.bin", b"D" * 4096),
+                            ("gc/keep.bin", b"K" * 10)])
+        owner = c.placement.owner("gc/del.bin")
+        assert c.nodes[owner].has_output("gc/del.bin")
+        session.unlink("gc/del.bin")
+        assert not c.nodes[owner].has_output("gc/del.bin")   # payload GC'd
+        with pytest.raises(FileNotFoundError):
+            c.read(1, "gc/del.bin")
+        assert session.listdir("gc") == ["keep.bin"]         # delisted
+        session.write_many([("gc/del.bin", b"new")])         # name reusable
+        assert bytes(c.read(2, "gc/del.bin")) == b"new"
+        session.unlink("gc/keep.bin")
+        session.unlink("gc/del.bin")
+        assert "gc" not in session.listdir("")    # empty dir dissolved
+        with pytest.raises(PermissionError):      # inputs immutable
+            session.unlink(sorted(c.metadata.paths())[0])
+        with pytest.raises(FileNotFoundError):
+            session.unlink("gc/never-existed.bin")
+
+
+@pytest.mark.parametrize("policy", ["lru", "2q"])
+def test_unlink_invalidates_client_caches(policy, dataset):
+    """Regression: a reader's client cache held the deleted payload, so a
+    rewrite of the freed name served the OLD bytes from cache."""
+    _, blobs = dataset
+    with build("modeled", blobs, cache_mb=4, policy=policy) as c:
+        c.write_file(0, "gc/stale.bin", b"OLD PAYLOAD")
+        assert bytes(c.read(1, "gc/stale.bin")) == b"OLD PAYLOAD"
+        assert "gc/stale.bin" in c.caches[1]          # cached on the reader
+        c.unlink(0, "gc/stale.bin")
+        assert "gc/stale.bin" not in c.caches[1]
+        c.write_file(2, "gc/stale.bin", b"NEW!")
+        assert bytes(c.read(1, "gc/stale.bin")) == b"NEW!"
+
+
+def test_unlink_intercepted_os_calls(dataset):
+    import os
+    _, blobs = dataset
+    with build("modeled", blobs) as c:
+        session = FanStoreSession(c, 0)
+        with intercept(session):
+            with open("/fanstore/gc/a.bin", "wb") as f:
+                f.write(b"a")
+            with open("/fanstore/gc/b.bin", "wb") as f:
+                f.write(b"b")
+            assert os.path.exists("/fanstore/gc/a.bin")
+            os.unlink("/fanstore/gc/a.bin")
+            assert not os.path.exists("/fanstore/gc/a.bin")
+            os.remove("/fanstore/gc/b.bin")
+            assert not os.path.exists("/fanstore/gc/b.bin")
+        assert os.unlink is not None        # detour restored
+        with pytest.raises(FileNotFoundError):
+            c.read(1, "gc/a.bin")
+
+
+# ---- lifecycle --------------------------------------------------------------
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_cluster_context_manager_joins_pool(backend, dataset):
+    _, blobs = dataset
+    with build(backend, blobs) as c:
+        fut = c.read_many_async(0, sorted(c.metadata.paths())[:4])
+        assert fut.result()
+        assert any(t.name.startswith("fanstore-io")
+                   for t in threading.enumerate())
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("fanstore")]
+
+
+def test_closed_backend_refuses_lazy_restart(dataset):
+    """Regression: an undrained task racing close() used to respawn the
+    serving loops AFTER teardown, leaking them. The lazy path now raises
+    on a closed backend; only an explicit start() reopens it."""
+    files, blobs = dataset
+    c = build("socket", blobs)
+    remote = next(p for p in sorted(files) if not c.nodes[0].has(p))
+    assert bytes(c.read(0, remote)) == files[remote]
+    c.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        c.read(0, remote)
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("fanstore-serve")]
+    c.start()                                  # explicit reopen is allowed
+    assert bytes(c.read(0, remote)) == files[remote]
+    c.close()
+    # regression: the lazy pool property used to respawn workers after
+    # close() (and the next close() no-op'd, leaking them forever)
+    with pytest.raises(RuntimeError, match="closed"):
+        c.read_many_async(0, [remote])
+
+
+def test_make_backend_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown transport backend"):
+        FanStoreCluster(2, backend="rdma")
