@@ -13,9 +13,12 @@ Prints ``name,metric=value,...`` CSV-ish lines.
 writes the machine-readable BENCH_io.json perf snapshot: epoch makespan,
 hit rates, and bytes moved for the seed / batched / prefetched arms at 8
 and 64 nodes, the write half (write_many vs per-file loop, checkpoint
-flush makespan with/without prefetch-lane overlap), plus the
-LRU-vs-Belady-vs-2Q cache comparison. ``--smoke`` shrinks it to the
-fast-lane CI variant (scripts/ci.sh fast).
+flush makespan with/without prefetch-lane overlap), the
+LRU-vs-Belady-vs-2Q cache comparison, the multi-tenant ``workers`` block
+(shared node cache tier vs private per-worker caches at the same total
+bytes), and the ``measured`` block (read+write, scheduled-prefetch, and
+checkpoint-overlap traces over the real socket/shm wires). ``--smoke``
+shrinks it to the fast-lane CI variant (scripts/ci.sh fast).
 """
 from __future__ import annotations
 
@@ -51,6 +54,18 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
     cp = result["cache_policies"]
     assert cp["belady_hit_rate"] > cp["lru_hit_rate"], (
         "Belady no longer beats LRU at equal byte budget")
+    # multi-tenant guards: the shared node cache tier must strictly beat
+    # private per-worker caches of the same total bytes, and the
+    # per-worker attribution ledgers must tie out against the tier totals
+    wb = result["workers"]
+    assert wb["shared"]["makespan_s"] < wb["private"]["makespan_s"], (
+        f"shared cache tier no longer beats private per-worker caches at "
+        f"{wb['nodes']}x{wb['workers']} "
+        f"({wb['shared']['makespan_s']} vs {wb['private']['makespan_s']})")
+    assert wb["shared"]["cache_hit_rate"] > wb["private"]["cache_hit_rate"], (
+        "shared-tier hit rate regressed below the private baseline")
+    assert wb["shared"]["attribution_ok"] and wb["private"]["attribution_ok"], (
+        "per-worker cache attribution no longer sums to the tier totals")
     # hardware-truth guards: real bytes moved over real wires, serving
     # loops torn down, and the co-located shm path beat the socket path
     m = result["measured"]
@@ -65,6 +80,37 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
             f"trace ({w['measured_bytes']} != {w['read_bytes']})")
     assert m["shm_speedup_vs_socket"] > 1.0, (
         "co-located shared-memory path no longer beats the socket path")
+    # measured-arm guards for the prefetch benchmark, mirroring the
+    # read+write trace's: nonzero time on the PREFETCH lane specifically,
+    # ledger == staged bytes, clean teardown, shm beats socket
+    mp = m["prefetch"]
+    assert mp["teardown_clean"], "prefetch measured arm leaked threads"
+    for wire_arm in ("socket", "shm"):
+        w = mp[wire_arm]
+        assert w["measured_prefetch_s"] > 0, (
+            f"{wire_arm} prefetch arm recorded no measured prefetch-lane "
+            f"time — the scheduled windows did not cross the wire")
+        assert w["measured_bytes"] == w["staged_bytes"] > 0, (
+            f"{wire_arm} prefetch byte ledger disagrees with the staged "
+            f"schedule ({w['measured_bytes']} != {w['staged_bytes']})")
+        assert w["cache_hits"] > 0, (
+            f"{wire_arm} prefetch arm demand reads never hit the cache")
+    assert mp["shm_speedup_vs_socket"] > 1.0, (
+        "shm no longer beats socket on the scheduled-prefetch wire leg")
+    # ... and for the checkpoint-overlap benchmark: BOTH concurrent lanes
+    # (prefetch + write) must show measured time in the same wall window
+    mc = m["checkpoint"]
+    assert mc["teardown_clean"], "checkpoint measured arm leaked threads"
+    for wire_arm in ("socket", "shm"):
+        w = mc[wire_arm]
+        assert w["measured_write_s"] > 0 and w["measured_prefetch_s"] > 0, (
+            f"{wire_arm} checkpoint-overlap arm did not exercise both "
+            f"concurrent lanes (write={w['measured_write_s']}, "
+            f"prefetch={w['measured_prefetch_s']})")
+        assert w["elapsed_s"] > 0 and w["measured_makespan_s"] > 0, (
+            f"{wire_arm} checkpoint arm recorded no measured time")
+    assert mc["shm_speedup_vs_socket"] > 1.0, (
+        "shm no longer beats socket on the checkpoint-overlap trace")
     for entry in result["arms"]:
         w = entry["write"]
         print(f"io_json,nodes={entry['nodes']},"
@@ -76,9 +122,21 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
     print(f"io_json,lru_hit={cp['lru_hit_rate']:.3f},"
           f"belady_hit={cp['belady_hit_rate']:.3f},"
           f"twoq_hit={cp['2q_hit_rate']:.3f}", flush=True)
+    print(f"io_json,workers={wb['workers']},nodes={wb['nodes']},"
+          f"shared_hit={wb['shared']['cache_hit_rate']:.3f},"
+          f"private_hit={wb['private']['cache_hit_rate']:.3f},"
+          f"shared_tier_speedup={wb['shared_speedup']:.3f}", flush=True)
     print(f"io_json,measured_socket={m['socket']['elapsed_s']:.4f}s,"
           f"measured_shm={m['shm']['elapsed_s']:.4f}s,"
           f"shm_speedup={m['shm_speedup_vs_socket']:.2f}", flush=True)
+    print(f"io_json,measured_prefetch_socket="
+          f"{mp['socket']['elapsed_s']:.4f}s,"
+          f"measured_prefetch_shm={mp['shm']['elapsed_s']:.4f}s,"
+          f"prefetch_shm_speedup={mp['shm_speedup_vs_socket']:.2f}",
+          flush=True)
+    print(f"io_json,measured_ckpt_socket={mc['socket']['elapsed_s']:.4f}s,"
+          f"measured_ckpt_shm={mc['shm']['elapsed_s']:.4f}s,"
+          f"ckpt_shm_speedup={mc['shm_speedup_vs_socket']:.2f}", flush=True)
     print(f"io_json,wrote={path}", flush=True)
 
 

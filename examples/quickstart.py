@@ -2,10 +2,12 @@
 
   1. make a many-small-files dataset,
   2. pack it into partitions (the paper's preparation step),
-  3. stand up a 4-node transient store with replication,
-  4. open a descriptor-based FanStoreSession — reads, writes, and
+  3. declare the topology as a ClusterSpec (4 nodes x 2 workers,
+     replication 2) and stand the transient store up from it,
+  4. connect() a descriptor-based FanStoreSession — reads, writes, and
      directory listings all through one surface, including unmodified
-     user code via interception,
+     user code via interception; co-located workers share their node's
+     cache tier,
   5. write outputs back through the batched write path (payloads land on
      their placement owners, visible cluster-wide on close),
   6. train a tiny LM from it for a handful of steps.
@@ -22,7 +24,7 @@ from repro.configs import get_smoke
 from repro.data.pipeline import PrefetchLoader
 from repro.data.sampler import GlobalUniformSampler
 from repro.data.synthetic import files_to_tokens, token_dataset, tokens_to_files
-from repro.fanstore import FanStoreCluster, FanStoreSession, prepare_dataset
+from repro.fanstore import ClusterSpec, FanStoreCluster, prepare_dataset
 from repro.fanstore.intercept import intercept
 from repro.models import build_model
 from repro.train.optimizer import OptimizerConfig
@@ -35,12 +37,16 @@ blobs, report = prepare_dataset(files, num_partitions=8, compress=True)
 print(f"packed {report.num_files} files -> {report.num_partitions} partitions "
       f"(ratio {report.compression_ratio:.2f}x, {report.seconds:.2f}s)")
 
-# 3. transient store across 4 "nodes", each partition on 2 of them ------------
-cluster = FanStoreCluster(4, codec="lzss")
-cluster.load_partitions(blobs, replication=2)
+# 3. the topology as a value: 4 "nodes" x 2 co-located workers, each
+#    partition on 2 nodes. The spec is frozen, validated (typos raise with
+#    suggestions), and JSON round-trips for spawned worker processes.
+spec = ClusterSpec(num_nodes=4, workers_per_node=2, codec="lzss",
+                   replication=2)
+cluster = FanStoreCluster.from_spec(spec)
+cluster.load_partitions(blobs)
 
-# 4. one session per process: fds, batched verbs, interception ----------------
-session = FanStoreSession(cluster, node_id=0)
+# 4. one session per worker: fds, batched verbs, interception -----------------
+session = cluster.connect(node_id=0, worker_id=0)
 print("files visible:", session.walk_count())
 first = sorted(files)[0]
 fd = session.open(f"/fanstore/{first}")            # descriptor-based read
@@ -55,7 +61,7 @@ with intercept(session):
     os.close(fd)                                   # visible-on-close
 
 # 5. batched write path: one round trip per (writer, owner) pair --------------
-peer = FanStoreSession(cluster, node_id=2)
+peer = cluster.connect(node_id=2, worker_id=1)
 peer.write_many([(f"out/pred_{i:03d}.bin", bytes([i]) * 64)
                  for i in range(1, 9)])
 assert session.listdir("/fanstore/out")            # outputs list everywhere

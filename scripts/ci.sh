@@ -15,13 +15,23 @@ case "$lane" in
     # backend-parity first: identical payloads/visibility/modeled clocks on
     # modeled vs socket vs shm wires, racing-writer commit atomicity, and
     # deterministic serving-loop teardown (the conftest leak fixture fails
-    # any test that strands a fanstore-* thread, so this lane cannot hang)
-    python -m pytest -x -q tests/test_backends.py
-    python -m pytest -x -q -m "not slow" --ignore=tests/test_backends.py
+    # any test that strands a fanstore-* thread, so this lane cannot hang).
+    # Then the multi-worker topology parity suite: ClusterSpec validation +
+    # round trip, co-located sessions sharing one node cache tier (shared
+    # beats private at equal total bytes, attribution sums == tier totals),
+    # per-(node, worker) schedules, and the cross-process ShmArena
+    # spawn-attach round trip.
+    python -m pytest -x -q tests/test_backends.py tests/test_topology.py
+    python -m pytest -x -q -m "not slow" --ignore=tests/test_backends.py \
+        --ignore=tests/test_topology.py
     # perf trajectory smoke: seed/batched/prefetched arms + cache policies
-    # + the MEASURED block (socket + shm wires actually run; guards assert
-    # nonzero measured time, ledger==trace bytes, shm beats socket, and
-    # clean serving-loop teardown). Writes BENCH_io.json.
+    # + the multi-tenant `workers` block (shared node tier strictly beats
+    # private per-worker caches; attribution ledgers tie out) + the
+    # MEASURED blocks (read+write, scheduled-prefetch, and checkpoint-
+    # overlap traces over real socket + shm wires; guards assert nonzero
+    # lane time, ledger==trace/staged bytes, shm beats socket, and clean
+    # serving-loop teardown). Writes BENCH_io.json (uploaded as the
+    # bench-io artifact, `workers` block included).
     python benchmarks/run.py --only io-json --io-json BENCH_io.json --smoke
     ;;
   full)

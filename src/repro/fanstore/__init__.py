@@ -36,10 +36,12 @@ from repro.fanstore.backends import (BACKENDS, ModeledBackend, SharedMemoryBacke
                                      make_backend)
 from repro.fanstore.transport import FetchItem, InterconnectModel, Transport
 from repro.fanstore.cache import (BeladyCache, ByteCache, ByteLRUCache,
-                                  CacheStats, TwoQCache, make_cache)
+                                  CacheStats, NodeCacheTier, TwoQCache,
+                                  make_cache)
+from repro.fanstore.spec import ClusterSpec, WorkerContext
 from repro.fanstore.cluster import FanStoreCluster
 from repro.fanstore.prefetch import (EpochSchedule, PrefetchScheduler,
-                                     ScheduledRead)
+                                     ScheduledRead, SchedulerGroup)
 from repro.fanstore.api import (CheckpointWriter, FanStoreDirEntry,
                                 FanStoreSession)
 from repro.fanstore.fs import FanStoreFS
@@ -53,9 +55,10 @@ __all__ = [
     "WindowAccount", "FetchItem", "Transport", "TransportBackend",
     "ModeledBackend", "SocketBackend", "SharedMemoryBackend", "ShmArena",
     "BACKENDS", "make_backend", "ByteCache", "ByteLRUCache", "BeladyCache",
-    "TwoQCache", "CacheStats", "make_cache",
-    "EpochSchedule", "PrefetchScheduler", "ScheduledRead",
-    "NodeStore", "FanStoreCluster", "InterconnectModel",
+    "TwoQCache", "CacheStats", "NodeCacheTier", "make_cache",
+    "EpochSchedule", "PrefetchScheduler", "ScheduledRead", "SchedulerGroup",
+    "NodeStore", "FanStoreCluster", "ClusterSpec", "WorkerContext",
+    "InterconnectModel",
     "FanStoreSession", "FanStoreDirEntry", "CheckpointWriter", "FanStoreFS",
     "prepare_dataset",
 ]

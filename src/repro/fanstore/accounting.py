@@ -70,6 +70,30 @@ class NodeClock:
     cache_misses: int = 0
     cache_evictions: int = 0
     cache_hit_bytes: int = 0
+    # per-worker attribution of the cache counters above: co-located
+    # workers share one NodeCacheTier, so the node totals stay the tier
+    # truth and this breakdown answers "whose reads hit". Sums equal the
+    # totals by construction (every accrual updates both under the
+    # transport lock; pinned in tests).
+    worker_cache_hits: Dict[int, int] = field(default_factory=dict)
+    worker_cache_misses: Dict[int, int] = field(default_factory=dict)
+    worker_cache_hit_bytes: Dict[int, int] = field(default_factory=dict)
+
+    def attribute_cache(self, worker_id: int, *, hit: bool,
+                        nbytes: int = 0) -> None:
+        """Book one cache event onto BOTH the node totals and the
+        worker's attribution row (call under the transport lock)."""
+        if hit:
+            self.cache_hits += 1
+            self.cache_hit_bytes += nbytes
+            self.worker_cache_hits[worker_id] = \
+                self.worker_cache_hits.get(worker_id, 0) + 1
+            self.worker_cache_hit_bytes[worker_id] = \
+                self.worker_cache_hit_bytes.get(worker_id, 0) + nbytes
+        else:
+            self.cache_misses += 1
+            self.worker_cache_misses[worker_id] = \
+                self.worker_cache_misses.get(worker_id, 0) + 1
 
     @property
     def busy_s(self) -> float:

@@ -38,9 +38,10 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 from repro.fanstore.cluster import FanStoreCluster
 from repro.fanstore.metadata import StatRecord
+from repro.fanstore.spec import WorkerContext
 
 __all__ = ["MOUNT", "FD_BASE", "FanStoreSession", "FanStoreDirEntry",
-           "CheckpointWriter"]
+           "CheckpointWriter", "WorkerContext"]
 
 MOUNT = "/fanstore"
 
@@ -126,6 +127,12 @@ class FanStoreSession:
     Paths may be given mount-prefixed (``/fanstore/train/x.bin``) or
     store-relative (``train/x.bin``); both resolve to the same file.
 
+    Sessions are bound to a :class:`~repro.fanstore.spec.WorkerContext`
+    (node + worker coordinates in the declared topology) — prefer
+    ``cluster.connect(node_id, worker_id)`` over constructing directly.
+    Co-located sessions (same node, different worker) share that node's
+    cache tier; each read is attributed to its worker.
+
     ``lane`` picks the writer-side timeline for fd writes: ``"write"``
     (default) is the concurrent lane that overlaps demand reads and
     prefetch; ``"consume"`` reproduces the legacy serialized
@@ -133,9 +140,20 @@ class FanStoreSession:
     """
 
     def __init__(self, cluster: FanStoreCluster, node_id: int, *,
-                 mount: str = MOUNT, lane: str = "write"):
+                 worker_id: int = 0, mount: str = MOUNT,
+                 lane: str = "write"):
         self.cluster = cluster
+        self.context = WorkerContext(node_id, worker_id)
+        # direct construction must reject out-of-range coordinates just
+        # like cluster.connect() — otherwise a bad worker_id fails late
+        # (first cached read) or silently (cache disabled)
+        declared = getattr(cluster, "workers_per_node", None)
+        if declared is not None and worker_id >= declared:
+            raise ValueError(
+                f"worker_id {worker_id} outside workers_per_node="
+                f"{declared} (declare more workers in the ClusterSpec)")
         self.node_id = node_id
+        self.worker_id = worker_id
         self.mount = mount.rstrip("/")
         self.lane = lane
         self._fds: Dict[int, _OpenFile] = {}
@@ -198,7 +216,8 @@ class FanStoreSession:
         if self._writing_from(mode_or_flags):
             self.cluster.write_begin(self.node_id, rel)
             return self._alloc(_OpenFile(rel, True, self.lane))
-        data = self.cluster.read(self.node_id, rel)
+        data = self.cluster.read(self.node_id, rel,
+                                 worker_id=self.worker_id)
         return self._alloc(_OpenFile(rel, False, self.lane, data=data))
 
     def close(self, fd: int) -> Optional[StatRecord]:
@@ -363,13 +382,13 @@ class FanStoreSession:
         owner) pair instead of one per file."""
         return self.cluster.read_many(
             self.node_id, [self.resolve(p) for p in paths],
-            materialize=materialize)
+            worker_id=self.worker_id, materialize=materialize)
 
     def read_many_async(self, paths: Sequence[str], *,
                         materialize: bool = True) -> "Future[List[bytes]]":
         return self.cluster.read_many_async(
             self.node_id, [self.resolve(p) for p in paths],
-            materialize=materialize)
+            worker_id=self.worker_id, materialize=materialize)
 
     def write_many(self, entries: Sequence[Tuple[str, bytes]], *,
                    batched: bool = True) -> List[StatRecord]:
@@ -389,7 +408,7 @@ class FanStoreSession:
                         materialize: bool = True) -> int:
         return self.cluster.prefetch_window(
             self.node_id, [self.resolve(p) for p in paths],
-            materialize=materialize)
+            worker_id=self.worker_id, materialize=materialize)
 
     def checkpoint_writer(self, **kw) -> "CheckpointWriter":
         return CheckpointWriter(self, **kw)

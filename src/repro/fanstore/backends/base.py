@@ -390,16 +390,20 @@ class TransportBackend:
             clock.consume_s += cost
 
     # ---- cache tier (accounting only; payload comes from the cache) --------
-    def account_cache_hit(self, node_id: int, item: FetchItem) -> None:
+    def account_cache_hit(self, node_id: int, item: FetchItem, *,
+                          worker_id: int = 0) -> None:
+        """A client-cache hit: RAM-speed consume cost on the node, plus
+        per-worker attribution (co-located workers share the node tier,
+        so the breakdown is the only record of WHOSE read hit)."""
         with self._lock:
             clock = self.clocks[node_id]
             clock.consume_s += self.net.cache_cost(item.size)
-            clock.cache_hits += 1
-            clock.cache_hit_bytes += item.size
+            clock.attribute_cache(worker_id, hit=True, nbytes=item.size)
 
-    def account_cache_miss(self, node_id: int) -> None:
+    def account_cache_miss(self, node_id: int, *,
+                           worker_id: int = 0) -> None:
         with self._lock:
-            self.clocks[node_id].cache_misses += 1
+            self.clocks[node_id].attribute_cache(worker_id, hit=False)
 
     def account_cache_eviction(self, node_id: int, count: int = 1) -> None:
         with self._lock:

@@ -22,8 +22,14 @@ For co-located worker *processes* (separate interpreters on one node),
 ``multiprocessing.shared_memory``: ``export`` copies a payload once into
 a named segment; any process that knows the (name, size) pair maps it
 read-only with zero further copies. The backend exports committed
-payloads on demand via :meth:`export_output`. Arena support degrades
-gracefully (``ShmArena.available``) where ``/dev/shm`` is absent.
+payloads on demand via :meth:`export_output`, or a whole manifest of
+paths via :meth:`export_paths`. The spawn-side counterpart is
+:func:`attach_and_digest`: a worker process rebuilds the owner's
+topology from a ``ClusterSpec`` JSON string, attaches the exported
+segments by (name, size) handle, and reads the payloads byte-identical
+— the cross-process seam, closed by a real ``multiprocessing`` spawn
+test. Arena support degrades gracefully (``ShmArena.available``) where
+``/dev/shm`` is absent.
 
 Measured wall time accrues exactly as on the socket backend (requester
 lane + owner serve lane), so ``BENCH_io.json``'s ``measured`` block can
@@ -32,14 +38,15 @@ the modeled clocks accrue identically to every other backend.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.fanstore.backends.base import TransportBackend
 from repro.fanstore.wire import FetchItem
 
-__all__ = ["SharedMemoryBackend", "ShmArena"]
+__all__ = ["SharedMemoryBackend", "ShmArena", "attach_and_digest"]
 
 try:
     from multiprocessing import shared_memory as _shm
@@ -180,3 +187,54 @@ class SharedMemoryBackend(TransportBackend):
             raise RuntimeError("SharedMemoryBackend built without an arena")
         data = self._materialize(self.nodes[owner].serve_remote_view(path))
         return self.arena.export(data)
+
+    def export_paths(self, owner: int, paths: Sequence[str]
+                     ) -> Dict[str, Tuple[str, int]]:
+        """Export a manifest of payloads (inputs OR committed outputs the
+        ``owner`` node holds) into shared-memory segments: the
+        ``{path: (segment name, size)}`` handle table a spawned worker
+        process needs — ship it beside ``cluster.spec.to_json()`` and the
+        worker reconstructs the topology and maps every payload with
+        :func:`attach_and_digest` (or :meth:`ShmArena.view` directly)."""
+        if self.arena is None:
+            raise RuntimeError("SharedMemoryBackend built without an arena")
+        store = self.nodes[owner]
+        return {p: self.arena.export(
+                    self._materialize(store.serve_remote_view(p)))
+                for p in paths}
+
+
+def attach_and_digest(spec_json: str,
+                      handles: Mapping[str, Tuple[str, int]]
+                      ) -> Dict[str, object]:
+    """Worker-process entry point for the cross-process shm seam.
+
+    Runs in a SPAWNED interpreter (module-level so ``multiprocessing``'s
+    spawn context can import it): rebuilds the owner's topology from the
+    serialized :class:`~repro.fanstore.spec.ClusterSpec`, attaches every
+    exported segment by its (name, size) handle, and returns
+    ``{"spec_json": <re-serialized spec>, "digests": {path: sha256hex},
+    "sizes": {path: nbytes}}`` — the parent asserts the spec round-trip
+    is identity and the digests match its own payloads byte-for-byte.
+    The attached segments are unmapped (never unlinked: this arena did
+    not create them) before returning.
+    """
+    # local import: repro.fanstore.spec imports this module's package
+    from repro.fanstore.spec import ClusterSpec
+    spec = ClusterSpec.from_json(spec_json)     # validates the topology
+    arena = ShmArena()
+    digests: Dict[str, str] = {}
+    sizes: Dict[str, int] = {}
+    try:
+        for path, (name, size) in handles.items():
+            view = arena.view(name, size)
+            try:
+                digests[path] = hashlib.sha256(view).hexdigest()
+                sizes[path] = view.nbytes
+            finally:
+                view.release()          # drop the borrow before unmapping
+    finally:
+        arena.close()                   # attached-only: unmaps, no unlink
+    return {"spec_json": spec.to_json(), "digests": digests,
+            "sizes": sizes,
+            "workers_per_node": spec.workers_per_node}

@@ -28,6 +28,16 @@ Three eviction policies behind one interface (``ByteCache``):
 :func:`make_cache`. Caches are OFF by default (``capacity_bytes=0``
 disabled) so the paper-faithful read path is unchanged unless a deployment
 opts in.
+
+Ownership sits one level up, in :class:`NodeCacheTier`: the paper's
+deployment runs SEVERAL training workers per node (§3), and per Hoard the
+node-local cache should be one shared tier across all of them — a payload
+fetched by any co-located worker serves every other. The tier owns the
+node's byte budget (``cache_scope="node"`` = one shared policy cache;
+``"worker"`` = private per-worker splits of the same total, the baseline
+the shared tier beats) and keeps a per-worker hit/miss attribution ledger
+beside the cache's own totals, locked so the transport pool and socket
+serving threads can hit it concurrently.
 """
 from __future__ import annotations
 
@@ -379,6 +389,176 @@ class TwoQCache(ByteCache):
             self._a1in.clear()
             self._ghost.clear()
             self._bytes = self._a1in_bytes = self._ghost_bytes = 0
+
+
+class NodeCacheTier:
+    """One node's cache tier, shared by every co-located worker.
+
+    The tier owns the node's whole byte budget and the policy choice; the
+    cluster owns one tier per node (replacing the old per-node
+    ``Dict[int, ByteCache]`` whose single cache was private to whoever
+    constructed the cluster). Two scopes:
+
+    * ``scope="node"`` — ONE policy cache: a payload fetched by any
+      worker is a RAM hit for all of them, and the budget pools (the
+      Hoard shared-tier win, pinned by benchmarks against the private
+      baseline at equal total bytes).
+    * ``scope="worker"`` — private per-worker caches at
+      ``capacity_bytes // workers`` each: same total budget, no sharing.
+      This is the comparison baseline, and also an isolation mode for
+      workers with disjoint working sets.
+
+    Per-worker ATTRIBUTION rides beside the member caches' own stats:
+    every ``get`` books its hit/miss (and hit bytes) onto that worker's
+    :class:`CacheStats` under the tier lock, so "which worker's reads
+    hit" is answerable while the node totals stay the tier truth — the
+    sums match the member-cache totals by construction (pinned in
+    tests). The lock matters: transport-pool workers and socket serving
+    threads hit one tier concurrently.
+    """
+
+    def __init__(self, node_id: int, policy: Union[str, Callable[[int], ByteCache]],
+                 capacity_bytes: int, *, workers: int = 1,
+                 scope: str = "node"):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        if scope not in ("node", "worker"):
+            raise ValueError(f"unknown cache scope {scope!r}; "
+                             f"known: ['node', 'worker']")
+        self.node_id = node_id
+        self.policy = policy
+        self.scope = scope
+        self.capacity_bytes = capacity_bytes
+        self.worker_ids = tuple(range(workers))
+        if scope == "node":
+            shared = make_cache(policy, capacity_bytes)
+            self._members: Dict[int, ByteCache] = {
+                w: shared for w in self.worker_ids}
+        else:
+            per = capacity_bytes // workers
+            self._members = {w: make_cache(policy, per)
+                             for w in self.worker_ids}
+        self._lock = threading.Lock()
+        self.worker_stats: Dict[int, CacheStats] = {
+            w: CacheStats() for w in self.worker_ids}
+
+    # ---- views -------------------------------------------------------------
+    def cache_for(self, worker_id: int = 0) -> ByteCache:
+        """The member cache serving ``worker_id`` (the shared cache under
+        ``scope="node"``; that worker's private split otherwise)."""
+        try:
+            return self._members[worker_id]
+        except KeyError:
+            raise ValueError(
+                f"worker_id {worker_id} outside this tier's "
+                f"{len(self.worker_ids)} workers") from None
+
+    def member_caches(self) -> List[ByteCache]:
+        """Distinct member caches (one under ``scope="node"``)."""
+        seen: List[ByteCache] = []
+        for c in self._members.values():
+            if all(c is not s for s in seen):
+                seen.append(c)
+        return seen
+
+    @property
+    def enabled(self) -> bool:
+        return any(c.enabled for c in self._members.values())
+
+    @property
+    def used_bytes(self) -> int:
+        return sum(c.used_bytes for c in self.member_caches())
+
+    @property
+    def stats(self) -> CacheStats:
+        """Tier totals: the member caches' stats summed (identical to the
+        single cache's stats under ``scope="node"``)."""
+        total = CacheStats()
+        for c in self.member_caches():
+            for f in ("hits", "misses", "evictions", "insertions",
+                      "rejections", "hit_bytes", "evicted_bytes"):
+                setattr(total, f, getattr(total, f) + getattr(c.stats, f))
+        return total
+
+    def contains(self, path: str, worker_id: int = 0) -> bool:
+        return path in self.cache_for(worker_id)
+
+    def __contains__(self, path: str) -> bool:
+        return any(path in c for c in self.member_caches())
+
+    # ---- the attributed read/insert surface --------------------------------
+    def get(self, path: str, *, worker_id: int = 0,
+            require_data: bool = False) -> Optional[CachedEntry]:
+        """Member-cache ``get`` plus per-worker attribution (a disabled
+        tier attributes nothing, mirroring ``ByteCache.get``)."""
+        cache = self.cache_for(worker_id)
+        entry = cache.get(path, require_data=require_data)
+        if cache.enabled:
+            with self._lock:
+                st = self.worker_stats[worker_id]
+                if entry is None:
+                    st.misses += 1
+                else:
+                    st.hits += 1
+                    st.hit_bytes += entry.size
+        return entry
+
+    def put(self, path: str, data: Optional[bytes], *,
+            size: Optional[int] = None, worker_id: int = 0) -> int:
+        """Insert through the worker's member cache; returns evictions.
+        Insert/eviction attribution lands on the inserting worker."""
+        cache = self.cache_for(worker_id)
+        evicted = cache.put(path, data, size=size)
+        if cache.enabled:
+            with self._lock:
+                st = self.worker_stats[worker_id]
+                st.insertions += 1
+                st.evictions += evicted
+        return evicted
+
+    # ---- maintenance -------------------------------------------------------
+    def invalidate(self, path: str) -> bool:
+        hit = False
+        for c in self.member_caches():
+            hit = c.invalidate(path) or hit
+        return hit
+
+    def clear(self) -> None:
+        for c in self.member_caches():
+            c.clear()
+
+    def reset_stats(self) -> None:
+        """Reset the per-worker attribution ledger (member-cache lifetime
+        stats are theirs to keep; benchmarks compare fresh tiers)."""
+        with self._lock:
+            for w in self.worker_ids:
+                self.worker_stats[w] = CacheStats()
+
+    # ---- clairvoyant futures (Belady) --------------------------------------
+    def set_future(self, trace: Sequence[str]) -> bool:
+        """Install a node-merged future demand trace on every member cache
+        that supports one (Belady). Under ``scope="node"`` the shared
+        cache sees all co-located workers' interleaved accesses, so the
+        trace must be the node-merged sequence
+        (:meth:`repro.fanstore.prefetch.EpochSchedule.node_future`).
+        Returns True when at least one member took it."""
+        fed = False
+        for c in self.member_caches():
+            if hasattr(c, "set_future"):
+                c.set_future(trace)
+                fed = True
+        return fed
+
+    def set_worker_future(self, worker_id: int,
+                          trace: Sequence[str]) -> bool:
+        """Install one worker's own future trace on ITS member cache
+        (meaningful under ``scope="worker"``; under ``scope="node"`` this
+        would clobber the shared oracle — use :meth:`set_future`)."""
+        cache = self.cache_for(worker_id)
+        if hasattr(cache, "set_future"):
+            cache.set_future(trace)
+            return True
+        return False
 
 
 CACHE_POLICIES: Dict[str, Callable[[int], ByteCache]] = {

@@ -48,65 +48,149 @@ from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.fanstore.accounting import ClusterAccounting, NodeClock
-from repro.fanstore.cache import ByteCache, make_cache
+from repro.fanstore.cache import ByteCache, NodeCacheTier
 from repro.fanstore.layout import iter_partition, pack_partition
 from repro.fanstore.metadata import (FileLocation, MetadataTable, StatRecord,
                                      modulo_placement, path_hash)
-from repro.fanstore.placement import (LeastLoadedSelector, ModuloPlacement,
-                                      Placement, ReplicaSelector)
+from repro.fanstore.placement import Placement, ReplicaSelector
 from repro.fanstore.backends import make_backend
 from repro.fanstore.backends.modeled import InterconnectModel
+from repro.fanstore.spec import ClusterSpec, WorkerContext
 from repro.fanstore.store import NodeStore
 from repro.fanstore.wire import FetchItem
 
-__all__ = ["FanStoreCluster", "InterconnectModel", "NodeClock"]
+__all__ = ["FanStoreCluster", "ClusterSpec", "InterconnectModel",
+           "NodeClock", "WorkerContext"]
 
 
 class FanStoreCluster:
-    """N-node transient store with replicated input metadata."""
+    """N-node transient store with replicated input metadata.
 
-    def __init__(self, num_nodes: int, *, codec: str = "lzss",
+    Canonical construction is topology-first::
+
+        spec = ClusterSpec(num_nodes=8, workers_per_node=2,
+                           backend="shm", cache_policy="belady",
+                           cache_bytes=256 << 20)
+        with FanStoreCluster.from_spec(spec) as cluster:
+            session = cluster.connect(node_id=3, worker_id=1)
+
+    The legacy ``FanStoreCluster(num_nodes, **kwargs)`` surface is a
+    DEPRECATED shim: it builds the same :class:`ClusterSpec` internally
+    (so every name is validated up front, with did-you-mean suggestions
+    for unknown kwargs) and will be removed once no caller constructs a
+    cluster without a spec.
+    """
+
+    def __init__(self, num_nodes: Optional[int] = None, *,
+                 spec: Optional[ClusterSpec] = None,
                  interconnect: Optional[InterconnectModel] = None,
                  placement: Optional[Placement] = None,
                  selector: Optional[ReplicaSelector] = None,
-                 cache_bytes: int = 0,
-                 cache_policy: str = "lru",
-                 io_threads: int = 8,
-                 backend: str = "modeled",
-                 backend_options: Optional[Dict] = None) -> None:
-        if num_nodes < 1:
-            raise ValueError("need at least one node")
-        self.codec = codec
-        self.net = interconnect or InterconnectModel()
+                 **legacy_kwargs) -> None:
+        if spec is not None:
+            if legacy_kwargs:
+                raise TypeError(
+                    "pass either spec= or the legacy kwargs, not both "
+                    f"(got {sorted(legacy_kwargs)})")
+            if num_nodes is not None and num_nodes != spec.num_nodes:
+                raise ValueError(
+                    f"num_nodes={num_nodes} disagrees with "
+                    f"spec.num_nodes={spec.num_nodes}")
+        else:
+            if num_nodes is None:
+                raise TypeError("num_nodes (or spec=) is required")
+            # deprecated kwargs path: capture the soup into a validated
+            # spec — unknown names raise with suggestions, registry-backed
+            # strings (backend/cache_policy/placement/...) fail HERE
+            spec = ClusterSpec.from_kwargs(
+                num_nodes, interconnect=interconnect, placement=placement,
+                selector=selector, **legacy_kwargs)
+        self.spec = spec
+        self.codec = spec.codec
+        # runtime-object overrides beat the spec's serializable names so
+        # custom placements/selectors/interconnects remain first-class
+        self.net = interconnect if interconnect is not None \
+            else spec.make_interconnect()
         self.nodes: Dict[int, NodeStore] = {
-            i: NodeStore(i, codec=codec) for i in range(num_nodes)}
+            i: NodeStore(i, codec=spec.codec)
+            for i in range(spec.num_nodes)}
         self.metadata = MetadataTable()        # replicated input metadata
         self.output_meta: Dict[int, Dict[str, StatRecord]] = {
-            i: {} for i in range(num_nodes)}   # per-owner output shards
+            i: {} for i in range(spec.num_nodes)}  # per-owner output shards
         # replicated view of committed outputs (path -> stat + owning node);
         # payloads live on the placement owner's NodeStore output tier, NOT
         # on the writer — placement is routed end-to-end through the ring
         self.output_ns = MetadataTable()
-        self.accounting = ClusterAccounting(range(num_nodes))
-        self.placement: Placement = placement or ModuloPlacement(num_nodes)
-        self.selector: ReplicaSelector = selector or LeastLoadedSelector()
-        self.backend = backend
-        self.transport = make_backend(backend, self.net, self.nodes,
+        self.accounting = ClusterAccounting(range(spec.num_nodes))
+        self.placement: Placement = placement or spec.make_placement()
+        self.selector: ReplicaSelector = selector or spec.make_selector()
+        self.backend = spec.backend
+        self.transport = make_backend(spec.backend, self.net, self.nodes,
                                       self.accounting.clocks,
                                       wall=self.accounting.wall,
-                                      num_threads=io_threads,
-                                      **(backend_options or {}))
-        self.cache_policy = cache_policy
-        self.caches: Dict[int, ByteCache] = {
-            i: make_cache(cache_policy, cache_bytes) for i in range(num_nodes)}
+                                      num_threads=spec.io_threads,
+                                      **dict(spec.backend_options))
+        self.cache_policy = spec.cache_policy
+        self.workers_per_node = spec.workers_per_node
+        # ONE cache tier per node, shared by its co-located workers (the
+        # old per-node private ByteCache dict lives on underneath, as the
+        # tier's members; see the legacy `caches` view below)
+        self.cache_tiers: Dict[int, NodeCacheTier] = {
+            i: NodeCacheTier(i, spec.cache_policy, spec.cache_bytes,
+                             workers=spec.workers_per_node,
+                             scope=spec.cache_scope)
+            for i in range(spec.num_nodes)}
         self.failed: set = set()
         self._lock = threading.Lock()
         self._next_partition = 0
+
+    @classmethod
+    def from_spec(cls, spec: ClusterSpec, *,
+                  interconnect: Optional[InterconnectModel] = None,
+                  placement: Optional[Placement] = None,
+                  selector: Optional[ReplicaSelector] = None
+                  ) -> "FanStoreCluster":
+        """The canonical constructor: declared topology in, cluster out.
+        The override kwargs accept runtime OBJECTS (custom placement /
+        selector / interconnect) that have no serializable spec name."""
+        return cls(spec=spec, interconnect=interconnect,
+                   placement=placement, selector=selector)
+
+    # ---- sessions (topology-first client surface) --------------------------
+    def connect(self, node_id: int, worker_id: int = 0, **session_kwargs):
+        """Open a per-worker session: the one client surface co-located
+        workers share a node cache tier through. ``session_kwargs`` pass
+        to :class:`repro.fanstore.api.FanStoreSession` (``mount=``,
+        ``lane=``)."""
+        ctx = WorkerContext(node_id, worker_id)
+        if ctx.node_id not in self.nodes:
+            raise ValueError(f"node_id {node_id} outside the "
+                             f"{self.num_nodes}-node topology")
+        if ctx.worker_id >= self.workers_per_node:
+            raise ValueError(
+                f"worker_id {worker_id} outside workers_per_node="
+                f"{self.workers_per_node} (declare more workers in the "
+                f"ClusterSpec)")
+        from repro.fanstore.api import FanStoreSession
+        return FanStoreSession(self, node_id, worker_id=worker_id,
+                               **session_kwargs)
 
     # ---- composition plumbing ----------------------------------------------
     @property
     def clocks(self) -> Dict[int, NodeClock]:
         return self.accounting.clocks
+
+    @property
+    def caches(self) -> Dict[int, ByteCache]:
+        """DEPRECATED single-worker view: worker 0's member cache per node
+        (the shared cache itself under ``cache_scope="node"``). Kept for
+        pre-topology callers; new code addresses ``cache_tiers``."""
+        return {i: t.cache_for(0) for i, t in self.cache_tiers.items()}
+
+    def clear_caches(self) -> None:
+        """Drop every tier's entries (benchmark epoch resets)."""
+        for tier in self.cache_tiers.values():
+            tier.clear()
 
     @property
     def num_nodes(self) -> int:
@@ -117,9 +201,10 @@ class FanStoreCluster:
 
     # ---- loading -----------------------------------------------------------
     def load_partitions(self, partitions: Sequence[bytes], *,
-                        replication: int = 1,
+                        replication: Optional[int] = None,
                         by_placement: bool = False) -> None:
-        """Distribute partitions over nodes with replication factor R.
+        """Distribute partitions over nodes with replication factor R
+        (default: the topology's declared ``spec.replication``).
 
         Default placement is round-robin: replica r of partition p goes to
         node (p + r*stride) so replicas never co-locate. With
@@ -134,6 +219,8 @@ class FanStoreCluster:
         the identical copy by construction).
         """
         n = self.num_nodes
+        if replication is None:
+            replication = self.spec.replication
         if replication > n:
             raise ValueError("replication factor exceeds node count")
         stride = max(1, n // replication)
@@ -244,8 +331,8 @@ class FanStoreCluster:
             + item.stored / self.net.bandwidth_Bps)
         return owner
 
-    def read(self, requester: int, path: str, *, materialize: bool = True
-             ) -> bytes:
+    def read(self, requester: int, path: str, *, worker_id: int = 0,
+             materialize: bool = True) -> bytes:
         """Whole-file read as the training process sees it (paper §3.4).
 
         ``materialize=False`` runs the identical placement + timeline
@@ -253,23 +340,26 @@ class FanStoreCluster:
         benchmarks, where 512 nodes x thousands of multi-MB reads would
         spend their wall time in host memcpy instead of the modeled fabric.
         """
-        return self.read_many(requester, [path], materialize=materialize,
-                              batched=False)[0]
+        return self.read_many(requester, [path], worker_id=worker_id,
+                              materialize=materialize, batched=False)[0]
 
     def read_many(self, requester: int, paths: Sequence[str], *,
-                  materialize: bool = True, batched: bool = True
-                  ) -> List[bytes]:
+                  worker_id: int = 0, materialize: bool = True,
+                  batched: bool = True) -> List[bytes]:
         """Batched read: all remote requests for one owner ride ONE round trip.
 
         ``batched=False`` degrades to per-file round trips (the paper's
         synchronous client), byte-for-byte identical to the seed ``read``
         accounting — benchmarks compare the two to show the coalescing win.
-        Results are returned in input order.
+        Results are returned in input order. ``worker_id`` names which of
+        the requester node's co-located workers is reading: the node's
+        shared cache tier serves them all, with per-worker hit/miss
+        attribution (modeled costs are worker-independent by contract).
         """
         if requester in self.failed:
             raise IOError(f"node {requester} is failed")
         out: List[Optional[bytes]] = [None] * len(paths)
-        cache = self.caches[requester]
+        tier = self.cache_tiers[requester]
         # (owner -> [(output slot, item)]) for the remote leg
         groups: Dict[int, List[Tuple[int, FetchItem]]] = {}
         pending_serve: Dict[int, float] = {}
@@ -277,21 +367,24 @@ class FanStoreCluster:
             path = raw.strip("/")
             st, loc = self._lookup(path)
             item = self._fetch_item(path, st, loc)
-            if cache.enabled:
-                entry = cache.get(path, require_data=materialize)
+            if tier.enabled:
+                entry = tier.get(path, worker_id=worker_id,
+                                 require_data=materialize)
                 if entry is not None:
-                    self.transport.account_cache_hit(requester, item)
+                    self.transport.account_cache_hit(requester, item,
+                                                     worker_id=worker_id)
                     out[i] = entry.data if materialize else b""
                     continue
-                self.transport.account_cache_miss(requester)
+                self.transport.account_cache_miss(requester,
+                                                  worker_id=worker_id)
             if self.nodes[requester].has(path) or \
                     self.nodes[requester].has_output(path):
                 data = self.transport.fetch_local(requester, item,
                                                   materialize=materialize)
                 out[i] = data
-                if cache.enabled:
-                    ev = cache.put(path, data if materialize else None,
-                                   size=item.size)
+                if tier.enabled:
+                    ev = tier.put(path, data if materialize else None,
+                                  size=item.size, worker_id=worker_id)
                     self.transport.account_cache_eviction(requester, ev)
                 continue
             owner = self._choose_owner(loc, item, pending_serve)
@@ -309,22 +402,24 @@ class FanStoreCluster:
                     for it in items]
             for (i, item), data in zip(entries, datas):
                 out[i] = data
-                if cache.enabled:
-                    ev = cache.put(item.path,
-                                   data if materialize else None,
-                                   size=item.size)
+                if tier.enabled:
+                    ev = tier.put(item.path,
+                                  data if materialize else None,
+                                  size=item.size, worker_id=worker_id)
                     self.transport.account_cache_eviction(requester, ev)
         return out  # type: ignore[return-value]
 
     def read_many_async(self, requester: int, paths: Sequence[str], *,
-                        materialize: bool = True) -> "Future[List[bytes]]":
+                        worker_id: int = 0, materialize: bool = True
+                        ) -> "Future[List[bytes]]":
         """Batched read on the transport's I/O pool; returns a Future."""
         return self.transport.submit(self.read_many, requester, list(paths),
+                                     worker_id=worker_id,
                                      materialize=materialize)
 
     # ---- scheduled prefetch (repro.fanstore.prefetch drives this) ----------
     def prefetch_window(self, requester: int, paths: Sequence[str], *,
-                        materialize: bool = True) -> int:
+                        worker_id: int = 0, materialize: bool = True) -> int:
         """Stage one lookahead window into the requester's client cache.
 
         The window may span many training batches: every remote file is
@@ -340,8 +435,8 @@ class FanStoreCluster:
         """
         if requester in self.failed:
             raise IOError(f"node {requester} is failed")
-        cache = self.caches[requester]
-        if not cache.enabled:
+        tier = self.cache_tiers[requester]
+        if not tier.enabled:
             raise ValueError("prefetch_window requires an enabled client "
                              "cache (cache_bytes > 0)")
         local_items: List[FetchItem] = []
@@ -349,7 +444,7 @@ class FanStoreCluster:
         pending_serve: Dict[int, float] = {}
         for raw in paths:
             path = raw.strip("/")
-            if path in cache:
+            if tier.contains(path, worker_id):
                 continue
             hit = self.metadata.lookup(path)
             if hit is None:
@@ -368,10 +463,11 @@ class FanStoreCluster:
 
         def insert(item: FetchItem, data: bytes) -> None:
             nonlocal staged, evictions
-            evictions += cache.put(item.path, data if materialize else None,
-                                   size=item.size)
-            if item.path in cache:    # count only accepted entries (Belady
-                staged += item.size   # admission / oversize may refuse)
+            evictions += tier.put(item.path, data if materialize else None,
+                                  size=item.size, worker_id=worker_id)
+            if tier.contains(item.path, worker_id):
+                staged += item.size   # count only accepted entries (Belady
+                                      # admission / oversize may refuse)
 
         if local_items:
             datas = self.transport.prefetch_local(requester, local_items,
@@ -388,10 +484,12 @@ class FanStoreCluster:
         return staged
 
     def prefetch_window_async(self, requester: int, paths: Sequence[str], *,
-                              materialize: bool = True) -> "Future[int]":
+                              worker_id: int = 0, materialize: bool = True
+                              ) -> "Future[int]":
         """``prefetch_window`` on the transport's I/O pool."""
         return self.transport.submit(self.prefetch_window, requester,
-                                     list(paths), materialize=materialize)
+                                     list(paths), worker_id=worker_id,
+                                     materialize=materialize)
 
     # ---- lifecycle ---------------------------------------------------------
     def start(self) -> "FanStoreCluster":
@@ -625,9 +723,9 @@ class FanStoreCluster:
             self.output_meta[owner].pop(path, None)
             # a reader may hold the dead payload in its client cache; a
             # rewrite of the freed name must never serve the old bytes
-            for cache in self.caches.values():
-                if cache.enabled:
-                    cache.invalidate(path)
+            for tier in self.cache_tiers.values():
+                if tier.enabled:
+                    tier.invalidate(path)
         return st
 
     def write_many_async(self, writer: int,

@@ -130,6 +130,20 @@ class RingPlacement:
         self.ring.remove_node(node_id)
 
 
+#: registry for :class:`repro.fanstore.spec.ClusterSpec` — placement by name
+PLACEMENTS = ("modulo", "ring")
+
+
+def make_placement(name: str, num_nodes: int) -> "Placement":
+    """Build a placement policy from its registry name (spec-driven path)."""
+    if name == "modulo":
+        return ModuloPlacement(num_nodes)
+    if name == "ring":
+        return RingPlacement(range(num_nodes))
+    raise ValueError(f"unknown placement {name!r}; "
+                     f"known: {sorted(PLACEMENTS)}")
+
+
 class ReplicaSelector(Protocol):
     """Pick the owner that serves a read from the file's live replica set."""
 
@@ -171,3 +185,17 @@ class PowerOfTwoSelector:
         a = owners[self._rand(len(owners))]
         b = owners[self._rand(len(owners))]
         return min((a, b), key=lambda o: (load.get(o, 0.0), o))
+
+
+#: registry for :class:`repro.fanstore.spec.ClusterSpec` — selector by name
+SELECTORS = ("least-loaded", "power-of-two")
+
+
+def make_selector(name: str, *, seed: int = 0) -> "ReplicaSelector":
+    """Build a replica selector from its registry name (spec-driven path)."""
+    if name == "least-loaded":
+        return LeastLoadedSelector()
+    if name == "power-of-two":
+        return PowerOfTwoSelector(seed=seed)
+    raise ValueError(f"unknown selector {name!r}; "
+                     f"known: {sorted(SELECTORS)}")

@@ -38,9 +38,35 @@ import threading
 from collections import deque
 from dataclasses import dataclass
 from typing import (Callable, Deque, Dict, List, Mapping, Optional, Sequence,
-                    Tuple)
+                    Tuple, Union)
 
-__all__ = ["ScheduledRead", "EpochSchedule", "PrefetchScheduler"]
+__all__ = ["ScheduledRead", "EpochSchedule", "PrefetchScheduler",
+           "SchedulerGroup", "Requester"]
+
+#: a schedule requester: a bare node id (single-worker, the pre-topology
+#: convention) or a (node_id, worker_id) coordinate from a ClusterSpec
+Requester = Union[int, Tuple[int, int]]
+
+
+def _req_key(requester: Requester) -> Tuple[int, int]:
+    """(node_id, worker_id) for either requester form."""
+    if isinstance(requester, tuple):
+        node, worker = requester
+        return int(node), int(worker)
+    return int(requester), 0
+
+
+def _normalize(requester: Requester) -> Requester:
+    """Canonical dict key: plain int for bare nodes (compat with every
+    pre-topology schedule), (int, int) tuple for worker coordinates."""
+    if isinstance(requester, tuple):
+        node, worker = requester
+        return (int(node), int(worker))
+    return int(requester)
+
+
+def _req_sort_key(requester: Requester) -> Tuple[int, int]:
+    return _req_key(requester)
 
 
 @dataclass(frozen=True)
@@ -58,13 +84,20 @@ class ScheduledRead:
 class EpochSchedule:
     """Per-requester ordered future reads for one epoch (or trace).
 
+    A requester is either a bare node id (the pre-topology single-worker
+    convention) or a ``(node_id, worker_id)`` coordinate from a
+    :class:`~repro.fanstore.spec.ClusterSpec` topology — co-located
+    workers each get their own axis of the schedule, which is what lets
+    the training driver run one loader per (node, worker).
+
     ``reads_by_requester[r]`` is sorted by step; within a step, order is
     the batch's index order (which is the demand-read order).
     """
 
-    def __init__(self, reads_by_requester: Mapping[int, Sequence[ScheduledRead]]):
-        self._reads: Dict[int, List[ScheduledRead]] = {
-            int(r): sorted(reads, key=lambda s: s.step)
+    def __init__(self, reads_by_requester:
+                 Mapping[Requester, Sequence[ScheduledRead]]):
+        self._reads: Dict[Requester, List[ScheduledRead]] = {
+            _normalize(r): sorted(reads, key=lambda s: s.step)
             for r, reads in reads_by_requester.items()}
         self.num_steps = max(
             (reads[-1].step + 1 for reads in self._reads.values() if reads),
@@ -73,71 +106,131 @@ class EpochSchedule:
     # ---- construction ------------------------------------------------------
     @classmethod
     def from_sampler(cls, sampler, paths: Sequence[str], *,
-                     num_requesters: int, cluster=None,
+                     num_requesters: int, workers_per_node: int = 1,
+                     cluster=None,
                      epoch: Optional[int] = None) -> "EpochSchedule":
         """Materialize the epoch's permutation from any checkpointable
         sampler (``state``/``restore``/``next_batch``) without advancing it.
 
         Each global batch is split into ``num_requesters`` contiguous
         per-requester slices — the convention the device tier and
-        ``StratifiedSampler`` already use. ``paths[i]`` maps sample index i
-        to its file; ``cluster`` (optional) annotates each read with its
-        expected serving node (informational — the scheduler re-resolves
-        owners at issue time against the live failure set).
+        ``StratifiedSampler`` already use. With ``workers_per_node=W > 1``
+        slice ``r`` belongs to worker coordinate ``(r // W, r % W)``
+        (node-major, matching ``ClusterSpec.workers()``) and the
+        schedule's requester keys are those tuples; with ``W == 1`` keys
+        stay bare node ids, so every pre-topology caller is unchanged.
+        ``paths[i]`` maps sample index i to its file; ``cluster``
+        (optional) annotates each read with its expected serving node
+        (informational — the scheduler re-resolves owners at issue time
+        against the live failure set).
         """
+        if workers_per_node < 1:
+            raise ValueError("workers_per_node must be >= 1")
+        if num_requesters % workers_per_node:
+            raise ValueError("workers_per_node must divide num_requesters "
+                             "(one slice per (node, worker))")
         batches = sampler.peek_epoch(epoch)
-        reads: Dict[int, List[ScheduledRead]] = {
-            r: [] for r in range(num_requesters)}
+
+        def key(r: int) -> Requester:
+            if workers_per_node == 1:
+                return r
+            return (r // workers_per_node, r % workers_per_node)
+
+        reads: Dict[Requester, List[ScheduledRead]] = {
+            key(r): [] for r in range(num_requesters)}
         for step, batch in enumerate(batches):
             if len(batch) % num_requesters:
                 raise ValueError(
                     "num_requesters must divide the global batch size")
             per = len(batch) // num_requesters
             for r in range(num_requesters):
+                node = _req_key(key(r))[0]
                 for idx in batch[r * per:(r + 1) * per]:
                     path = paths[int(idx)].strip("/")
-                    owner = _resolve_owner(cluster, r, path)
-                    reads[r].append(ScheduledRead(step, path, owner))
+                    owner = _resolve_owner(cluster, node, path)
+                    reads[key(r)].append(ScheduledRead(step, path, owner))
         return cls(reads)
 
     @classmethod
-    def from_trace(cls, traces: Mapping[int, Sequence[Sequence[str]]],
+    def from_trace(cls, traces: Mapping[Requester, Sequence[Sequence[str]]],
                    cluster=None) -> "EpochSchedule":
         """Build from explicit per-step path lists:
-        ``traces[requester] = [[paths of step 0], [paths of step 1], ...]``.
+        ``traces[requester] = [[paths of step 0], [paths of step 1], ...]``
+        with requesters either bare node ids or (node, worker) tuples.
         """
-        reads: Dict[int, List[ScheduledRead]] = {}
+        reads: Dict[Requester, List[ScheduledRead]] = {}
         for r, steps in traces.items():
+            node = _req_key(r)[0]
             out: List[ScheduledRead] = []
             for step, batch in enumerate(steps):
                 for path in batch:
                     path = path.strip("/")
                     out.append(ScheduledRead(
-                        step, path, _resolve_owner(cluster, r, path)))
-            reads[int(r)] = out
+                        step, path, _resolve_owner(cluster, node, path)))
+            reads[_normalize(r)] = out
         return cls(reads)
 
     # ---- views -------------------------------------------------------------
     @property
-    def requesters(self) -> List[int]:
-        return sorted(self._reads)
+    def requesters(self) -> List[Requester]:
+        return sorted(self._reads, key=_req_sort_key)
 
-    def for_requester(self, requester: int) -> List[ScheduledRead]:
-        return list(self._reads.get(requester, []))
+    def for_requester(self, requester: Requester) -> List[ScheduledRead]:
+        return list(self._reads.get(_normalize(requester), []))
 
-    def future_paths(self, requester: int) -> List[str]:
+    def future_paths(self, requester: Requester) -> List[str]:
         """The requester's demand-access sequence — Belady's oracle."""
-        return [s.path for s in self._reads.get(requester, [])]
+        return [s.path for s in self._reads.get(_normalize(requester), [])]
+
+    def node_future(self, node_id: int) -> List[str]:
+        """The NODE-merged demand sequence: every co-located worker's
+        reads interleaved in (step, worker, in-batch) order — the oracle a
+        SHARED cache tier needs, since it serves all workers' accesses
+        against one budget. For a single-worker node this equals
+        ``future_paths(node_id)``."""
+        merged: List[Tuple[int, int, int, str]] = []
+        for r, reads in self._reads.items():
+            node, worker = _req_key(r)
+            if node != node_id:
+                continue
+            merged.extend((s.step, worker, i, s.path)
+                          for i, s in enumerate(reads))
+        merged.sort(key=lambda t: t[:3])
+        return [path for _, _, _, path in merged]
 
     def install_futures(self, cluster,
-                        requesters: Optional[Sequence[int]] = None) -> int:
-        """Hand each requester's future trace to its cluster cache (no-op
-        for policies without a ``set_future`` hook). Returns caches fed."""
+                        requesters: Optional[Sequence[Requester]] = None
+                        ) -> int:
+        """Hand future traces to the requesters' cache tiers (no-op for
+        policies without a ``set_future`` hook). A shared tier
+        (``cache_scope="node"``) receives the node-merged trace ONCE per
+        node — co-located workers must not clobber each other's oracle
+        with single-worker views; private per-worker caches receive their
+        own worker's trace. Returns the number of caches fed."""
         fed = 0
-        for r in (requesters if requesters is not None else self.requesters):
-            cache = cluster.caches.get(r)
-            if cache is not None and hasattr(cache, "set_future"):
-                cache.set_future(self.future_paths(r))
+        reqs = list(requesters if requesters is not None
+                    else self.requesters)
+        tiers = getattr(cluster, "cache_tiers", None)
+        if tiers is None:              # pre-topology cluster duck-type
+            for r in reqs:
+                cache = cluster.caches.get(r)
+                if cache is not None and hasattr(cache, "set_future"):
+                    cache.set_future(self.future_paths(r))
+                    fed += 1
+            return fed
+        done_nodes = set()
+        for r in reqs:
+            node, worker = _req_key(r)
+            tier = tiers.get(node)
+            if tier is None:
+                continue
+            if tier.scope == "node":
+                if node in done_nodes:
+                    continue
+                done_nodes.add(node)
+                if tier.set_future(self.node_future(node)):
+                    fed += 1
+            elif tier.set_worker_future(worker, self.future_paths(r)):
                 fed += 1
         return fed
 
@@ -184,7 +277,8 @@ class PrefetchScheduler:
     and eviction all share one view of the future.
     """
 
-    def __init__(self, cluster, schedule: EpochSchedule, requester: int, *,
+    def __init__(self, cluster, schedule: EpochSchedule,
+                 requester: Requester, *,
                  window_steps: int = 8,
                  max_inflight_bytes: int = 256 * 1024 * 1024,
                  materialize: bool = True,
@@ -196,6 +290,7 @@ class PrefetchScheduler:
         self.cluster = cluster
         self.schedule = schedule
         self.requester = requester
+        self.node_id, self.worker_id = _req_key(requester)
         self.window_steps = window_steps
         self.max_inflight_bytes = max_inflight_bytes
         self.materialize = materialize
@@ -266,7 +361,8 @@ class PrefetchScheduler:
                        and self._inflight_bytes + est > self.max_inflight_bytes):
                     self._wait_oldest()
                 fut = self.cluster.prefetch_window_async(
-                    self.requester, paths, materialize=self.materialize)
+                    self.node_id, paths, worker_id=self.worker_id,
+                    materialize=self.materialize)
                 self._inflight.append((fut, est, start))
                 self._inflight_bytes += est
                 self._next_window += 1
@@ -295,3 +391,88 @@ class PrefetchScheduler:
 
     def close(self) -> None:
         self.drain()
+
+
+class SchedulerGroup:
+    """One clairvoyant driver per (node, worker), behind the single
+    ``ensure``/``wait_ready``/``close`` surface ``PrefetchLoader`` speaks.
+
+    This is the multi-requester mode of the scheduler: the training
+    driver materializes ONE :class:`EpochSchedule` over the whole
+    topology and fans it out as one :class:`PrefetchScheduler` per
+    (node, worker) — every node keeps its own lookahead windows in
+    flight, co-located workers stage into their shared node tier, and
+    the old practice of pinning every read to node 0 dies. ``ensure``
+    and ``wait_ready`` fan to every member, so a single loader gating on
+    step ``t`` guarantees all workers' windows covering ``t`` landed.
+    """
+
+    def __init__(self, schedulers: Sequence[PrefetchScheduler]):
+        if not schedulers:
+            raise ValueError("need at least one scheduler")
+        self.schedulers = list(schedulers)
+        # PrefetchLoader reads window_steps to default its lookahead
+        self.window_steps = max(s.window_steps for s in self.schedulers)
+
+    @classmethod
+    def for_schedule(cls, cluster, schedule: EpochSchedule, *,
+                     requesters: Optional[Sequence[Requester]] = None,
+                     install_future: bool = True,
+                     **scheduler_kwargs) -> "SchedulerGroup":
+        """One member per requester of ``schedule`` (or the given
+        subset), sharing ``scheduler_kwargs`` (window_steps, caps...).
+        Futures are installed ONCE here for the whole group (the
+        ``install_futures`` node dedup applies across members) instead of
+        once per member — W schedulers on a shared tier would otherwise
+        rebuild the identical node-merged trace W times."""
+        reqs = list(requesters if requesters is not None
+                    else schedule.requesters)
+        if install_future:
+            schedule.install_futures(cluster, reqs)
+        return cls([PrefetchScheduler(cluster, schedule, r,
+                                      install_future=False,
+                                      **scheduler_kwargs)
+                    for r in reqs])
+
+    def __len__(self) -> int:
+        return len(self.schedulers)
+
+    @property
+    def num_windows(self) -> int:
+        return sum(s.num_windows for s in self.schedulers)
+
+    @property
+    def windows_issued(self) -> int:
+        return sum(s.windows_issued for s in self.schedulers)
+
+    @property
+    def bytes_scheduled(self) -> int:
+        return sum(s.bytes_scheduled for s in self.schedulers)
+
+    def ensure(self, step: int) -> int:
+        return sum(s.ensure(step) for s in self.schedulers)
+
+    def wait_ready(self, step: int) -> None:
+        for s in self.schedulers:
+            s.wait_ready(step)
+
+    def run_all(self) -> int:
+        return sum(s.run_all() for s in self.schedulers)
+
+    def drain(self) -> None:
+        self._fan("drain")
+
+    def close(self) -> None:
+        """Close every member; the first error re-raises AFTER all have
+        been closed (a failing node must not leak its siblings' windows)."""
+        self._fan("close")
+
+    def _fan(self, method: str) -> None:
+        err: Optional[BaseException] = None
+        for s in self.schedulers:
+            try:
+                getattr(s, method)()
+            except BaseException as e:   # propagate after full teardown
+                err = err or e
+        if err is not None:
+            raise err

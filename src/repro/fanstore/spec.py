@@ -1,0 +1,241 @@
+"""Topology-first runtime configuration: the :class:`ClusterSpec`.
+
+FanStore's deployment shape (paper §3: N compute nodes, each running
+*several* training workers against one global namespace) used to be
+smeared across a kwargs soup on ``FanStoreCluster(...)`` plus raw ints
+threaded through every verb. ``ClusterSpec`` is that shape as a value:
+
+* **frozen** — a spec never mutates; derive variants with :meth:`replace`;
+* **validated** — every registry-backed choice (backend, cache policy,
+  placement, selector, codec) is checked at CONSTRUCTION time with a
+  ``ValueError`` naming the valid choices, instead of failing late and
+  cryptically deep in a registry lookup;
+* **serializable** — :meth:`to_json`/:meth:`from_json` round-trip is
+  identity, so a spawned worker process can rebuild the exact topology
+  from a string and attach to the owner's shared-memory segments (see
+  ``repro.fanstore.backends.shm.attach_and_digest``).
+
+``FanStoreCluster.from_spec(spec)`` is the canonical constructor; the
+legacy ``FanStoreCluster(num_nodes, **kwargs)`` shim builds a spec
+internally and raises on unknown kwarg names with did-you-mean
+suggestions. ``cluster.connect(node_id, worker_id)`` then hands out
+per-worker sessions — topology in, sessions out, no threaded ints.
+"""
+from __future__ import annotations
+
+import difflib
+import json
+from dataclasses import asdict, dataclass, field, fields, replace
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from repro.fanstore.backends import BACKENDS
+from repro.fanstore.backends.modeled import InterconnectModel
+from repro.fanstore.cache import CACHE_POLICIES
+from repro.fanstore.layout import _CODECS
+from repro.fanstore.placement import (PLACEMENTS, SELECTORS, make_placement,
+                                      make_selector)
+
+__all__ = ["ClusterSpec", "WorkerContext", "CACHE_SCOPES",
+           "suggest_names"]
+
+#: how one node's byte budget is carved up across its co-located workers:
+#: ``"node"`` is ONE shared cache tier (Hoard-style — a payload fetched by
+#: any worker serves them all), ``"worker"`` is private per-worker splits
+#: of the same total budget (the baseline the shared tier beats).
+CACHE_SCOPES = ("node", "worker")
+
+
+def suggest_names(name: str, known, *, kind: str = "argument") -> str:
+    """'unknown X; did you mean Y?' message body for a bad name."""
+    close = difflib.get_close_matches(name, list(known), n=3, cutoff=0.5)
+    hint = f"; did you mean {' or '.join(map(repr, close))}?" if close else ""
+    return (f"unknown {kind} {name!r}{hint} "
+            f"(known: {', '.join(sorted(known))})")
+
+
+def _check_choice(value: str, known, *, kind: str) -> None:
+    if value not in known:
+        raise ValueError(suggest_names(value, known, kind=kind))
+
+
+@dataclass(frozen=True)
+class WorkerContext:
+    """One worker's coordinates in the declared topology. Sessions are
+    bound to one of these instead of carrying a raw ``node_id`` int —
+    co-located workers (same node, different ``worker_id``) share that
+    node's cache tier, and cache hits/misses are attributed per worker."""
+    node_id: int
+    worker_id: int = 0
+
+    def __post_init__(self) -> None:
+        if self.node_id < 0:
+            raise ValueError("node_id must be >= 0")
+        if self.worker_id < 0:
+            raise ValueError("worker_id must be >= 0")
+
+    @property
+    def key(self) -> Tuple[int, int]:
+        """The (node, worker) requester key schedules are axed on."""
+        return (self.node_id, self.worker_id)
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """The whole deployment as one frozen, validated, serializable value.
+
+    Every field is JSON-representable by construction; custom placement /
+    selector / interconnect OBJECTS stay possible through the override
+    kwargs of ``FanStoreCluster.from_spec`` (they are deployment-local and
+    deliberately outside the serializable surface).
+    """
+    num_nodes: int
+    workers_per_node: int = 1
+    codec: str = "lzss"
+    backend: str = "modeled"
+    backend_options: Mapping[str, Any] = field(default_factory=dict)
+    cache_policy: str = "lru"
+    cache_bytes: int = 0              # per-NODE tier budget (all workers)
+    cache_scope: str = "node"         # "node" shared tier | "worker" private
+    placement: str = "modulo"
+    selector: str = "least-loaded"
+    replication: int = 1
+    io_threads: int = 8
+    interconnect: Optional[Mapping[str, float]] = None
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.num_nodes, int) or self.num_nodes < 1:
+            raise ValueError("num_nodes must be an int >= 1")
+        if not isinstance(self.workers_per_node, int) \
+                or self.workers_per_node < 1:
+            raise ValueError("workers_per_node must be an int >= 1")
+        if self.cache_bytes < 0:
+            raise ValueError("cache_bytes must be >= 0")
+        if self.io_threads < 1:
+            raise ValueError("io_threads must be >= 1")
+        if not 1 <= self.replication <= self.num_nodes:
+            raise ValueError(
+                f"replication must be in [1, num_nodes={self.num_nodes}], "
+                f"got {self.replication}")
+        # registry-backed names fail HERE, not deep in a registry lookup
+        _check_choice(self.codec, _CODECS, kind="codec")
+        _check_choice(self.backend, BACKENDS, kind="transport backend")
+        _check_choice(self.cache_policy, CACHE_POLICIES, kind="cache policy")
+        _check_choice(self.cache_scope, CACHE_SCOPES, kind="cache scope")
+        _check_choice(self.placement, PLACEMENTS, kind="placement")
+        _check_choice(self.selector, SELECTORS, kind="selector")
+        object.__setattr__(self, "backend_options",
+                           dict(self.backend_options or {}))
+        if self.interconnect is not None:
+            known = {f.name for f in fields(InterconnectModel)}
+            net = dict(self.interconnect)
+            for k in net:
+                if k not in known:
+                    raise ValueError(
+                        suggest_names(k, known, kind="interconnect field"))
+            object.__setattr__(self, "interconnect", net)
+
+    # ---- derived views -----------------------------------------------------
+    @property
+    def total_workers(self) -> int:
+        return self.num_nodes * self.workers_per_node
+
+    def workers(self) -> Tuple[WorkerContext, ...]:
+        """Every (node, worker) coordinate in the topology, node-major —
+        the canonical requester order schedules and drivers slice by."""
+        return tuple(WorkerContext(n, w)
+                     for n in range(self.num_nodes)
+                     for w in range(self.workers_per_node))
+
+    def worker_cache_bytes(self) -> int:
+        """Per-worker budget under ``cache_scope="worker"``: the node
+        budget split evenly — same TOTAL bytes as the shared tier, so the
+        two scopes compare like-for-like."""
+        return self.cache_bytes // self.workers_per_node
+
+    # ---- factories for the non-serializable runtime objects ---------------
+    def make_interconnect(self) -> InterconnectModel:
+        return InterconnectModel(**(self.interconnect or {}))
+
+    def make_placement(self):
+        return make_placement(self.placement, self.num_nodes)
+
+    def make_selector(self):
+        return make_selector(self.selector)
+
+    # ---- serialization (round-trip is identity; pinned in tests) -----------
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ClusterSpec":
+        known = {f.name for f in fields(cls)}
+        for k in d:
+            if k not in known:
+                raise ValueError(
+                    suggest_names(k, known, kind="ClusterSpec field"))
+        return cls(**dict(d))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ClusterSpec":
+        return cls.from_dict(json.loads(s))
+
+    def replace(self, **changes) -> "ClusterSpec":
+        """Derive a variant spec (re-validated on construction)."""
+        return replace(self, **changes)
+
+    # ---- the legacy-kwargs shim --------------------------------------------
+    #: legacy FanStoreCluster kwarg -> spec field (identity unless renamed)
+    LEGACY_KWARGS = ("codec", "backend", "backend_options", "cache_policy",
+                     "cache_bytes", "cache_scope", "workers_per_node",
+                     "placement", "selector", "replication", "io_threads",
+                     "interconnect")
+
+    @classmethod
+    def from_kwargs(cls, num_nodes: int, **kwargs) -> "ClusterSpec":
+        """Build a spec from the deprecated ``FanStoreCluster(...)`` kwarg
+        surface. Unknown names raise ``TypeError`` with did-you-mean
+        suggestions instead of being silently swallowed; placement /
+        selector / interconnect OBJECTS are captured by name (and, for the
+        interconnect, by field values) when possible.
+        """
+        unknown = [k for k in kwargs if k not in cls.LEGACY_KWARGS]
+        if unknown:
+            raise TypeError(suggest_names(
+                unknown[0], cls.LEGACY_KWARGS,
+                kind="FanStoreCluster argument"))
+        # None means "not given" on the legacy surface: fall to spec default
+        spec_kwargs: Dict[str, Any] = {
+            k: v for k, v in kwargs.items() if v is not None}
+        net = spec_kwargs.pop("interconnect", None)
+        if isinstance(net, InterconnectModel):
+            net = asdict(net)
+        if net is not None:
+            spec_kwargs["interconnect"] = dict(net)
+        for name, registry_default in (("placement", "modulo"),
+                                       ("selector", "least-loaded")):
+            obj = spec_kwargs.get(name)
+            if obj is not None and not isinstance(obj, str):
+                # an object: record its registry name when we know it, so
+                # the spec stays an honest description; custom objects
+                # fall back to the default name (the object itself still
+                # drives the cluster via the from_spec override path)
+                spec_kwargs[name] = _registry_name(name, obj,
+                                                   registry_default)
+        return cls(num_nodes=num_nodes, **spec_kwargs)
+
+
+def _registry_name(kind: str, obj, default: str) -> str:
+    from repro.fanstore.placement import (LeastLoadedSelector,
+                                          ModuloPlacement,
+                                          PowerOfTwoSelector, RingPlacement)
+    table = {"placement": ((ModuloPlacement, "modulo"),
+                           (RingPlacement, "ring")),
+             "selector": ((LeastLoadedSelector, "least-loaded"),
+                          (PowerOfTwoSelector, "power-of-two"))}
+    for cls_, name in table[kind]:
+        if type(obj) is cls_:
+            return name
+    return default

@@ -4,13 +4,16 @@ Runs for real on this CPU container with the reduced (smoke) configs and on
 TPU with the full ones — the driver code is identical; only --preset and the
 mesh change. Demonstrates the whole system:
 
-  dataset -> fanstore partitions -> cluster (simulated nodes, pluggable
-  transport backend via --backend: modeled / socket / shm) ->
-  FanStoreSession (descriptor API, batched read_many per step) ->
+  dataset -> fanstore partitions -> ClusterSpec topology (simulated
+  nodes x co-located workers, pluggable transport backend via --backend:
+  modeled / socket / shm) -> one cluster.connect() FanStoreSession per
+  (node, worker) sharing each node's cache tier ->
   PrefetchLoader (threads; --prefetch-schedule switches it to the
   clairvoyant schedule-driven mode: the epoch permutation materialized
   from the sampler's peek_epoch() rides ahead of compute in
-  window-coalesced round trips) ->
+  window-coalesced round trips, driven by one PrefetchScheduler per
+  (node, worker) — every node keeps its own windows in flight; there is
+  no node-0 pin) ->
   [optional device-store all_to_all fetch] ->
   train_step (auto or int8 grad sync) -> CheckpointManager -> resume
 
@@ -37,9 +40,9 @@ from repro.configs import ARCH_IDS, get_config, get_smoke
 from repro.data.pipeline import PrefetchLoader
 from repro.data.sampler import GlobalUniformSampler, StratifiedSampler
 from repro.data.synthetic import files_to_tokens, token_dataset, tokens_to_files
-from repro.fanstore.api import FanStoreSession
 from repro.fanstore.cluster import FanStoreCluster
-from repro.fanstore.prefetch import EpochSchedule, PrefetchScheduler
+from repro.fanstore.prefetch import EpochSchedule, SchedulerGroup
+from repro.fanstore.spec import ClusterSpec
 from repro.fanstore.prepare import prepare_dataset
 from repro.models import build_model
 from repro.train.checkpoint import (CheckpointManager, restore_checkpoint,
@@ -57,6 +60,11 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--num-samples", type=int, default=512)
     ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="co-located training workers per node; each gets "
+                         "its own cluster.connect() session (and, under "
+                         "--prefetch-schedule, its own loader axis) while "
+                         "sharing the node's cache tier")
     ap.add_argument("--replication", type=int, default=1)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
@@ -80,12 +88,12 @@ def main() -> None:
     ap.add_argument("--prefetch-schedule", action="store_true",
                     help="clairvoyant data plane: materialize the epoch's "
                          "permutation from the sampler's peek_epoch() into "
-                         "an EpochSchedule and drive PrefetchLoader("
-                         "schedule=...) so whole lookahead windows of "
-                         "remote I/O ride ahead of compute (reads are "
-                         "pinned to node 0, which the schedule covers; "
-                         "steps past the first epoch fall back to demand "
-                         "reads)")
+                         "an EpochSchedule axed per (node, worker) and "
+                         "drive PrefetchLoader(schedule=SchedulerGroup) — "
+                         "every worker on every node keeps its own "
+                         "lookahead windows of remote I/O riding ahead of "
+                         "compute (steps past the first epoch fall back "
+                         "to demand reads)")
     ap.add_argument("--prefetch-window", type=int, default=8,
                     help="lookahead window in training steps for "
                          "--prefetch-schedule")
@@ -105,19 +113,30 @@ def main() -> None:
     files = tokens_to_files(tokens)
     blobs, rep = prepare_dataset(files, num_partitions=args.nodes * 2,
                                  compress=False)
-    # the schedule-driven loader stages windows through the client cache;
-    # budget it to hold one epoch of node-0 reads (the whole dataset)
+    # the schedule-driven loaders stage windows through each node's shared
+    # cache tier; budget every node to hold its epoch slice (bounded by the
+    # whole dataset — co-located workers SHARE the tier, not split it)
     cache_bytes = 0
     if args.prefetch_schedule:
         cache_bytes = sum(len(b) for b in files.values()) + (1 << 20)
-    cluster = FanStoreCluster(args.nodes, backend=args.backend,
-                              cache_bytes=cache_bytes,
-                              cache_policy="belady" if cache_bytes else "lru")
-    cluster.load_partitions(blobs, replication=args.replication)
+    workers = max(1, args.workers)
+    spec = ClusterSpec(num_nodes=args.nodes, workers_per_node=workers,
+                       backend=args.backend,
+                       replication=args.replication,
+                       cache_bytes=cache_bytes,
+                       cache_policy="belady" if cache_bytes else "lru")
+    num_loaders = spec.total_workers
+    if args.prefetch_schedule and args.global_batch % num_loaders:
+        raise SystemExit(
+            f"--global-batch {args.global_batch} must divide across "
+            f"{args.nodes} nodes x {workers} workers for "
+            f"--prefetch-schedule")
+    cluster = FanStoreCluster.from_spec(spec)
+    cluster.load_partitions(blobs)
     paths = sorted(files)
     print(f"fanstore: {rep.num_files} files in {rep.num_partitions} "
-          f"partitions on {args.nodes} nodes (R={args.replication}, "
-          f"backend={args.backend})")
+          f"partitions on {args.nodes} nodes x {workers} workers "
+          f"(R={args.replication}, backend={args.backend})")
 
     if args.sampler == "stratified":
         sampler = StratifiedSampler(args.num_samples, args.global_batch,
@@ -126,21 +145,29 @@ def main() -> None:
         sampler = GlobalUniformSampler(args.num_samples, args.global_batch,
                                        seed=args.seed)
 
-    # one descriptor-based session per simulated node; every read and write
-    # below goes through this surface (no raw cluster calls)
-    sessions = {nid: FanStoreSession(cluster, nid)
-                for nid in range(args.nodes)}
+    # one descriptor-based session per (node, worker) in the declared
+    # topology; every read and write below goes through this surface (no
+    # raw cluster calls). Co-located sessions share their node's tier.
+    order = [ctx.key for ctx in spec.workers()]   # node-major, the
+    sessions = {key: cluster.connect(*key) for key in order}  # slice order
     step_counter = {"n": 0}
 
     def fetch_many(idxs) -> list:
-        # each training step's batch is ONE coalesced read_many on the
-        # node whose turn it is (one modeled round trip per owner); under
-        # --prefetch-schedule every read is pinned to node 0, the
-        # requester the materialized schedule covers
-        node = 0 if args.prefetch_schedule \
-            else step_counter["n"] % args.nodes
+        # under --prefetch-schedule each step's batch is split into one
+        # contiguous slice per (node, worker) — the same slicing the
+        # materialized schedule uses — and every slice is ONE coalesced
+        # read_many on its own session (no node-0 pin: all nodes read);
+        # otherwise the whole batch rides the session whose turn it is
         step_counter["n"] += 1
-        return sessions[node].read_many([paths[i] for i in idxs])
+        if not args.prefetch_schedule:
+            key = order[(step_counter["n"] - 1) % len(order)]
+            return sessions[key].read_many([paths[i] for i in idxs])
+        per = len(idxs) // len(order)
+        out = []
+        for r, key in enumerate(order):
+            chunk = idxs[r * per:(r + 1) * per]
+            out.extend(sessions[key].read_many([paths[i] for i in chunk]))
+        return out
 
     def decode(blobs_list):
         return {"tokens": jnp.asarray(files_to_tokens(blobs_list,
@@ -149,14 +176,18 @@ def main() -> None:
     scheduler = None
     if args.prefetch_schedule:
         # the epoch's permutation is fully determined by the sampler seed:
-        # materialize it WITHOUT advancing the sampler and let the loader
-        # keep lookahead windows of coalesced remote I/O in flight
+        # materialize it WITHOUT advancing the sampler, axed per
+        # (node, worker), and run one clairvoyant driver per coordinate so
+        # every node keeps its own lookahead windows in flight
         schedule = EpochSchedule.from_sampler(sampler, paths,
-                                              num_requesters=1,
+                                              num_requesters=num_loaders,
+                                              workers_per_node=workers,
                                               cluster=cluster)
-        scheduler = PrefetchScheduler(cluster, schedule, 0,
-                                      window_steps=args.prefetch_window)
-        print(f"prefetch-schedule: {scheduler.num_windows} windows of "
+        scheduler = SchedulerGroup.for_schedule(
+            cluster, schedule, window_steps=args.prefetch_window)
+        print(f"prefetch-schedule: {len(scheduler)} loaders "
+              f"({args.nodes} nodes x {workers} workers), "
+              f"{scheduler.num_windows} windows of "
               f"{args.prefetch_window} steps over "
               f"{schedule.num_steps} steps")
 
@@ -196,13 +227,14 @@ def main() -> None:
                 if mgr is not None:
                     mgr.save(n_done, state, extra=extra)
                 if args.ckpt_fanstore:
-                    save_to_session(sessions[0], n_done, state, extra=extra)
+                    save_to_session(sessions[order[0]], n_done, state,
+                                    extra=extra)
         extra = {"sampler_step": sampler.state.step,
                  "sampler_epoch": sampler.state.epoch}
         if mgr is not None:
             mgr.save(n_done, state, blocking=True, extra=extra)
         if args.ckpt_fanstore and n_done % args.ckpt_every != 0:
-            save_to_session(sessions[0], n_done, state, extra=extra)
+            save_to_session(sessions[order[0]], n_done, state, extra=extra)
     finally:
         try:
             loader.close()   # may re-raise an in-flight window error
@@ -211,19 +243,20 @@ def main() -> None:
     print(f"done: {n_done} steps, local-hit-rate="
           f"{cluster.local_hit_rate():.3f}")
     if scheduler is not None:
-        clock = cluster.clocks[0]
-        print(f"prefetch-schedule: windows_issued="
-              f"{scheduler.windows_issued} "
+        prefetch_s = max(c.prefetch_s for c in cluster.clocks.values())
+        busy_s = max(c.busy_s for c in cluster.clocks.values())
+        print(f"prefetch-schedule: loaders={len(scheduler)} "
+              f"windows_issued={scheduler.windows_issued} "
               f"bytes_scheduled={scheduler.bytes_scheduled} "
-              f"cache_hit_rate={clock.cache_hit_rate:.3f} "
-              f"prefetch_s={clock.prefetch_s:.6f} "
-              f"(prefetch lane overlaps demand; busy={clock.busy_s:.6f})")
+              f"cache_hit_rate={cluster.cache_hit_rate():.3f} "
+              f"max_prefetch_s={prefetch_s:.6f} "
+              f"(prefetch lane overlaps demand; busy={busy_s:.6f})")
     if args.backend != "modeled":
         print(f"measured: makespan={cluster.measured_makespan_s():.6f}s "
               f"bytes={cluster.accounting.measured_bytes()} "
               f"requests={cluster.accounting.measured_requests()}")
     if args.ckpt_fanstore:
-        clock = cluster.clocks[0]
+        clock = cluster.clocks[order[0][0]]
         print(f"fanstore-ckpt: write_bytes={clock.write_bytes} "
               f"write_s={clock.write_s:.6f} consume_s={clock.consume_s:.6f} "
               f"(write lane overlaps the data plane; busy={clock.busy_s:.6f})")
