@@ -13,16 +13,22 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 case "$lane" in
   fast)
     # backend-parity first: identical payloads/visibility/modeled clocks on
-    # modeled vs socket vs shm wires, racing-writer commit atomicity, and
-    # deterministic serving-loop teardown (the conftest leak fixture fails
-    # any test that strands a fanstore-* thread, so this lane cannot hang).
-    # Then the multi-worker topology parity suite: ClusterSpec validation +
-    # round trip, co-located sessions sharing one node cache tier (shared
-    # beats private at equal total bytes, attribution sums == tier totals),
-    # per-(node, worker) schedules, and the cross-process ShmArena
-    # spawn-attach round trip.
-    python -m pytest -x -q tests/test_backends.py tests/test_topology.py
-    python -m pytest -x -q -m "not slow" --ignore=tests/test_backends.py \
+    # modeled vs socket vs shm wires (rdma rides the same parity matrix
+    # with its one-sided no-serve contract pinned exactly), racing-writer
+    # commit atomicity, and deterministic serving-loop teardown — striped
+    # connections included (the conftest leak fixture fails any test that
+    # strands a fanstore-* thread, so this lane cannot hang). The wire
+    # suite drives the framing/codec layer directly: torn reads,
+    # oversized-frame rejection, codec-flag round trips, out-of-order
+    # stripe reassembly. Then the multi-worker topology parity suite:
+    # ClusterSpec validation + round trip, co-located sessions sharing one
+    # node cache tier (shared beats private at equal total bytes,
+    # attribution sums == tier totals), per-(node, worker) schedules, and
+    # the cross-process ShmArena spawn-attach round trip.
+    python -m pytest -x -q tests/test_wire.py tests/test_backends.py \
+        tests/test_topology.py
+    python -m pytest -x -q -m "not slow" --ignore=tests/test_wire.py \
+        --ignore=tests/test_backends.py \
         --ignore=tests/test_topology.py
     # perf trajectory smoke: seed/batched/prefetched arms + cache policies
     # + the multi-tenant `workers` block (shared node tier strictly beats
@@ -30,8 +36,13 @@ case "$lane" in
     # MEASURED blocks (read+write, scheduled-prefetch, and checkpoint-
     # overlap traces over real socket + shm wires; guards assert nonzero
     # lane time, ledger==trace/staged bytes, shm beats socket, and clean
-    # serving-loop teardown). Writes BENCH_io.json (uploaded as the
-    # bench-io artifact, `workers` block included).
+    # serving-loop teardown) + the `measured.wire` block (single-conn vs
+    # striped/pipelined socket vs one-sided rdma on a pure-remote trace:
+    # pinned throughput floor, stripe attribution, cost-model-gated codec
+    # engagement, zero rdma serve time) + the guarded `prefetch_depth`
+    # ratio on the slow latency-bound fabric. Writes BENCH_io.json
+    # (uploaded as the bench-io artifact, `workers`, `measured.wire`, and
+    # `prefetch_depth` blocks included).
     python benchmarks/run.py --only io-json --io-json BENCH_io.json --smoke
     ;;
   full)

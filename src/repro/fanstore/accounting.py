@@ -126,6 +126,26 @@ class WallClock:
     bytes_in: int = 0
     bytes_out: int = 0
     requests: int = 0
+    # per-stripe attribution: the striped socket backend books each
+    # stripe leg's wall time and bytes under its stripe id (stripe 0 is
+    # the classic single-connection lane), so a skewed stripe — one slow
+    # connection starving the reassembly barrier — is visible in the
+    # ledger instead of smeared into the lane total.
+    stripe_ns: Dict[int, int] = field(default_factory=dict)
+    stripe_bytes: Dict[int, int] = field(default_factory=dict)
+    # wire-codec ledger: payload bytes before (raw) and after (sent) the
+    # on-the-wire codec, receiver-side truth. raw == sent when the cost
+    # model kept every payload raw.
+    wire_raw_bytes: int = 0
+    wire_sent_bytes: int = 0
+
+    def attribute_stripe(self, stripe_id: int, dt_ns: int,
+                         nbytes: int) -> None:
+        """Book one stripe leg (call under the transport lock)."""
+        self.stripe_ns[stripe_id] = \
+            self.stripe_ns.get(stripe_id, 0) + dt_ns
+        self.stripe_bytes[stripe_id] = \
+            self.stripe_bytes.get(stripe_id, 0) + nbytes
 
     def accrue(self, lane: str, dt_ns: int) -> None:
         if lane == "prefetch":
@@ -193,6 +213,20 @@ class ClusterAccounting:
 
     def measured_requests(self) -> int:
         return sum(w.requests for w in self.wall.values())
+
+    def measured_stripe_bytes(self) -> Dict[int, int]:
+        """Cluster-wide bytes moved per stripe id (striped socket wires)."""
+        out: Dict[int, int] = {}
+        for w in self.wall.values():
+            for sid, nbytes in w.stripe_bytes.items():
+                out[sid] = out.get(sid, 0) + nbytes
+        return out
+
+    def measured_wire_saved(self) -> int:
+        """Bytes the on-the-wire codec kept OFF the wire (0 when the cost
+        model never engaged it)."""
+        return sum(w.wire_raw_bytes - w.wire_sent_bytes
+                   for w in self.wall.values())
 
     def aggregate_bandwidth(self) -> float:
         total = sum(c.local_bytes + c.bytes_in + c.cache_hit_bytes

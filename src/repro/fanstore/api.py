@@ -413,6 +413,20 @@ class FanStoreSession:
     def checkpoint_writer(self, **kw) -> "CheckpointWriter":
         return CheckpointWriter(self, **kw)
 
+    def transport_stats(self) -> Dict[str, object]:
+        """This node's measured wire ledger: per-stripe wall time / bytes
+        plus the on-the-wire codec's raw-vs-sent byte counts (all zero on
+        purely modeled backends — the modeled view lives on the clocks)."""
+        w = self.cluster.accounting.wall[self.node_id]
+        return {
+            "backend": self.cluster.backend,
+            "stripes": dict(w.stripe_bytes),
+            "stripe_ns": dict(w.stripe_ns),
+            "wire_raw_bytes": w.wire_raw_bytes,
+            "wire_sent_bytes": w.wire_sent_bytes,
+            "wire_saved_bytes": w.wire_raw_bytes - w.wire_sent_bytes,
+        }
+
     # ---- lifecycle ---------------------------------------------------------
     def close_all(self) -> None:
         """Abort open writes (uncommitted data is discarded — visible-until-

@@ -1,22 +1,29 @@
 """Pluggable transport backends behind the one verb seam.
 
-Three interchangeable wires (pick one with
+Four interchangeable wires (pick one with
 ``FanStoreCluster(backend=...)``):
 
 =========  ========================  =====================================
 name       moves bytes via           accounts
 =========  ========================  =====================================
 modeled    in-process references     modeled clocks only (deterministic)
-socket     framed TCP, one serving   modeled clocks + measured wall time
-           loop per node             (requester lanes + server serve_ns)
+socket     framed TCP: striped       modeled clocks + measured wall time
+           connections, pipelined    (requester + per-stripe lanes,
+           requests, optional        server serve_ns, wire codec ledger)
+           on-the-wire LZSS
 shm        zero-copy memoryviews /   modeled clocks + measured wall time
            shared-memory segments
+rdma       one-sided reads over      modeled one-sided cost (lookup +
+           registered ShmArena       line rate, ZERO owner serve lane)
+           segments (rkey tables)    + measured wall time
 =========  ========================  =====================================
 
-All three speak the same verbs and accrue the same modeled costs, so the
-engine above the seam (cluster, session, prefetch scheduler, write path)
-is backend-agnostic; only payload movement and measured accounting
-differ. RDMA/UCX-style backends slot in by subclassing
+All wires speak the same verbs; the two-sided ones (modeled / socket /
+shm) accrue identical modeled costs, so the engine above the seam
+(cluster, session, prefetch scheduler, write path) is backend-agnostic.
+The rdma backend's fabric genuinely differs — one-sided reads involve no
+owner CPU — so it overrides the documented accounting seams. Further
+UCX-style backends slot in by subclassing
 :class:`~repro.fanstore.backends.base.TransportBackend` and registering
 here.
 """
@@ -26,17 +33,19 @@ from typing import Dict, Type
 
 from repro.fanstore.backends.base import TransportBackend
 from repro.fanstore.backends.modeled import InterconnectModel, ModeledBackend
+from repro.fanstore.backends.rdma import RdmaBackend
 from repro.fanstore.backends.shm import SharedMemoryBackend, ShmArena
 from repro.fanstore.backends.socket import SocketBackend
 
 __all__ = ["TransportBackend", "ModeledBackend", "SocketBackend",
-           "SharedMemoryBackend", "ShmArena", "InterconnectModel",
-           "BACKENDS", "make_backend"]
+           "SharedMemoryBackend", "ShmArena", "RdmaBackend",
+           "InterconnectModel", "BACKENDS", "make_backend"]
 
 BACKENDS: Dict[str, Type[TransportBackend]] = {
     "modeled": ModeledBackend,
     "socket": SocketBackend,
     "shm": SharedMemoryBackend,
+    "rdma": RdmaBackend,
 }
 
 

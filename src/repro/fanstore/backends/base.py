@@ -17,6 +17,14 @@ Subclasses override only the two payload-movement primitives:
 * :meth:`_move_put` — how output chunks travel to the placement owner's
   staging area.
 
+Two-sided wires (modeled / socket / shm) share the base cost model
+verbatim, so their modeled quantities never depend on which wire moved
+the bytes. A backend whose FABRIC genuinely differs (the RDMA backend's
+one-sided reads involve no owner CPU) additionally overrides the two
+accounting seams — :meth:`_account_remote` / :meth:`_account_put` — and
+documents the deviation; the lane bookkeeping (prefetch ledger, write
+lane split) stays the base's job either way.
+
 A backend that sets ``measured = True`` additionally gets wall-clock
 accounting for free: the base times every movement with
 ``time.perf_counter_ns`` and accrues the duration onto the requester's
@@ -39,7 +47,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.fanstore.accounting import NodeClock, WallClock, WindowAccount
 from repro.fanstore.store import NodeStore
-from repro.fanstore.wire import FetchItem
+from repro.fanstore.wire import FetchItem, WireCodecPolicy
 
 __all__ = ["TransportBackend"]
 
@@ -48,7 +56,7 @@ class TransportBackend:
     """Moves payloads between node stores; accounts modeled (and, for real
     wires, measured) cost. Abstract over the movement mechanism only."""
 
-    #: registry name ("modeled" / "socket" / "shm")
+    #: registry name ("modeled" / "socket" / "shm" / "rdma")
     name = "base"
     #: True when the backend performs real transfers worth wall-clock timing
     measured = False
@@ -56,12 +64,22 @@ class TransportBackend:
     def __init__(self, net, nodes: Dict[int, NodeStore],
                  clocks: Dict[int, NodeClock], *,
                  wall: Optional[Dict[int, WallClock]] = None,
-                 num_threads: int = 8):
+                 num_threads: int = 8, stripes: int = 1,
+                 pipeline_depth: int = 4, wire_codec: str = "none",
+                 wire_policy: Optional[Dict[str, float]] = None):
         self.net = net
         self.nodes = nodes
         self.clocks = clocks
         self.wall = wall if wall is not None else {
             i: WallClock() for i in nodes}
+        # wire tuning lives on the base so ClusterSpec can plumb it to ANY
+        # backend uniformly; wires without connections (modeled/shm/rdma)
+        # simply never consult stripes/pipeline, and the codec policy is
+        # validated here either way (a bad wire_codec fails at build time)
+        self.stripes = max(1, int(stripes))
+        self.pipeline_depth = max(1, int(pipeline_depth))
+        self.wire_policy = WireCodecPolicy(codec=wire_codec,
+                                           **dict(wire_policy or {}))
         self._lock = threading.Lock()     # clock accrual from pool threads
         self._lifecycle = threading.Lock()  # start/close state transitions
         self._pool: Optional[ThreadPoolExecutor] = None
@@ -129,6 +147,12 @@ class TransportBackend:
 
     def _stop_serving(self) -> None:
         """Subclass hook: join serving loops, close connections."""
+
+    def invalidate_path(self, path: str) -> None:
+        """A committed output was unlinked: drop any transport-held state
+        for the name (the RDMA backend's registration table caches
+        path -> segment mappings that must never serve a deleted payload).
+        No-op for wires that hold no per-path state."""
 
     # ---- movement primitives (the only parts a wire must provide) ----------
     def _move_fetch(self, requester: int, owner: int,
@@ -369,12 +393,22 @@ class TransportBackend:
         trips = len(pairs) if round_trips is None else round_trips
         stored = sum(item.size for item, _ in pairs)
         with self._lock:
-            cost = trips * self.net.latency_s + stored / self.net.bandwidth_Bps
-            self._accrue_write(writer, cost, stored, trips, lane)
-            oc = self.clocks[owner]
-            oc.serve_s += trips * self.net.open_overhead_s
-            oc.serve_s += stored / self.net.bandwidth_Bps
-            oc.serve_s += stored / self.net.disk_bw_Bps
+            self._account_put(writer, owner, stored, trips, lane)
+
+    def _account_put(self, writer: int, owner: int, stored: int,
+                     trips: int, lane: str) -> None:
+        """Modeled cost of shipping ``stored`` output bytes in ``trips``
+        messages: writer-side latency + NIC on its lane, owner-side
+        request handling + NIC + SSD flush on its serve lane. The one
+        overridable seam for fabrics with different write semantics
+        (RDMA's one-sided writes skip the owner serve accrual entirely).
+        Call under the transport lock."""
+        cost = trips * self.net.latency_s + stored / self.net.bandwidth_Bps
+        self._accrue_write(writer, cost, stored, trips, lane)
+        oc = self.clocks[owner]
+        oc.serve_s += trips * self.net.open_overhead_s
+        oc.serve_s += stored / self.net.bandwidth_Bps
+        oc.serve_s += stored / self.net.disk_bw_Bps
 
     def _accrue_write(self, node_id: int, cost: float, nbytes: int,
                       rpcs: int, lane: str) -> None:

@@ -41,6 +41,12 @@ class InterconnectModel:
     open_overhead_s: float = 3e-6
     decompress_Bps: float = 1.5e9     # LZSS-class decode rate per core
     cache_bw_Bps: float = 20e9        # DRAM-resident read cache
+    # one-sided (RDMA-class) arm: a registered read skips the owner's CPU
+    # entirely — the requester pays a registration-table lookup instead of
+    # a request/response latency, then line-rate bytes. Only the rdma
+    # backend consults these.
+    rdma_lookup_s: float = 2e-7       # table lookup + doorbell, no RTT
+    rdma_bandwidth_Bps: float = 100e9 / 8
 
     def remote_cost(self, nbytes: int) -> float:
         return self.latency_s + nbytes / self.bandwidth_Bps

@@ -93,6 +93,24 @@ class ShmArena:
                 seg.close()
         return hit[0].buf[:size]
 
+    def drop(self, name: str) -> None:
+        """Release ONE segment early (e.g. an unlinked output's
+        registration): unmap, and unlink if this arena created it."""
+        with self._lock:
+            hit = self._segments.pop(name, None)
+        if hit is None:
+            return
+        seg, owns = hit
+        try:
+            seg.close()
+        except BufferError:            # a borrowed view is still live
+            pass
+        if owns:
+            try:
+                seg.unlink()
+            except FileNotFoundError:
+                pass
+
     def close(self) -> None:
         with self._lock:
             segments = list(self._segments.values())
@@ -121,9 +139,10 @@ class SharedMemoryBackend(TransportBackend):
     measured = True
 
     def __init__(self, net, nodes, clocks, *, wall=None,
-                 num_threads: int = 8, arena: Optional[ShmArena] = None):
+                 num_threads: int = 8, arena: Optional[ShmArena] = None,
+                 **wire_opts):
         super().__init__(net, nodes, clocks, wall=wall,
-                         num_threads=num_threads)
+                         num_threads=num_threads, **wire_opts)
         self.arena = arena
 
     def _stop_serving(self) -> None:

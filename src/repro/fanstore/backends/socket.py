@@ -7,28 +7,61 @@ from its own ``NodeStore`` — ``FETCH_BATCH``/``FETCH_WINDOW`` frames come
 back as one ``DATA`` frame carrying every payload in the group (the wire
 twin of the modeled one-round-trip-per-owner coalescing), ``PUT_BATCH``
 frames land in the owner's per-(writer, path) staging, and handler
-exceptions travel back as ``ERR`` frames that re-raise client-side as the
+exceptions travel back as ERR frames that re-raise client-side as the
 same exception class.
 
-The client half keeps ONE persistent connection per (requester, owner)
-pair — connections are dialed lazily, serialized by a per-pair lock
-(one request frame, one response frame), and closed on backend
-``close()``. Serving loops are named ``fanstore-serve-*`` /
-``fanstore-conn-*`` so tests can assert deterministic teardown.
+The data plane is built for throughput:
+
+* **Connection striping** — up to ``stripes`` persistent connections per
+  (requester, owner) pair. A large batch is split into contiguous
+  sub-batches balanced by stored bytes (``wire.split_stripes``), each
+  sub-batch rides its own connection concurrently (its own server-side
+  handler thread, its own TCP stream), and the payload runs are slotted
+  back into item order whatever order the stripes finish
+  (``wire.reassemble``). Stripe legs are wall-timed individually
+  (``WallClock.attribute_stripe``).
+* **Request pipelining** — within one connection a sub-batch is cut into
+  up to ``pipeline_depth`` request frames sent back-to-back before the
+  first response is read, so the server builds response *k+1* while the
+  client drains response *k*; TCP FIFO plus the server's strict
+  one-response-per-request discipline keeps framing aligned with no
+  sequence numbers on the wire.
+* **Vectored I/O** — responses are scatter-gathered with ``sendmsg``
+  straight from the store's zero-copy ``serve_remote_view`` buffers
+  (``wire.write_frame_parts``), and both sides ``recv_into`` reusable
+  per-connection receive buffers, so each payload crosses Python exactly
+  once per side (kernel->buffer on receive; buffer->kernel on send).
+* **Tuned sockets** — TCP_NODELAY plus sized SO_SNDBUF/SO_RCVBUF
+  (``sock_buf_bytes``, default 4 MiB) on every connection, both sides.
+* **LZSS-on-the-wire** — the per-payload codec flag from
+  :class:`~repro.fanstore.wire.WireCodecPolicy`: each DATA/PUT payload is
+  compressed only when the cost model predicts the codec CPU beats the
+  wire time saved, and ships raw (flag clear) when the attempt does not
+  shrink it. The receiver ledgers raw-vs-sent bytes onto its
+  ``WallClock``.
+
+Connections are dialed lazily, each serialized by a per-stripe lock, and
+closed on backend ``close()`` — teardown joins every stripe's connection
+handler deterministically (the PR-4 wake-up dial covers the accept loop;
+shutdown+close unblocks each per-connection recv). Serving loops are
+named ``fanstore-serve-*`` / ``fanstore-conn-*`` and the stripe fan-out
+pool ``fanstore-stripe-*`` so the leak-check fixture sees them all.
 
 Accounting is dual: the modeled clocks accrue exactly as on every other
-backend (so modeled quantities stay backend-independent), while measured
-wall time accrues onto the ``WallClock`` lanes — the requester pays the
-observed round-trip duration, and the owner's serve lane is credited with
-the handling time the server reports inside each response frame. These
-are the repo's first hardware-truth numbers (``BENCH_io.json``'s
-``measured`` block).
+two-sided backend (so modeled quantities stay backend-independent), while
+measured wall time accrues onto the ``WallClock`` lanes — the requester
+pays the observed round-trip duration, and the owner's serve lane is
+credited with the handling time the server reports inside each response
+frame. These are the repo's hardware-truth numbers (``BENCH_io.json``'s
+``measured`` block; the ``measured.wire`` block pins striped-vs-single
+throughput on the standard trace).
 """
 from __future__ import annotations
 
 import socket
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.fanstore import wire
@@ -42,13 +75,34 @@ __all__ = ["SocketBackend"]
 _FETCH_TYPES = {"fetch": MsgType.FETCH, "fetch_batch": MsgType.FETCH_BATCH,
                 "fetch_window": MsgType.FETCH_WINDOW}
 
+#: default socket buffer size (SO_SNDBUF/SO_RCVBUF), both sides
+_SOCK_BUF = 4 << 20
+
+#: a batch smaller than this ships on one stripe: splitting it would pay
+#: extra dials and thread hops for bytes a single stream moves instantly
+_STRIPE_MIN_BYTES = 128 << 10
+
+
+def _tune(sock: socket.socket, buf_bytes: int) -> None:
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    try:
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, buf_bytes)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, buf_bytes)
+    except OSError:        # pragma: no cover - kernel may clamp, never fatal
+        pass
+
 
 class _NodeServer:
     """One node's serving loop: accept thread + per-connection handlers."""
 
-    def __init__(self, node_id: int, store: NodeStore, host: str):
+    def __init__(self, node_id: int, store: NodeStore, host: str,
+                 policy: Optional[wire.WireCodecPolicy] = None,
+                 buf_bytes: int = _SOCK_BUF):
         self.node_id = node_id
         self.store = store
+        self.policy = policy if policy is not None and policy.codec != "none" \
+            else None
+        self.buf_bytes = buf_bytes
         self._listener = socket.create_server((host, 0))
         self.address: Tuple[str, int] = self._listener.getsockname()
         self._stop = threading.Event()
@@ -70,7 +124,7 @@ class _NodeServer:
             if self._stop.is_set():   # the wake-up dial from close()
                 conn.close()
                 return
-            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            _tune(conn, self.buf_bytes)
             t = threading.Thread(
                 target=self._handle, args=(conn,),
                 name=f"fanstore-conn-{self.node_id}", daemon=True)
@@ -80,9 +134,14 @@ class _NodeServer:
             t.start()
 
     def _handle(self, conn: socket.socket) -> None:
+        # reusable receive buffer: the connection is persistent, so one
+        # geometrically-grown buffer serves every request frame with zero
+        # per-frame allocation (the decoders copy payloads out before the
+        # next read overwrites it)
+        rbuf = bytearray(1 << 16)
         try:
             while not self._stop.is_set():
-                mtype, body = wire.read_frame(conn)
+                mtype, body = wire.read_frame(conn, rbuf)
                 self._dispatch(conn, mtype, body)
         except (ConnectionError, OSError):
             pass                       # peer hung up / shutdown race
@@ -90,42 +149,47 @@ class _NodeServer:
             conn.close()
 
     def _dispatch(self, conn: socket.socket, mtype: MsgType,
-                  body: bytes) -> None:
+                  body) -> None:
         """Answer one request with exactly one response frame — a handler
         exception (FileNotFoundError from a bad path, PermissionError,
         anything the store raises) becomes an ERR frame and the connection
         stays usable; only a failure to WRITE the response (peer gone)
-        propagates and closes the connection. The response is built before
-        any byte is sent, so request/response framing can never
-        desynchronize."""
-        rtype, rbody = self._answer(mtype, body)
-        wire.write_frame(conn, rtype, rbody)
+        propagates and closes the connection. The response scatter list is
+        built before any byte is sent, so request/response framing can
+        never desynchronize — the discipline pipelined clients rely on."""
+        rtype, parts = self._answer(mtype, body)
+        wire.write_frame_parts(conn, rtype, parts)
 
-    def _answer(self, mtype: MsgType, body: bytes) -> Tuple[MsgType, bytes]:
+    def _answer(self, mtype: MsgType, body) -> Tuple[MsgType, List[bytes]]:
         t0 = time.perf_counter_ns()
         try:
             if mtype in (MsgType.FETCH, MsgType.FETCH_BATCH,
                          MsgType.FETCH_WINDOW):
                 paths, materialize = wire.decode_fetch(body)
-                if materialize:        # ONE scatter-gather over local blobs
-                    payloads = [self.store.serve_remote(p) for p in paths]
+                if materialize:        # ONE scatter-gather over local blobs:
+                    # zero-copy views — sendmsg gathers them straight from
+                    # the partition blobs / output tier, payloads are
+                    # never joined into a response body
+                    payloads = [self.store.serve_remote_view(p)
+                                for p in paths]
                 else:
                     payloads = [b"" for _ in paths]
-                return MsgType.DATA, wire.encode_data(
-                    payloads, serve_ns=time.perf_counter_ns() - t0)
+                return MsgType.DATA, wire.encode_data_parts(
+                    payloads, serve_ns=time.perf_counter_ns() - t0,
+                    policy=self.policy)
             if mtype == MsgType.PUT_BATCH:
                 writer, entries = wire.decode_put(body)
                 for path, data in entries:
                     self.store.stage_output(writer, path, data)
-                return MsgType.OK, wire.encode_ok(
-                    serve_ns=time.perf_counter_ns() - t0)
+                return MsgType.OK, [wire.encode_ok(
+                    serve_ns=time.perf_counter_ns() - t0)]
             if mtype == MsgType.STAT:
                 path = wire.decode_stat(body)
-                return MsgType.STAT_OK, wire.encode_stat_ok(
-                    self._stat(path), serve_ns=time.perf_counter_ns() - t0)
+                return MsgType.STAT_OK, [wire.encode_stat_ok(
+                    self._stat(path), serve_ns=time.perf_counter_ns() - t0)]
             raise wire.WireError(f"unexpected request type {mtype!r}")
         except BaseException as exc:   # noqa: BLE001 — becomes an ERR frame
-            return MsgType.ERR, wire.encode_error(exc)
+            return MsgType.ERR, [wire.encode_error(exc)]
 
     def _stat(self, path: str) -> StatRecord:
         rec = self.store.record_for(path)
@@ -161,6 +225,18 @@ class _NodeServer:
             t.join(timeout=5.0)
 
 
+class _Conn:
+    """One client-side stripe connection: socket + request lock + reusable
+    receive buffer (pipelined responses decode before the next read)."""
+
+    __slots__ = ("sock", "lock", "rbuf")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.lock = threading.Lock()
+        self.rbuf = bytearray(1 << 16)
+
+
 class SocketBackend(TransportBackend):
     """Framed TCP transfers between per-node serving loops (loopback)."""
 
@@ -168,32 +244,48 @@ class SocketBackend(TransportBackend):
     measured = True
 
     def __init__(self, net, nodes, clocks, *, wall=None, num_threads: int = 8,
-                 host: str = "127.0.0.1"):
+                 host: str = "127.0.0.1", sock_buf_bytes: int = _SOCK_BUF,
+                 stripe_min_bytes: int = _STRIPE_MIN_BYTES, **wire_opts):
         super().__init__(net, nodes, clocks, wall=wall,
-                         num_threads=num_threads)
+                         num_threads=num_threads, **wire_opts)
         self.host = host
+        self.sock_buf_bytes = int(sock_buf_bytes)
+        self.stripe_min_bytes = int(stripe_min_bytes)
         self._servers: Dict[int, _NodeServer] = {}
-        # one persistent connection (+ request lock) per (requester, owner)
-        self._conns: Dict[Tuple[int, int],
-                          Tuple[socket.socket, threading.Lock]] = {}
+        # one persistent connection per (requester, owner, stripe) — the
+        # single-connection wire of PR 4 is exactly the stripes=1 case
+        self._conns: Dict[Tuple[int, int, int], _Conn] = {}
         self._dial_lock = threading.Lock()
+        self._stripe_pool: Optional[ThreadPoolExecutor] = None
 
     # ---- lifecycle ---------------------------------------------------------
     def _start_serving(self) -> None:
         for nid, store in self.nodes.items():
             if nid not in self._servers:
-                self._servers[nid] = _NodeServer(nid, store, self.host)
+                self._servers[nid] = _NodeServer(
+                    nid, store, self.host, policy=self.wire_policy,
+                    buf_bytes=self.sock_buf_bytes)
+        if self.stripes > 1 and self._stripe_pool is None:
+            # fan-out workers for concurrent stripe legs; sized past the
+            # stripe count so two overlapping striped batches (demand +
+            # prefetch) both make progress. Workers spawn on demand.
+            self._stripe_pool = ThreadPoolExecutor(
+                max_workers=2 * self.stripes,
+                thread_name_prefix="fanstore-stripe")
 
     def _stop_serving(self) -> None:
         with self._dial_lock:
             conns = list(self._conns.values())
             self._conns.clear()
-        for sock, _ in conns:
-            try:
-                sock.shutdown(socket.SHUT_RDWR)
-            except OSError:
+        for c in conns:                # EVERY stripe's connection, each join
+            try:                       # deterministic: shutdown unblocks the
+                c.sock.shutdown(socket.SHUT_RDWR)  # server-side recv, close
+            except OSError:            # releases the fd
                 pass
-            sock.close()
+            c.sock.close()
+        pool, self._stripe_pool = self._stripe_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)   # joins every fanstore-stripe worker
         for srv in self._servers.values():
             srv.close()
         self._servers.clear()
@@ -203,9 +295,8 @@ class SocketBackend(TransportBackend):
         self.start()
         return self._servers[node_id].address
 
-    def _conn(self, requester: int,
-              owner: int) -> Tuple[socket.socket, threading.Lock]:
-        key = (requester, owner)
+    def _conn(self, requester: int, owner: int, stripe: int = 0) -> _Conn:
+        key = (requester, owner, stripe)
         hit = self._conns.get(key)      # GIL-atomic fast path
         if hit is not None:
             return hit
@@ -218,37 +309,111 @@ class SocketBackend(TransportBackend):
             if hit is None:
                 sock = socket.create_connection(
                     self._servers[owner].address)
-                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                hit = (sock, threading.Lock())
+                _tune(sock, self.sock_buf_bytes)
+                hit = _Conn(sock)
                 self._conns[key] = hit
         return hit
 
     # ---- one round trip ----------------------------------------------------
     def _request(self, requester: int, owner: int, mtype: MsgType,
-                 body: bytes) -> Tuple[MsgType, bytes]:
-        sock, lock = self._conn(requester, owner)
-        with lock:                     # one frame out, one frame back
-            wire.write_frame(sock, mtype, body)
-            rtype, rbody = wire.read_frame(sock)
-        if rtype == MsgType.ERR:
-            raise wire.decode_error(rbody)
-        return rtype, rbody
+                 body: bytes, *, parts: Optional[List[bytes]] = None
+                 ) -> Tuple[MsgType, memoryview]:
+        conn = self._conn(requester, owner)
+        with conn.lock:                # one frame out, one frame back
+            if parts is not None:
+                wire.write_frame_parts(conn.sock, mtype, parts)
+            else:
+                wire.write_frame(conn.sock, mtype, body)
+            rtype, rbody = wire.read_frame(conn.sock, conn.rbuf)
+            if rtype == MsgType.ERR:
+                raise wire.decode_error(rbody)
+            # copy before dropping the lock: rbody aliases the reusable
+            # receive buffer, which the next request overwrites (OK/STAT
+            # responses are tiny; DATA responses decode under the lock in
+            # _fetch_on_stripe instead)
+            return rtype, memoryview(bytes(rbody))
+
+    # ---- striped + pipelined fetch -----------------------------------------
+    def _fetch_on_stripe(self, requester: int, owner: int, stripe: int,
+                         items: Sequence[FetchItem], materialize: bool,
+                         verb: str) -> Tuple[List[bytes], int, int, int]:
+        """One stripe leg: up to ``pipeline_depth`` request frames in
+        flight on this stripe's connection. Every request frame goes out
+        before the first response is read — the server answers strictly
+        in order per connection, so the pipeline can never mismatch.
+        Returns (payloads, serve_ns, raw_bytes, wire_bytes)."""
+        mtype = _FETCH_TYPES[verb]
+        depth = self.pipeline_depth if len(items) > 1 else 1
+        chunks = wire.split_stripes(items, depth)
+        conn = self._conn(requester, owner, stripe)
+        payloads: List[bytes] = []
+        serve_ns = raw_b = wire_b = 0
+        err: Optional[BaseException] = None
+        with conn.lock:
+            wire.sendmsg_all(conn.sock, [
+                wire.frame(mtype, wire.encode_fetch(
+                    [it.path for it in items[s:e]], materialize=materialize))
+                for s, e in chunks])
+            for _ in chunks:           # drain EVERY response (keep framing
+                rtype, rbody = wire.read_frame(conn.sock, conn.rbuf)
+                if rtype == MsgType.ERR:   # aligned even past an error)
+                    err = err or wire.decode_error(rbody)
+                    continue
+                p, s_ns, raw, sent = wire.decode_data_ex(rbody)
+                payloads.extend(p)
+                serve_ns += s_ns
+                raw_b += raw
+                wire_b += sent
+        if err is not None:
+            raise err
+        return payloads, serve_ns, raw_b, wire_b
+
+    def _timed_stripe(self, requester: int, owner: int, stripe: int,
+                      items: Sequence[FetchItem], materialize: bool,
+                      verb: str) -> Tuple[List[bytes], int]:
+        """Run one stripe leg and book its wall time, bytes, and codec
+        ledger under the stripe's id."""
+        t0 = time.perf_counter_ns()
+        payloads, serve_ns, raw_b, wire_b = self._fetch_on_stripe(
+            requester, owner, stripe, items, materialize, verb)
+        dt = time.perf_counter_ns() - t0
+        with self._lock:
+            w = self.wall[requester]
+            w.attribute_stripe(stripe, dt, sum(len(p) for p in payloads))
+            w.wire_raw_bytes += raw_b
+            w.wire_sent_bytes += wire_b
+        return payloads, serve_ns
 
     # ---- movement primitives -----------------------------------------------
     def _move_fetch(self, requester: int, owner: int,
                     items: Sequence[FetchItem], materialize: bool,
                     verb: str) -> Tuple[List[bytes], int]:
-        _, rbody = self._request(
-            requester, owner, _FETCH_TYPES[verb],
-            wire.encode_fetch([it.path for it in items],
-                              materialize=materialize))
-        return wire.decode_data(rbody)
+        pool = self._stripe_pool
+        n_stripes = min(self.stripes, len(items)) if materialize else 1
+        if (n_stripes > 1 and pool is not None
+                and sum(it.stored for it in items) >= self.stripe_min_bytes):
+            bounds = wire.split_stripes(items, n_stripes)
+            futs = [pool.submit(self._timed_stripe, requester, owner, sid,
+                                items[s:e], materialize, verb)
+                    for sid, (s, e) in enumerate(bounds)]
+            results = [f.result() for f in futs]
+            payloads = wire.reassemble(
+                len(items),
+                [(bounds[i], results[i][0]) for i in range(len(bounds))])
+            # serve legs run on concurrent handler threads server-side;
+            # lanes are activity totals, so they sum (same convention as
+            # every measured lane)
+            return payloads, sum(r[1] for r in results)
+        return self._timed_stripe(requester, owner, 0, items, materialize,
+                                  verb)
 
     def _move_put(self, writer: int, owner: int,
                   pairs: Sequence[Tuple[FetchItem, bytes]]) -> int:
+        policy = self.wire_policy if self.wire_policy.codec != "none" else None
         _, rbody = self._request(
-            writer, owner, MsgType.PUT_BATCH,
-            wire.encode_put(writer, [(it.path, d) for it, d in pairs]))
+            writer, owner, MsgType.PUT_BATCH, b"",
+            parts=wire.encode_put_parts(
+                writer, [(it.path, d) for it, d in pairs], policy=policy))
         return wire.decode_ok(rbody)
 
     # ---- extra wire verb ---------------------------------------------------

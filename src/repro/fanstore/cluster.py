@@ -125,11 +125,16 @@ class FanStoreCluster:
         self.placement: Placement = placement or spec.make_placement()
         self.selector: ReplicaSelector = selector or spec.make_selector()
         self.backend = spec.backend
+        # wire tuning declared on the spec reaches every backend; explicit
+        # backend_options still win (they are the per-experiment override)
+        backend_options = dict(spec.backend_options)
+        backend_options.setdefault("stripes", spec.wire_stripes)
+        backend_options.setdefault("wire_codec", spec.wire_codec)
         self.transport = make_backend(spec.backend, self.net, self.nodes,
                                       self.accounting.clocks,
                                       wall=self.accounting.wall,
                                       num_threads=spec.io_threads,
-                                      **dict(spec.backend_options))
+                                      **backend_options)
         self.cache_policy = spec.cache_policy
         self.workers_per_node = spec.workers_per_node
         # ONE cache tier per node, shared by its co-located workers (the
@@ -726,6 +731,9 @@ class FanStoreCluster:
             for tier in self.cache_tiers.values():
                 if tier.enabled:
                     tier.invalidate(path)
+            # transports with per-path state (rdma registration tables)
+            # must likewise never serve the dead payload
+            self.transport.invalidate_path(path)
         return st
 
     def write_many_async(self, writer: int,

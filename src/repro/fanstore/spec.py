@@ -34,6 +34,7 @@ from repro.fanstore.cache import CACHE_POLICIES
 from repro.fanstore.layout import _CODECS
 from repro.fanstore.placement import (PLACEMENTS, SELECTORS, make_placement,
                                       make_selector)
+from repro.fanstore.wire import WIRE_CODECS
 
 __all__ = ["ClusterSpec", "WorkerContext", "CACHE_SCOPES",
            "suggest_names"]
@@ -101,6 +102,10 @@ class ClusterSpec:
     replication: int = 1
     io_threads: int = 8
     interconnect: Optional[Mapping[str, float]] = None
+    # wire tuning (plumbed to every backend; connection-oriented wires
+    # consult stripes, all wires validate the codec at build time)
+    wire_stripes: int = 4
+    wire_codec: str = "none"
 
     def __post_init__(self) -> None:
         if not isinstance(self.num_nodes, int) or self.num_nodes < 1:
@@ -123,6 +128,9 @@ class ClusterSpec:
         _check_choice(self.cache_scope, CACHE_SCOPES, kind="cache scope")
         _check_choice(self.placement, PLACEMENTS, kind="placement")
         _check_choice(self.selector, SELECTORS, kind="selector")
+        if not isinstance(self.wire_stripes, int) or self.wire_stripes < 1:
+            raise ValueError("wire_stripes must be an int >= 1")
+        _check_choice(self.wire_codec, WIRE_CODECS, kind="wire codec")
         object.__setattr__(self, "backend_options",
                            dict(self.backend_options or {}))
         if self.interconnect is not None:
@@ -191,7 +199,7 @@ class ClusterSpec:
     LEGACY_KWARGS = ("codec", "backend", "backend_options", "cache_policy",
                      "cache_bytes", "cache_scope", "workers_per_node",
                      "placement", "selector", "replication", "io_threads",
-                     "interconnect")
+                     "interconnect", "wire_stripes", "wire_codec")
 
     @classmethod
     def from_kwargs(cls, num_nodes: int, **kwargs) -> "ClusterSpec":

@@ -117,6 +117,17 @@ class NodeStore:
         hit = self._index.get(path)
         return hit[1] if hit else None
 
+    def locate(self, path: str) -> Optional[Tuple[int, FileRecord]]:
+        """(partition_id, record) for a local input file — the coordinates
+        a registration-based wire (RDMA) needs to pin the file's stored
+        bytes at their offset inside the partition blob."""
+        return self._index.get(path)
+
+    def partition_blob(self, partition_id: int) -> bytes:
+        """The raw partition image (registration targets map it whole:
+        one pinned segment serves every record in the partition)."""
+        return self._partitions[partition_id]
+
     # ---- reads (local tier) ------------------------------------------------
     def open_local(self, path: str) -> bytes:
         """Open+read a local file: refcount++ and return (cached) bytes.

@@ -23,7 +23,7 @@ Request bodies:
       on the wire, mirroring the modeled backend's accounting lanes.
   PUT_BATCH
       u32 writer | u32 count | count x (u16 path len + path
-                                        + u64 data len + data)
+                                        + u8 flags + u64 data len + data)
       One frame carries a whole (writer, owner) fan-in group — the wire
       twin of the modeled ``round_trips=1`` coalescing.
   STAT
@@ -31,7 +31,7 @@ Request bodies:
 
 Response bodies:
 
-  DATA      u64 serve_ns | u32 count | count x (u64 len + payload)
+  DATA      u64 serve_ns | u32 count | count x (u8 flags + u64 len + payload)
             ``serve_ns`` is the server-side handling time, so the client
             can account the owner's measured serve lane without a second
             message.
@@ -41,6 +41,24 @@ Response bodies:
             The server maps any handler exception into an error frame; the
             client re-raises the same exception class (``decode_error``),
             so remote failures surface exactly like local ones.
+
+Per-payload ``flags`` carry the on-the-wire codec bit (``FLAG_LZSS``): a
+sender MAY compress any individual payload with the in-tree LZSS codec when
+its :class:`WireCodecPolicy` cost model predicts the CPU spent compressing
+plus decompressing is cheaper than the wire time the smaller body saves;
+incompressible payloads (the attempt didn't shrink them) always ship raw
+with the flag clear. Decoders are symmetric: ``decode_data``/``decode_put``
+hand back the original bytes whatever the sender chose, so the codec is
+invisible above the wire.
+
+Striping and pipelining need no extra framing state: a striped batch is
+split into contiguous per-stripe sub-batches (:func:`split_stripes`), each
+riding its OWN connection as an ordinary ``FETCH_*`` frame, and pipelined
+frames on one connection rely on TCP's FIFO ordering plus the server's
+strict one-response-per-request discipline — responses can never
+interleave, so :func:`reassemble` only has to slot each stripe's payload
+run back into its original index range, whatever order the stripes finish
+in.
 
 ``FetchItem`` also lives here: it is the resolved request descriptor every
 backend verb takes (path + the sizes the modeled cost accounting needs),
@@ -52,14 +70,19 @@ import socket
 import struct
 from dataclasses import dataclass
 from enum import IntEnum
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
+from repro.fanstore import lzss
 from repro.fanstore.metadata import StatRecord
 
 __all__ = ["MsgType", "FetchItem", "WireError", "MAX_FRAME_BYTES",
-           "write_frame", "read_frame", "recv_exact",
+           "WIRE_CODECS", "FLAG_LZSS", "WireCodecPolicy",
+           "write_frame", "write_frame_parts", "read_frame", "recv_exact",
+           "sendmsg_all", "frame", "split_stripes", "reassemble",
            "encode_fetch", "decode_fetch", "encode_data", "decode_data",
-           "encode_put", "decode_put", "encode_ok", "decode_ok",
+           "decode_data_ex", "encode_data_parts",
+           "encode_put", "decode_put", "encode_put_parts",
+           "encode_ok", "decode_ok",
            "encode_stat", "decode_stat", "encode_stat_ok", "decode_stat_ok",
            "encode_error", "decode_error"]
 
@@ -100,6 +123,75 @@ _U64 = struct.Struct("!Q")
 # a corrupted length prefix before it turns into an allocation bomb
 MAX_FRAME_BYTES = 1 << 30
 
+#: on-the-wire payload codecs a sender may negotiate (``ClusterSpec.wire_codec``)
+WIRE_CODECS = ("none", "lzss")
+
+#: per-payload flag bit: body is an LZSS stream, decompress on receipt
+FLAG_LZSS = 0x01
+
+# sendmsg gathers at most IOV_MAX buffers per call; stay far under it
+_IOV_CHUNK = 512
+
+
+@dataclass(frozen=True)
+class WireCodecPolicy:
+    """Per-payload compress-or-not decision for the wire codec.
+
+    The sender compresses a payload only when the modeled CPU time of the
+    round trip through the codec (encode on the sender + decode on the
+    receiver) is smaller than the modeled wire time the smaller body is
+    expected to save::
+
+        n / compress_Bps + n*expected_ratio / decompress_Bps
+            <  n * (1 - expected_ratio) / wire_Bps
+
+    ``expected_ratio`` is the predicted compressed/raw size (LZSS on
+    fp32 tensors and text lands around 0.5–0.7); the prediction only
+    gates the ATTEMPT — if the actual stream fails to shrink, the payload
+    ships raw with the flag clear (the incompressible escape hatch), so a
+    wrong ratio guess costs CPU, never correctness or wire bytes. With the
+    defaults (a pure-Python LZSS against a 100 Gb/s-class loopback) the
+    model correctly predicts compression never wins; deployments behind a
+    slow fabric (or with a native codec) override the rates via
+    ``backend_options={"wire_policy": {...}}``.
+    """
+    codec: str = "none"
+    wire_Bps: float = 100e9 / 8       # fabric the savings are valued at
+    compress_Bps: float = 40e6        # in-tree LZSS encode rate (per core)
+    decompress_Bps: float = 150e6     # in-tree LZSS decode rate
+    expected_ratio: float = 0.6       # predicted compressed/raw size
+    min_bytes: int = 1 << 12          # below this, framing noise dominates
+
+    def __post_init__(self) -> None:
+        if self.codec not in WIRE_CODECS:
+            raise ValueError(f"unknown wire codec {self.codec!r}; "
+                             f"choose from {sorted(WIRE_CODECS)}")
+
+    def should_compress(self, nbytes: int) -> bool:
+        """The cost model: modeled codec CPU < modeled wire time saved."""
+        if self.codec == "none" or nbytes < self.min_bytes:
+            return False
+        cpu_s = (nbytes / self.compress_Bps
+                 + nbytes * self.expected_ratio / self.decompress_Bps)
+        saved_s = nbytes * (1.0 - self.expected_ratio) / self.wire_Bps
+        return cpu_s < saved_s
+
+    def encode(self, payload) -> Tuple[bytes, int]:
+        """(wire bytes, flags) for one payload: compressed iff the cost
+        model says try AND the stream actually shrank."""
+        if not self.should_compress(len(payload)):
+            return payload, 0
+        packed = lzss.compress(bytes(payload))
+        if len(packed) >= len(payload):   # incompressible: ship raw
+            return payload, 0
+        return packed, FLAG_LZSS
+
+
+def _codec_decode(raw: bytes, flags: int) -> bytes:
+    if flags & FLAG_LZSS:
+        return lzss.decompress(raw)
+    return raw
+
 # exceptions a server may legitimately raise while serving; anything else
 # degrades to IOError on the client (same contract as a real RPC layer)
 _EXC_TYPES = {
@@ -114,14 +206,30 @@ _EXC_TYPES = {
 
 
 # ---- framing ---------------------------------------------------------------
-def recv_exact(sock: socket.socket, n: int) -> memoryview:
+def recv_exact(sock: socket.socket, n: int,
+               buf: Optional[bytearray] = None) -> memoryview:
     """Read exactly ``n`` bytes (or raise ``ConnectionError`` on EOF),
     returned as a memoryview over the single receive buffer — a frame
     body is a whole coalesced window's payloads, so the decoders slice
     payloads straight out of this buffer with exactly one copy each
-    instead of copying the full frame first."""
-    buf = bytearray(n)
-    view = memoryview(buf)
+    instead of copying the full frame first.
+
+    ``buf`` is an optional REUSABLE receive buffer (grown geometrically,
+    never shrunk): a long-lived connection then allocates nothing per
+    frame. The returned view aliases it — decode before the next read."""
+    if buf is None:
+        buf = bytearray(n)
+    elif len(buf) < n:
+        try:
+            buf.extend(bytes(max(n - len(buf), len(buf))))
+        except BufferError:
+            # the previous frame's view is still alive somewhere (a caller
+            # loop keeps its last `body` bound across reads): a bytearray
+            # cannot resize while exported, so serve THIS read from a
+            # fresh buffer; the shared one grows on a later, unexported
+            # call. Costs one allocation, never correctness.
+            buf = bytearray(n)
+    view = memoryview(buf)[:n]
     got = 0
     while got < n:
         k = sock.recv_into(view[got:], n - got)
@@ -129,6 +237,41 @@ def recv_exact(sock: socket.socket, n: int) -> memoryview:
             raise ConnectionError("peer closed mid-frame")
         got += k
     return view
+
+
+def sendmsg_all(sock: socket.socket, parts: Sequence) -> None:
+    """Vectored ``sendall``: gather ``parts`` (bytes / memoryviews) onto the
+    wire without concatenating them — a whole DATA frame (header + every
+    per-payload prefix + the payload views themselves) goes out in a few
+    syscalls and no payload is ever copied into a joined body. Falls back
+    to plain ``sendall`` where ``sendmsg`` is unavailable."""
+    views = [memoryview(p).cast("B") for p in parts if len(p)]
+    if not views:
+        return
+    if not hasattr(sock, "sendmsg"):     # pragma: no cover - POSIX always has it
+        for v in views:
+            sock.sendall(v)
+        return
+    i = 0
+    while i < len(views):
+        sent = sock.sendmsg(views[i:i + _IOV_CHUNK])
+        while sent:                      # advance past fully-sent buffers
+            n = len(views[i])
+            if sent >= n:
+                sent -= n
+                i += 1
+            else:
+                views[i] = views[i][sent:]
+                sent = 0
+
+
+def frame(msg_type: MsgType, body: bytes) -> bytes:
+    """One small frame as contiguous bytes (header + body) — for request
+    frames, which are tiny; response payloads use :func:`write_frame_parts`
+    so they are never joined."""
+    if len(body) > MAX_FRAME_BYTES:
+        raise WireError(f"frame body {len(body)} exceeds {MAX_FRAME_BYTES}")
+    return _HEADER.pack(int(msg_type), len(body)) + body
 
 
 def write_frame(sock: socket.socket, msg_type: MsgType, body: bytes) -> None:
@@ -141,7 +284,19 @@ def write_frame(sock: socket.socket, msg_type: MsgType, body: bytes) -> None:
         sock.sendall(body)
 
 
-def read_frame(sock: socket.socket) -> Tuple[MsgType, memoryview]:
+def write_frame_parts(sock: socket.socket, msg_type: MsgType,
+                      parts: Sequence) -> None:
+    """Send one frame whose body is scattered across ``parts`` — the
+    vectored twin of :func:`write_frame` (same frame on the wire, zero
+    body concatenation)."""
+    total = sum(len(p) for p in parts)
+    if total > MAX_FRAME_BYTES:
+        raise WireError(f"frame body {total} exceeds {MAX_FRAME_BYTES}")
+    sendmsg_all(sock, [_HEADER.pack(int(msg_type), total), *parts])
+
+
+def read_frame(sock: socket.socket,
+               buf: Optional[bytearray] = None) -> Tuple[MsgType, memoryview]:
     mtype, length = _HEADER.unpack(recv_exact(sock, _HEADER.size))
     if length > MAX_FRAME_BYTES:
         raise WireError(f"frame body {length} exceeds {MAX_FRAME_BYTES}")
@@ -149,7 +304,59 @@ def read_frame(sock: socket.socket) -> Tuple[MsgType, memoryview]:
         mtype = MsgType(mtype)
     except ValueError:
         raise WireError(f"unknown frame type {mtype}")
-    return mtype, recv_exact(sock, length) if length else memoryview(b"")
+    return mtype, recv_exact(sock, length, buf) if length else memoryview(b"")
+
+
+# ---- striping helpers ------------------------------------------------------
+def split_stripes(items: Sequence, stripes: int,
+                  ) -> List[Tuple[int, int]]:
+    """Partition ``items`` into at most ``stripes`` CONTIGUOUS index ranges
+    balanced by stored bytes (greedy equal-share cuts). Contiguity is what
+    makes reassembly trivial and order-preserving: stripe ``i`` owns
+    ``items[start:end]`` and its payloads slot straight back into that
+    range whatever order the stripes complete in."""
+    n = len(items)
+    k = max(1, min(int(stripes), n))
+    if k <= 1:
+        return [(0, n)]
+    weights = [max(1, getattr(it, "stored", 1) or 1) for it in items]
+    remaining = sum(weights)
+    bounds: List[Tuple[int, int]] = []
+    start = 0
+    for s in range(k):
+        if s == k - 1:
+            bounds.append((start, n))
+            break
+        share = remaining / (k - s)
+        end = start
+        acc = 0
+        max_end = n - (k - s - 1)       # leave >= 1 item per later stripe
+        while end < max_end and (end == start or acc < share):
+            acc += weights[end]
+            end += 1
+        bounds.append((start, end))
+        remaining -= acc
+        start = end
+    return bounds
+
+
+def reassemble(count: int,
+               chunks: Sequence[Tuple[Tuple[int, int], Sequence[bytes]]]
+               ) -> List[bytes]:
+    """Slot per-stripe payload runs back into original item order. Accepts
+    the chunks in ANY completion order; raises :class:`WireError` on a
+    short/overlong stripe or a missing range (a torn stripe must never
+    silently yield misaligned payloads)."""
+    out: List[Optional[bytes]] = [None] * count
+    for (start, end), payloads in chunks:
+        if end - start != len(payloads):
+            raise WireError(
+                f"stripe [{start}:{end}) returned {len(payloads)} payloads")
+        out[start:end] = payloads
+    missing = sum(1 for p in out if p is None)
+    if missing:
+        raise WireError(f"stripe reassembly left {missing} slots unfilled")
+    return out  # type: ignore[return-value]
 
 
 # ---- body encoders ---------------------------------------------------------
@@ -185,36 +392,84 @@ def decode_fetch(body) -> Tuple[List[str], bool]:
     return paths, materialize
 
 
-def encode_data(payloads: Sequence[bytes], *, serve_ns: int = 0) -> bytes:
-    parts: List[bytes] = [_U64.pack(serve_ns), _U32.pack(len(payloads))]
+_BQ = struct.Struct("!BQ")            # per-payload (flags, wire length)
+
+
+def encode_data_parts(payloads: Sequence[bytes], *, serve_ns: int = 0,
+                      policy: Optional[WireCodecPolicy] = None
+                      ) -> List[bytes]:
+    """The DATA body as a scatter list for :func:`write_frame_parts`:
+    per-payload prefixes interleave with the payload buffers themselves
+    (zero-copy memoryviews straight off the store), so building the
+    response never joins the payloads. ``policy`` applies the per-payload
+    wire codec (see :class:`WireCodecPolicy`)."""
+    parts: List[bytes] = [_U64.pack(serve_ns) + _U32.pack(len(payloads))]
     for p in payloads:
-        parts.append(_U64.pack(len(p)))
-        parts.append(bytes(p))
-    return b"".join(parts)
+        flags = 0
+        if policy is not None:
+            p, flags = policy.encode(p)
+        parts.append(_BQ.pack(flags, len(p)))
+        parts.append(p)
+    return parts
 
 
-def decode_data(body) -> Tuple[List[bytes], int]:
+def encode_data(payloads: Sequence[bytes], *, serve_ns: int = 0,
+                policy: Optional[WireCodecPolicy] = None) -> bytes:
+    return b"".join(bytes(p) for p in encode_data_parts(
+        payloads, serve_ns=serve_ns, policy=policy))
+
+
+def decode_data_ex(body) -> Tuple[List[bytes], int, int, int]:
+    """Decode a DATA body; also returns (raw_bytes, wire_bytes) — the
+    payload sizes after and before codec decode — so the receiver can
+    ledger what the wire codec actually saved."""
     (serve_ns,) = _U64.unpack_from(body, 0)
     (count,) = _U32.unpack_from(body, _U64.size)
     off = _U64.size + _U32.size
     out = []
+    raw_bytes = wire_bytes = 0
     for _ in range(count):
-        (n,) = _U64.unpack_from(body, off)
-        off += _U64.size
+        flags, n = _BQ.unpack_from(body, off)
+        off += _BQ.size
         # the payload's ONLY copy out of the receive buffer: it must own
-        # its memory (it outlives the frame — caches, output staging)
-        out.append(bytes(body[off:off + n]))
+        # its memory (it outlives the frame — caches, output staging);
+        # flagged payloads decompress out of the buffer instead of copying
+        data = _codec_decode(bytes(body[off:off + n]), flags)
+        out.append(data)
+        wire_bytes += n
+        raw_bytes += len(data)
         off += n
+    return out, serve_ns, raw_bytes, wire_bytes
+
+
+def decode_data(body) -> Tuple[List[bytes], int]:
+    out, serve_ns, _, _ = decode_data_ex(body)
     return out, serve_ns
 
 
-def encode_put(writer: int, entries: Sequence[Tuple[str, bytes]]) -> bytes:
-    parts: List[bytes] = [_U32.pack(writer), _U32.pack(len(entries))]
+def encode_put_parts(writer: int, entries: Sequence[Tuple[str, bytes]], *,
+                     policy: Optional[WireCodecPolicy] = None) -> List[bytes]:
+    """The PUT_BATCH body as a scatter list (the write-side twin of
+    :func:`encode_data_parts`: the writer compresses, the owner's serving
+    loop decompresses)."""
+    head: List[bytes] = [_U32.pack(writer), _U32.pack(len(entries))]
+    parts: List[bytes] = [b"".join(head)]
     for path, data in entries:
-        _put_str(parts, path)
-        parts.append(_U64.pack(len(data)))
-        parts.append(bytes(data))
-    return b"".join(parts)
+        prefix: List[bytes] = []
+        _put_str(prefix, path)
+        flags = 0
+        if policy is not None:
+            data, flags = policy.encode(data)
+        prefix.append(_BQ.pack(flags, len(data)))
+        parts.append(b"".join(prefix))
+        parts.append(data)
+    return parts
+
+
+def encode_put(writer: int, entries: Sequence[Tuple[str, bytes]], *,
+               policy: Optional[WireCodecPolicy] = None) -> bytes:
+    return b"".join(bytes(p) for p in encode_put_parts(
+        writer, entries, policy=policy))
 
 
 def decode_put(body) -> Tuple[int, List[Tuple[str, bytes]]]:
@@ -224,9 +479,9 @@ def decode_put(body) -> Tuple[int, List[Tuple[str, bytes]]]:
     entries = []
     for _ in range(count):
         path, off = _get_str(body, off)
-        (n,) = _U64.unpack_from(body, off)
-        off += _U64.size
-        entries.append((path, bytes(body[off:off + n])))
+        flags, n = _BQ.unpack_from(body, off)
+        off += _BQ.size
+        entries.append((path, _codec_decode(bytes(body[off:off + n]), flags)))
         off += n
     return writer, entries
 

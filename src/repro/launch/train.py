@@ -81,10 +81,12 @@ def main() -> None:
     ap.add_argument("--io-threads", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="modeled",
-                    choices=["modeled", "socket", "shm"],
+                    choices=["modeled", "socket", "shm", "rdma"],
                     help="transport backend behind the cluster: the "
-                         "modeled interconnect, real TCP serving loops, "
-                         "or the zero-copy shared-memory fast path")
+                         "modeled interconnect, real TCP serving loops "
+                         "(striped/pipelined), the zero-copy shared-"
+                         "memory fast path, or one-sided rdma-class "
+                         "reads over registered segments")
     ap.add_argument("--prefetch-schedule", action="store_true",
                     help="clairvoyant data plane: materialize the epoch's "
                          "permutation from the sampler's peek_epoch() into "

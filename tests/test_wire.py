@@ -1,0 +1,249 @@
+"""Wire robustness: the framing/codec layer under hostile conditions.
+
+The socket backend's correctness rests on the wire module's invariants —
+frames survive torn (partial) reads, oversized frames are rejected before
+allocation, codec flags round-trip per payload, and striped transfers
+reassemble exactly once each in order. These tests exercise the layer
+directly (socketpairs, crafted frames) so a framing bug fails here with a
+protocol-level message, not as a hung cluster test.
+"""
+import hashlib
+import socket
+import threading
+
+import pytest
+
+from repro.fanstore import wire
+
+
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(5)
+    b.settimeout(5)
+    return a, b
+
+
+# ---- torn / partial reads ---------------------------------------------------
+def test_recv_exact_survives_torn_writes():
+    """A frame dribbled across many tiny sends must reassemble intact."""
+    a, b = _pair()
+    try:
+        payload = bytes(range(256)) * 64
+        blob = wire.frame(wire.MsgType.DATA,
+                          wire.encode_data([payload], serve_ns=7))
+
+        def dribble():
+            for i in range(0, len(blob), 37):        # deliberately unaligned
+                a.sendall(blob[i:i + 37])
+
+        t = threading.Thread(target=dribble)
+        t.start()
+        mtype, rbody = wire.read_frame(b)
+        t.join()
+        assert mtype == wire.MsgType.DATA
+        out, serve_ns = wire.decode_data(rbody)
+        assert bytes(out[0]) == payload and serve_ns == 7
+    finally:
+        a.close()
+        b.close()
+
+
+def test_read_frame_errors_on_truncated_stream():
+    """A peer dying mid-frame must raise, never hang or hand back short
+    bytes as a valid frame."""
+    a, b = _pair()
+    try:
+        blob = wire.frame(wire.MsgType.DATA, wire.encode_data([b"x" * 1000]))
+        a.sendall(blob[:len(blob) // 2])
+        a.close()                                    # connection torn
+        with pytest.raises(ConnectionError):
+            wire.read_frame(b)
+    finally:
+        b.close()
+
+
+def test_read_frame_reuses_buffer():
+    """The reusable receive buffer grows geometrically and yields correct
+    bytes across frames of different sizes (no stale-tail bleed)."""
+    a, b = _pair()
+    try:
+        buf = bytearray(8)
+        for payload in (b"A" * 5000, b"B" * 10, b"C" * 20000, b""):
+            a.sendall(wire.frame(wire.MsgType.DATA,
+                                 wire.encode_data([payload])))
+            _, body = wire.read_frame(b, buf)
+            out, _ = wire.decode_data(body)
+            assert bytes(out[0]) == payload
+    finally:
+        a.close()
+        b.close()
+
+
+# ---- oversized frames -------------------------------------------------------
+def test_oversized_frame_rejected_before_allocation():
+    """A crafted header advertising > MAX_FRAME_BYTES must be rejected on
+    the header alone — the body is never read (or allocated)."""
+    a, b = _pair()
+    try:
+        a.sendall(wire._HEADER.pack(int(wire.MsgType.DATA),
+                                    wire.MAX_FRAME_BYTES + 1))
+        with pytest.raises(wire.WireError, match="exceeds"):
+            wire.read_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_unknown_frame_type_rejected():
+    a, b = _pair()
+    try:
+        a.sendall(wire._HEADER.pack(99, 0))
+        with pytest.raises(wire.WireError, match="unknown frame type"):
+            wire.read_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+class _FakeSized(bytes):
+    """A bytes stand-in lying about its length so the oversize guard can
+    be probed without allocating gigabytes."""
+    def __new__(cls, fake_len):
+        self = super().__new__(cls, b"")
+        self._fake_len = fake_len
+        return self
+
+    def __len__(self):
+        return self._fake_len
+
+
+def test_send_side_refuses_oversized_body():
+    a, b = _pair()
+    try:
+        big = _FakeSized(wire.MAX_FRAME_BYTES + 1)
+        with pytest.raises(wire.WireError, match="exceeds"):
+            wire.frame(wire.MsgType.DATA, big)
+        with pytest.raises(wire.WireError, match="exceeds"):
+            wire.write_frame(a, wire.MsgType.DATA, big)
+        with pytest.raises(wire.WireError, match="exceeds"):
+            wire.write_frame_parts(a, wire.MsgType.DATA, [big])
+    finally:
+        a.close()
+        b.close()
+
+
+# ---- codec flags ------------------------------------------------------------
+_EAGER = dict(codec="lzss", wire_Bps=1e3, compress_Bps=1e12,
+              decompress_Bps=1e12, min_bytes=1)
+
+
+def test_codec_flags_roundtrip_compressible():
+    policy = wire.WireCodecPolicy(**_EAGER)
+    payloads = [b"Z" * 4096]                       # highly compressible
+    body = wire.encode_data(payloads, policy=policy)
+    out, _, raw_b, wire_b = wire.decode_data_ex(body)
+    assert bytes(out[0]) == payloads[0]
+    assert wire_b < raw_b                          # it shrank on the wire
+
+
+def test_codec_flags_roundtrip_incompressible():
+    """Incompressible bytes ship raw (flag 0) even when the cost model
+    says compress — an attempt that doesn't shrink is discarded."""
+    policy = wire.WireCodecPolicy(**_EAGER)
+    payload = b"".join(hashlib.sha256(bytes([i])).digest()
+                       for i in range(256))       # 8 KiB, match-free
+    body = wire.encode_data([payload], policy=policy)
+    out, _, raw_b, wire_b = wire.decode_data_ex(body)
+    assert bytes(out[0]) == payload
+    assert wire_b == raw_b                         # no shrink: shipped raw
+
+
+def test_codec_flags_roundtrip_empty_and_mixed():
+    policy = wire.WireCodecPolicy(**_EAGER)
+    rand = bytes((i * 7919) % 256 for i in range(4000))
+    payloads = [b"", b"Y" * 5000, rand, b"x"]
+    body = wire.encode_data(payloads, serve_ns=99, policy=policy)
+    out, serve_ns = wire.decode_data(body)
+    assert [bytes(p) for p in out] == payloads and serve_ns == 99
+    # PUT entries carry the same per-entry flags
+    writer, entries = wire.decode_put(wire.encode_put(
+        3, [("out/a.bin", b"Q" * 6000), ("out/b.bin", rand)],
+        policy=policy))
+    assert writer == 3
+    assert [(p, bytes(d)) for p, d in entries] == [
+        ("out/a.bin", b"Q" * 6000), ("out/b.bin", rand)]
+
+
+def test_codec_policy_rejects_unknown():
+    with pytest.raises(ValueError, match="wire codec"):
+        wire.WireCodecPolicy(codec="zstd")
+
+
+def test_codec_cost_model_direction():
+    """The cost model's sign is what matters: a fast wire never engages
+    (pure-Python LZSS loses to loopback); a slow wire engages above
+    min_bytes; tiny payloads never engage; codec "none" never engages."""
+    fast = wire.WireCodecPolicy(codec="lzss")      # honest defaults
+    assert not fast.should_compress(1 << 20)
+    slow = wire.WireCodecPolicy(codec="lzss", wire_Bps=1e6,
+                                compress_Bps=1e9, decompress_Bps=1e9,
+                                min_bytes=1024)
+    assert slow.should_compress(1 << 20)
+    assert not slow.should_compress(512)           # below min_bytes
+    assert not wire.WireCodecPolicy().should_compress(1 << 30)
+
+
+# ---- striping ---------------------------------------------------------------
+def _items(sizes):
+    return [wire.FetchItem(path=f"f{i}", size=s, stored=s)
+            for i, s in enumerate(sizes)]
+
+
+def test_split_stripes_covers_in_order():
+    items = _items([10, 200, 30, 4000, 50, 600, 7, 80])
+    bounds = wire.split_stripes(items, 3)
+    # contiguous, ordered, complete cover, no empty stripes
+    assert bounds[0][0] == 0 and bounds[-1][1] == len(items)
+    for (_s0, end), (start, _e1) in zip(bounds, bounds[1:]):
+        assert end == start
+    assert all(start < end for start, end in bounds)
+
+
+def test_split_stripes_degenerate_cases():
+    items = _items([100])
+    assert wire.split_stripes(items, 8) == [(0, 1)]   # never empty stripes
+    assert wire.split_stripes(items, 1) == [(0, 1)]
+    many = _items([100] * 10)
+    bounds = wire.split_stripes(many, 4)
+    assert bounds[0][0] == 0 and bounds[-1][1] == 10
+    assert len(bounds) <= 4
+
+
+def test_split_stripes_balances_bytes():
+    """One huge item must not drag its stripe into swallowing the rest:
+    every stripe carries work."""
+    items = _items([1 << 20] + [100] * 9)
+    bounds = wire.split_stripes(items, 2)
+    assert len(bounds) == 2
+    assert bounds[0] == (0, 1)                     # the elephant alone
+    assert bounds[1] == (1, 10)
+
+
+def test_reassemble_out_of_order_stripes():
+    """Stripe legs complete in arbitrary order; reassembly restores item
+    order exactly."""
+    payloads = [bytes([i]) * (10 + i) for i in range(7)]
+    bounds = wire.split_stripes(_items([len(p) for p in payloads]), 3)
+    chunks = [((start, end), payloads[start:end])
+              for start, end in reversed(bounds)]   # completion order != index
+    out = wire.reassemble(len(payloads), chunks)
+    assert [bytes(p) for p in out] == payloads
+
+
+def test_reassemble_rejects_missing_or_short():
+    payloads = [b"a", b"bb", b"ccc", b"dddd"]
+    with pytest.raises(wire.WireError, match="unfilled"):
+        wire.reassemble(4, [((0, 2), payloads[:2])])        # hole at 2..4
+    with pytest.raises(wire.WireError, match="payloads"):
+        wire.reassemble(4, [((0, 3), payloads[:2]),         # short stripe
+                            ((3, 4), payloads[3:])])
