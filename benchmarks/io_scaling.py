@@ -52,13 +52,14 @@ import argparse
 import os
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.data.synthetic import fixed_size_files
 from repro.fanstore.api import CheckpointWriter, FanStoreSession
 from repro.fanstore.cluster import FanStoreCluster, InterconnectModel
+from repro.fanstore.faults import NodeLostError
 from repro.fanstore.prefetch import (EpochSchedule, PrefetchScheduler,
                                      SchedulerGroup)
 from repro.fanstore.prepare import prepare_dataset
@@ -962,6 +963,132 @@ def cache_policy_comparison(*, num_files: int = 64, file_size: int = 4096,
     return out
 
 
+def _drive_failover_epoch(cluster: FanStoreCluster,
+                          traces: Dict[int, List[List[str]]], *,
+                          victim: Optional[int] = None,
+                          kill_step: Optional[int] = None
+                          ) -> Tuple[int, List[int], Optional[str]]:
+    """Drive one epoch step-by-step through the fault clock. A node in
+    the failure set (or the designated victim once the kill step passes —
+    a dead node stops issuing reads, it does not only stop serving) skips
+    its batches. Returns (reads_failed, lost partition ids, error name);
+    at R>=2 failover keeps reads_failed at zero, at R=1 the classified
+    ``NodeLostError`` is caught and tallied here."""
+    steps = max((len(s) for s in traces.values()), default=0)
+    reads_failed = 0
+    lost: List[int] = []
+    error: Optional[str] = None
+    for step in range(steps):
+        cluster.tick_step(step)
+        for nid, node_steps in sorted(traces.items()):
+            if nid in cluster.failed or step >= len(node_steps):
+                continue
+            if (victim is not None and kill_step is not None
+                    and nid == victim and step >= kill_step):
+                continue
+            try:
+                cluster.read_many(nid, node_steps[step], materialize=False)
+            except NodeLostError as e:
+                reads_failed += len(node_steps[step])
+                lost.extend(e.partitions)
+                error = type(e).__name__
+    return reads_failed, sorted(set(lost)), error
+
+
+def failover_comparison(*, nodes: int = 8, smoke: bool = False,
+                        kill_node: Optional[int] = None,
+                        seed: int = 7) -> Dict:
+    """Kill-a-node arm: the same trace driven over a healthy R=2 cluster
+    and one whose FaultPolicy kills a node mid-epoch. The degraded run
+    must finish every read via replica failover (zero client-visible
+    errors), its retry ledger must equal the injector's raise count
+    exactly, and its makespan stays within a small factor of healthy.
+    The R=1 control shows the failure mode replication buys out of: the
+    same kill surfaces as a classified ``NodeLostError`` naming the lost
+    partitions — never a hang, never silent corruption."""
+    file_size = 32 * 1024 if smoke else 256 * 1024
+    reads_per_node = 96 if smoke else 128
+    count = max(128, 2 * nodes)
+    payload = bytes(np.random.default_rng(1).integers(
+        0, 256, file_size, dtype=np.uint8))
+    files = {f"bench/f_{i:06d}.bin": payload for i in range(count)}
+    # enough partitions that every ring seat owns several — killing a
+    # node must actually take data offline, not an empty seat
+    blobs, _ = prepare_dataset(files, max(4 * nodes, 16), compress=False)
+    paths = sorted(files)
+    m = min(reads_per_node, count)
+    steps = max(1, m // BATCH)
+    kill_step = steps // 2
+    if kill_node is None:
+        # kill the most-loaded primary (ring placement is deterministic,
+        # so this probe predicts every run below): the worst case, and a
+        # guarantee the kill hits live traffic
+        probe = FanStoreCluster.from_spec(ClusterSpec(
+            num_nodes=nodes, replication=1, placement="ring"))
+        probe.load_partitions(blobs, by_placement=True)
+        victim = max(range(nodes),
+                     key=lambda n: len(probe.nodes[n].partition_ids))
+        probe.close()
+    else:
+        victim = kill_node
+
+    rng = np.random.default_rng(nodes)
+    traces: Dict[int, List[List[str]]] = {}
+    for nid in range(nodes):
+        chosen = [paths[int(i)]
+                  for i in rng.choice(count, size=m, replace=False)]
+        traces[nid] = [chosen[s:s + BATCH] for s in range(0, m, BATCH)]
+
+    def run(replication: int, faults: Optional[Dict]) -> Dict:
+        spec = ClusterSpec(num_nodes=nodes, replication=replication,
+                           placement="ring", faults=faults)
+        cluster = FanStoreCluster.from_spec(spec, interconnect=CPU_NET)
+        cluster.load_partitions(blobs, by_placement=True)
+        failed, lost, err = _drive_failover_epoch(
+            cluster, traces,
+            victim=victim if faults else None,
+            kill_step=kill_step if faults else None)
+        makespan = cluster.makespan_s()
+        stats = cluster.fault_stats()
+        healed = 0
+        if faults and replication >= 2:
+            # repair AFTER the epoch's makespan is captured: heal() ships
+            # copies on the write lane, which is a separate story
+            healed = cluster.heal()
+        cluster.close()
+        return {"makespan_s": makespan, "reads_failed": failed,
+                "lost_partitions": lost, "error": err,
+                "injected": stats["injected"], "retries": stats["retries"],
+                "failed_nodes": stats["failed_nodes"],
+                "healed_copies": healed}
+
+    kill = {"kill_node": victim, "kill_at_step": kill_step, "seed": seed}
+    healthy = run(2, None)
+    degraded = run(2, kill)
+    r1 = run(1, kill)
+    return {"nodes": nodes, "steps": steps, "kill_node": victim,
+            "kill_at_step": kill_step, "reads_per_node": m,
+            "healthy": healthy, "degraded": degraded, "r1": r1,
+            "degraded_ratio": (degraded["makespan_s"]
+                               / healthy["makespan_s"])}
+
+
+def format_failover_rows(fo: Dict) -> List[str]:
+    d, r1 = fo["degraded"], fo["r1"]
+    return [
+        f"failover nodes={fo['nodes']} kill_node={fo['kill_node']} "
+        f"kill_at_step={fo['kill_at_step']}/{fo['steps']}",
+        f"  healthy  R=2 makespan={fo['healthy']['makespan_s'] * 1e3:.3f}ms",
+        f"  degraded R=2 makespan={d['makespan_s'] * 1e3:.3f}ms "
+        f"ratio={fo['degraded_ratio']:.2f}x reads_failed={d['reads_failed']} "
+        f"injected={d['injected']} retries={d['retries']} "
+        f"healed_copies={d['healed_copies']}",
+        f"  control  R=1 error={r1['error']} "
+        f"reads_failed={r1['reads_failed']} "
+        f"lost_partitions={r1['lost_partitions']}",
+    ]
+
+
 def bench_json(*, nodes_list=(8, 64), smoke: bool = False) -> Dict:
     """Machine-readable perf snapshot: seed (per-file) / batched /
     prefetched arms at each node count, plus the cache-policy comparison.
@@ -1050,15 +1177,22 @@ def bench_json(*, nodes_list=(8, 64), smoke: bool = False) -> Dict:
     # window — where the scheduler's win is structural, not a ~1% smoke
     # artifact (this is the guarded prefetch ratio)
     results["prefetch_depth"] = prefetch_depth_comparison(smoke=smoke)
+    # the robustness block: kill a node mid-epoch at R=2 (every read must
+    # finish via replica failover, retry ledger == injected faults,
+    # bounded makespan inflation) with the R=1 classified-loss control
+    results["failover"] = failover_comparison(smoke=smoke)
     return results
 
 
 def main(*, batched: bool = False, prefetch: bool = False, window: int = 4,
          cache_mb: int = 0, epochs: Optional[int] = None,
          arms: Optional[List[str]] = None, write: bool = False,
-         backend: str = "modeled", workers: int = 0) -> List[str]:
+         backend: str = "modeled", workers: int = 0,
+         kill_node: bool = False) -> List[str]:
     if epochs is None:
         epochs = 2 if cache_mb else 1
+    if kill_node:
+        return format_failover_rows(failover_comparison())
     if workers:
         # shared node tier vs private per-worker caches, modeled, at a
         # few node counts (same total bytes either way)
@@ -1119,11 +1253,15 @@ if __name__ == "__main__":
                     help="K co-located workers per node: shared node "
                          "cache tier vs private per-worker caches at the "
                          "same total byte budget (hit rate + makespan)")
+    ap.add_argument("--kill-node", action="store_true",
+                    help="fault-tolerance arm: kill one node mid-epoch at "
+                         "R=2 (reads must all finish via replica failover) "
+                         "vs the R=1 control (classified NodeLostError)")
     args = ap.parse_args()
     for line in main(batched=args.batched, prefetch=args.prefetch,
                      window=args.window, cache_mb=args.cache_mb,
                      epochs=args.epochs,
                      arms=[args.arm] if args.arm else None,
                      write=args.write, backend=args.backend,
-                     workers=args.workers):
+                     workers=args.workers, kill_node=args.kill_node):
         print(line)

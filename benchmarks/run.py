@@ -20,9 +20,12 @@ bytes), the ``measured`` block (read+write, scheduled-prefetch, and
 checkpoint-overlap traces over the real socket/shm wires), the
 ``measured.wire`` block (single-connection vs striped/pipelined socket vs
 the one-sided rdma backend on a pure-remote trace, with a pinned
-throughput floor and wire-codec engagement truth), and the
+throughput floor and wire-codec engagement truth), the
 ``prefetch_depth`` block (the slow latency-bound fabric where the
-scheduled-prefetch ratio is guarded). ``--smoke`` shrinks it to the
+scheduled-prefetch ratio is guarded), and the ``failover`` block (kill a
+node mid-epoch at R=2: zero failed reads via replica failover, retry
+ledger == injected faults, bounded degraded makespan, plus the R=1
+classified-NodeLostError control). ``--smoke`` shrinks it to the
 fast-lane CI variant (scripts/ci.sh fast).
 """
 from __future__ import annotations
@@ -167,6 +170,32 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
         f"(speedup {pd['prefetch_speedup']:.3f})")
     assert pd["prefetch_windows"] > 0, (
         "prefetch_depth arm scheduled no windows")
+    # failover guards: killing a node mid-epoch at R=2 must be invisible
+    # to readers (zero failed reads), fully accounted (retry ledger ==
+    # injected-fault count, exactly), and cheap (bounded makespan
+    # inflation over the healthy run); the R=1 control must fail FAST and
+    # CLASSIFIED — a NodeLostError naming the lost partitions, not a hang
+    fo = result["failover"]
+    fd = fo["degraded"]
+    assert fd["reads_failed"] == 0, (
+        f"R=2 degraded run lost {fd['reads_failed']} reads — replica "
+        f"failover did not cover the killed node")
+    assert fd["injected"] > 0, (
+        "failover arm injected no faults — the kill never fired")
+    assert fd["retries"] == fd["injected"], (
+        f"retry ledger ({fd['retries']}) != injected faults "
+        f"({fd['injected']}) — failover accounting is off")
+    assert fo["kill_node"] in fd["failed_nodes"], (
+        "killed node was never detected as failed")
+    assert fd["healed_copies"] > 0, (
+        "heal() restored no replicas after the kill")
+    assert fo["degraded_ratio"] <= 1.6, (
+        f"degraded makespan blew past the 1.6x bound "
+        f"({fo['degraded_ratio']:.2f}x of healthy)")
+    r1 = fo["r1"]
+    assert r1["error"] == "NodeLostError" and r1["lost_partitions"], (
+        f"R=1 control did not surface a classified loss "
+        f"(error={r1['error']}, lost={r1['lost_partitions']})")
     for entry in result["arms"]:
         w = entry["write"]
         print(f"io_json,nodes={entry['nodes']},"
@@ -202,6 +231,12 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
           f"batched={pd['batched_makespan_s']:.4f}s,"
           f"prefetched={pd['prefetched_makespan_s']:.4f}s,"
           f"deep_prefetch_speedup={pd['prefetch_speedup']:.3f}", flush=True)
+    print(f"io_json,failover_kill_node={fo['kill_node']},"
+          f"degraded_ratio={fo['degraded_ratio']:.3f},"
+          f"reads_failed={fd['reads_failed']},"
+          f"injected={fd['injected']},retries={fd['retries']},"
+          f"healed_copies={fd['healed_copies']},"
+          f"r1_lost={len(r1['lost_partitions'])}", flush=True)
     print(f"io_json,wrote={path}", flush=True)
 
 

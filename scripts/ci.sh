@@ -25,11 +25,16 @@ case "$lane" in
     # node cache tier (shared beats private at equal total bytes,
     # attribution sums == tier totals), per-(node, worker) schedules, and
     # the cross-process ShmArena spawn-attach round trip.
+    # ... plus the fault-tolerance suite: deterministic fault injection,
+    # replica failover (zero client-visible errors at R=2, retry ledger
+    # == injected faults), R=1 classified NodeLostError, membership churn
+    # (mark_failed/mark_joined/heal), and socket dial-retry/teardown.
     python -m pytest -x -q tests/test_wire.py tests/test_backends.py \
-        tests/test_topology.py
+        tests/test_topology.py tests/test_faults.py
     python -m pytest -x -q -m "not slow" --ignore=tests/test_wire.py \
         --ignore=tests/test_backends.py \
-        --ignore=tests/test_topology.py
+        --ignore=tests/test_topology.py \
+        --ignore=tests/test_faults.py
     # perf trajectory smoke: seed/batched/prefetched arms + cache policies
     # + the multi-tenant `workers` block (shared node tier strictly beats
     # private per-worker caches; attribution ledgers tie out) + the
@@ -40,9 +45,12 @@ case "$lane" in
     # striped/pipelined socket vs one-sided rdma on a pure-remote trace:
     # pinned throughput floor, stripe attribution, cost-model-gated codec
     # engagement, zero rdma serve time) + the guarded `prefetch_depth`
-    # ratio on the slow latency-bound fabric. Writes BENCH_io.json
-    # (uploaded as the bench-io artifact, `workers`, `measured.wire`, and
-    # `prefetch_depth` blocks included).
+    # ratio on the slow latency-bound fabric + the guarded `failover`
+    # block (mid-epoch node kill at R=2: zero failed reads, retry ledger
+    # == injected faults, bounded degraded makespan; R=1 control loses
+    # partitions with a classified error). Writes BENCH_io.json (uploaded
+    # as the bench-io artifact, `workers`, `measured.wire`,
+    # `prefetch_depth`, and `failover` blocks included).
     python benchmarks/run.py --only io-json --io-json BENCH_io.json --smoke
     ;;
   full)

@@ -64,6 +64,14 @@ class NodeClock:
     write_s: float = 0.0
     write_bytes: int = 0
     write_rpcs: int = 0
+    # retry ledger: failover read attempts this node paid for after a
+    # replica failed (injected or real). retry_s is the modeled backoff
+    # time, ALSO accrued onto consume_s (a demand retry blocks the
+    # consumer), so it is a visible subset of the consume lane rather
+    # than a fifth concurrent lane — degraded-mode cost stays inside the
+    # same makespan the healthy run is measured by.
+    retries: int = 0
+    retry_s: float = 0.0
     # client-side read cache (repro.fanstore.cache), surfaced here so one
     # object answers "what did this node's I/O look like"
     cache_hits: int = 0
@@ -138,6 +146,10 @@ class WallClock:
     # model kept every payload raw.
     wire_raw_bytes: int = 0
     wire_sent_bytes: int = 0
+    # measured mirror of NodeClock's retry ledger: real backoff
+    # nanoseconds slept by the failover read path on this node
+    retries: int = 0
+    retry_ns: int = 0
 
     def attribute_stripe(self, stripe_id: int, dt_ns: int,
                          nbytes: int) -> None:
@@ -245,6 +257,14 @@ class ClusterAccounting:
 
     def write_rpcs(self) -> int:
         return sum(c.write_rpcs for c in self.clocks.values())
+
+    def retries(self) -> int:
+        """Cluster-wide failover retry count (modeled ledger)."""
+        return sum(c.retries for c in self.clocks.values())
+
+    def retry_s(self) -> float:
+        """Cluster-wide modeled backoff time paid by failover retries."""
+        return sum(c.retry_s for c in self.clocks.values())
 
     def local_hit_rate(self) -> float:
         # client-cache hits are served from node-local RAM: they count as

@@ -427,6 +427,13 @@ class FanStoreSession:
             "wire_saved_bytes": w.wire_raw_bytes - w.wire_sent_bytes,
         }
 
+    def fault_stats(self) -> Dict[str, object]:
+        """The cluster's fault ledger: injector counters (injected/
+        dropped/errored/delayed, whether the kill trigger fired), the
+        accounting retry total, and the current failed-node set. All
+        counters are zero with no ``faults`` policy in the spec."""
+        return self.cluster.fault_stats()
+
     # ---- lifecycle ---------------------------------------------------------
     def close_all(self) -> None:
         """Abort open writes (uncommitted data is discarded — visible-until-

@@ -86,6 +86,28 @@ class TransportBackend:
         self._num_threads = num_threads
         self._started = False
         self._closed = False
+        # fault-injection seam: a FaultInjector installed by the cluster;
+        # every movement consults it BEFORE bytes move, so an injected
+        # fault is indistinguishable from a real dead peer downstream
+        self._faults = None
+
+    def set_faults(self, injector) -> None:
+        """Install a :class:`repro.fanstore.faults.FaultInjector` (or None
+        to disable). All verbs consult it before moving bytes."""
+        self._faults = injector
+
+    def _maybe_inject(self, requester: int, owner: int, verb: str) -> None:
+        """Ask the injector about one operation; raises the injected
+        exception, and books any injected straggler delay as retry-free
+        latency on the requester's modeled consume lane."""
+        if self._faults is None:
+            return
+        delay = self._faults.check(requester, owner, verb)
+        if delay > 0.0:
+            if self.measured:
+                time.sleep(delay)
+            with self._lock:
+                self.clocks[requester].consume_s += delay
 
     # ---- lifecycle ---------------------------------------------------------
     def start(self) -> "TransportBackend":
@@ -153,6 +175,42 @@ class TransportBackend:
         for the name (the RDMA backend's registration table caches
         path -> segment mappings that must never serve a deleted payload).
         No-op for wires that hold no per-path state."""
+
+    def drop_node(self, node_id: int) -> None:
+        """Membership hook: ``node_id`` is dead — tear down any per-peer
+        transport state (the socket backend closes the dead peer's serving
+        loop and every stripe dialed to/from it; rdma drops its registered
+        segments). No-op for wires that hold no per-peer state. Must be
+        safe to call for a node that was never started, and must make
+        future fetches against the node fail fast with a ConnectionError
+        rather than hang."""
+
+    def ensure_node(self, node_id: int) -> None:
+        """Membership hook: ``node_id`` (re)joined — bring up any per-peer
+        transport state a started wire needs to serve it (the socket
+        backend spawns its serving loop). No-op before ``start()`` and for
+        wires without per-peer state."""
+
+    def account_retry(self, requester: int, delay_s: float, *,
+                      count: int = 1) -> None:
+        """Book ``count`` failover retries and their backoff on the
+        requester's retry ledger. Modeled wires only accrue; measured
+        wires really sleep the backoff first (the retried fetch is
+        wall-timed like any other movement)."""
+        slept_ns = 0
+        if self.measured and delay_s > 0.0:
+            t0 = time.perf_counter_ns()
+            time.sleep(delay_s)
+            slept_ns = time.perf_counter_ns() - t0
+        with self._lock:
+            clock = self.clocks[requester]
+            clock.retries += count
+            clock.retry_s += delay_s
+            clock.consume_s += delay_s   # a demand retry blocks the consumer
+            if self.measured:
+                w = self.wall[requester]
+                w.retries += count
+                w.retry_ns += slept_ns
 
     # ---- movement primitives (the only parts a wire must provide) ----------
     def _move_fetch(self, requester: int, owner: int,
@@ -267,6 +325,7 @@ class TransportBackend:
                      items: Sequence[FetchItem], materialize: bool,
                      verb: str, lane: str) -> List[bytes]:
         """Run the movement primitive, wall-timing it on measured wires."""
+        self._maybe_inject(requester, owner, verb)
         if not self.measured:
             out, _ = self._move_fetch(requester, owner, items, materialize,
                                       verb)
@@ -381,6 +440,7 @@ class TransportBackend:
         publish rides the same message (no separate forward)."""
         if not pairs:
             return
+        self._maybe_inject(writer, owner, "put")
         if self.measured:
             t0 = time.perf_counter_ns()
             serve_ns = self._move_put(writer, owner, pairs)

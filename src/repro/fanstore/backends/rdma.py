@@ -191,6 +191,25 @@ class RdmaBackend(TransportBackend):
                         and self._arena is not None):
                     self._arena.drop(region.segment)
 
+    def drop_node(self, node_id: int) -> None:
+        """Membership: tear down a dead owner's registration table and
+        release its pinned partition segments. Requesters that still hold
+        a pre-drop region keep a valid mapping until the arena closes —
+        exactly the fabric's behaviour, where deregistration invalidates
+        NEW lookups, not in-flight reads."""
+        with self._reg_lock:
+            tab = self._tables.pop(node_id, None)
+            segs = [name for (own, _pid), (name, _sz)
+                    in list(self._part_segs.items()) if own == node_id]
+            for key in [k for k in self._part_segs if k[0] == node_id]:
+                del self._part_segs[key]
+            if tab is not None and self._arena is not None:
+                segs.extend(r.segment for r in tab.values()
+                            if r.own_segment and r.segment is not None)
+            if self._arena is not None:
+                for name in segs:
+                    self._arena.drop(name)
+
     # ---- the one-sided verbs -----------------------------------------------
     def read_region(self, region: _Region, token: int) -> bytes:
         """One-sided read: copy the registered bytes out of the segment.

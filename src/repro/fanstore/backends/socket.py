@@ -97,12 +97,13 @@ class _NodeServer:
 
     def __init__(self, node_id: int, store: NodeStore, host: str,
                  policy: Optional[wire.WireCodecPolicy] = None,
-                 buf_bytes: int = _SOCK_BUF):
+                 buf_bytes: int = _SOCK_BUF, join_timeout_s: float = 5.0):
         self.node_id = node_id
         self.store = store
         self.policy = policy if policy is not None and policy.codec != "none" \
             else None
         self.buf_bytes = buf_bytes
+        self.join_timeout_s = join_timeout_s
         self._listener = socket.create_server((host, 0))
         self.address: Tuple[str, int] = self._listener.getsockname()
         self._stop = threading.Event()
@@ -220,9 +221,19 @@ class _NodeServer:
             except OSError:
                 pass
             c.close()                  # unblocks recv()
-        self._accept_thread.join(timeout=5.0)
+        self._accept_thread.join(timeout=self.join_timeout_s)
         for t in threads:
-            t.join(timeout=5.0)
+            t.join(timeout=self.join_timeout_s)
+        # a join that timed out used to succeed SILENTLY, leaking the
+        # thread past this close and into the conftest leak fixture (or a
+        # CI hang) with no pointer back here — name the stuck threads now
+        stuck = [t.name for t in [self._accept_thread, *threads]
+                 if t.is_alive()]
+        if stuck:
+            raise RuntimeError(
+                f"fanstore socket teardown: node {self.node_id} serving "
+                f"threads failed to join within {self.join_timeout_s}s: "
+                f"{stuck}")
 
 
 class _Conn:
@@ -245,12 +256,17 @@ class SocketBackend(TransportBackend):
 
     def __init__(self, net, nodes, clocks, *, wall=None, num_threads: int = 8,
                  host: str = "127.0.0.1", sock_buf_bytes: int = _SOCK_BUF,
-                 stripe_min_bytes: int = _STRIPE_MIN_BYTES, **wire_opts):
+                 stripe_min_bytes: int = _STRIPE_MIN_BYTES,
+                 dial_retries: int = 3, dial_backoff_s: float = 0.05,
+                 join_timeout_s: float = 5.0, **wire_opts):
         super().__init__(net, nodes, clocks, wall=wall,
                          num_threads=num_threads, **wire_opts)
         self.host = host
         self.sock_buf_bytes = int(sock_buf_bytes)
         self.stripe_min_bytes = int(stripe_min_bytes)
+        self.dial_retries = int(dial_retries)
+        self.dial_backoff_s = float(dial_backoff_s)
+        self.join_timeout_s = float(join_timeout_s)
         self._servers: Dict[int, _NodeServer] = {}
         # one persistent connection per (requester, owner, stripe) — the
         # single-connection wire of PR 4 is exactly the stripes=1 case
@@ -264,7 +280,8 @@ class SocketBackend(TransportBackend):
             if nid not in self._servers:
                 self._servers[nid] = _NodeServer(
                     nid, store, self.host, policy=self.wire_policy,
-                    buf_bytes=self.sock_buf_bytes)
+                    buf_bytes=self.sock_buf_bytes,
+                    join_timeout_s=self.join_timeout_s)
         if self.stripes > 1 and self._stripe_pool is None:
             # fan-out workers for concurrent stripe legs; sized past the
             # stripe count so two overlapping striped batches (demand +
@@ -286,14 +303,50 @@ class SocketBackend(TransportBackend):
         pool, self._stripe_pool = self._stripe_pool, None
         if pool is not None:
             pool.shutdown(wait=True)   # joins every fanstore-stripe worker
+        # close EVERY server even if one reports stuck threads, then
+        # surface the first failure (a partial teardown would strand the
+        # remaining serving loops with no further close coming)
+        stuck: List[BaseException] = []
         for srv in self._servers.values():
-            srv.close()
+            try:
+                srv.close()
+            except RuntimeError as exc:
+                stuck.append(exc)
         self._servers.clear()
+        if stuck:
+            raise stuck[0]
 
     def server_address(self, node_id: int) -> Tuple[str, int]:
         """The (host, port) a node's serving loop listens on."""
         self.start()
         return self._servers[node_id].address
+
+    def _connect(self, owner: int) -> socket.socket:
+        """Dial one connection to ``owner``'s serving loop, retrying a
+        refused/reset dial with exponential backoff (``dial_retries``
+        attempts) — a serving loop still binding during a startup race
+        used to fail the first fetch permanently. A dropped or unknown
+        owner raises ``ConnectionError`` (the classified failure the
+        failover read path retries on another replica), never ``KeyError``.
+        Call with the dial lock held."""
+        srv = self._servers.get(owner)
+        if srv is None:
+            raise ConnectionError(
+                f"node {owner} has no serving loop (dead or never joined)")
+        last: Optional[OSError] = None
+        for attempt in range(self.dial_retries + 1):
+            if attempt:
+                time.sleep(self.dial_backoff_s * (2 ** (attempt - 1)))
+            try:
+                sock = socket.create_connection(srv.address)
+                _tune(sock, self.sock_buf_bytes)
+                return sock
+            except (ConnectionRefusedError, ConnectionResetError,
+                    ConnectionAbortedError) as exc:
+                last = exc
+        raise ConnectionError(
+            f"dial to node {owner} at {srv.address} failed after "
+            f"{self.dial_retries + 1} attempts") from last
 
     def _conn(self, requester: int, owner: int, stripe: int = 0) -> _Conn:
         key = (requester, owner, stripe)
@@ -307,12 +360,40 @@ class SocketBackend(TransportBackend):
         with self._dial_lock:
             hit = self._conns.get(key)
             if hit is None:
-                sock = socket.create_connection(
-                    self._servers[owner].address)
-                _tune(sock, self.sock_buf_bytes)
-                hit = _Conn(sock)
+                hit = _Conn(self._connect(owner))
                 self._conns[key] = hit
         return hit
+
+    # ---- membership --------------------------------------------------------
+    def drop_node(self, node_id: int) -> None:
+        """A peer died: close every stripe dialed to OR from it and tear
+        down its serving loop, so stale connections fail fast with a
+        ``ConnectionError`` (classified, retried on a replica) instead of
+        hanging on a half-open socket."""
+        with self._dial_lock:
+            doomed = [k for k in self._conns
+                      if node_id in (k[0], k[1])]
+            conns = [self._conns.pop(k) for k in doomed]
+            srv = self._servers.pop(node_id, None)
+        for c in conns:
+            try:
+                c.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            c.sock.close()
+        if srv is not None:
+            srv.close()
+
+    def ensure_node(self, node_id: int) -> None:
+        """A peer (re)joined: spawn its serving loop if the wire is up
+        (lazy start covers the not-yet-started case)."""
+        with self._lifecycle:
+            started = self._started
+        if started and node_id not in self._servers:
+            self._servers[node_id] = _NodeServer(
+                node_id, self.nodes[node_id], self.host,
+                policy=self.wire_policy, buf_bytes=self.sock_buf_bytes,
+                join_timeout_s=self.join_timeout_s)
 
     # ---- one round trip ----------------------------------------------------
     def _request(self, requester: int, owner: int, mtype: MsgType,

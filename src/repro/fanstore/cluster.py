@@ -148,6 +148,19 @@ class FanStoreCluster:
         self.failed: set = set()
         self._lock = threading.Lock()
         self._next_partition = 0
+        # fault tolerance: the injector (None unless spec.faults is set)
+        # rides the transport seam; strikes count consecutive transport
+        # failures per owner, and at spec.fault_threshold the owner is
+        # marked failed cluster-wide (routing, prefetch, and the socket
+        # backend's connections all drop it)
+        self.faults = None
+        policy = spec.make_fault_policy()
+        if policy is not None:
+            from repro.fanstore.faults import FaultInjector
+            self.faults = FaultInjector(policy)
+        self.transport.set_faults(self.faults)
+        self.fault_threshold = spec.fault_threshold
+        self._owner_strikes: Dict[int, int] = {}
 
     @classmethod
     def from_spec(cls, spec: ClusterSpec, *,
@@ -277,11 +290,110 @@ class FanStoreCluster:
         return copied
 
     # ---- failure / elasticity ----------------------------------------------
-    def fail_node(self, node_id: int) -> None:
+    def mark_failed(self, node_id: int) -> None:
+        """Take ``node_id`` out of the membership: routing skips it
+        (``_choose_owner`` / prefetch schedules), and the transport drops
+        its per-peer state (the socket backend closes the dead peer's
+        serving loop and every stripe dialed to or from it) so stale
+        connections fail fast instead of hanging. Idempotent. Reached
+        organically by the strike counter on the failover read path, or
+        called directly by a membership service / test / benchmark."""
+        first = node_id not in self.failed
         self.failed.add(node_id)
+        if first:
+            self.transport.drop_node(node_id)
+
+    def mark_joined(self, node_id: int) -> None:
+        """Admit ``node_id`` to the membership — a recovered node or a
+        brand-new id (elastic scale-out). New ids get an empty
+        ``NodeStore``, clocks, a cache tier, and (under ``RingPlacement``)
+        a seat on the ring; recovered ids keep their stores. Either way
+        the strike ledger is cleared and the transport (re)opens the
+        peer. Data movement is NOT implicit — call :meth:`heal` to
+        restore replication onto the new member."""
+        if node_id not in self.nodes:
+            self.nodes[node_id] = NodeStore(node_id, codec=self.codec)
+            self.accounting.add_node(node_id)
+            self.output_meta.setdefault(node_id, {})
+            self.cache_tiers[node_id] = NodeCacheTier(
+                node_id, self.spec.cache_policy, self.spec.cache_bytes,
+                workers=self.spec.workers_per_node,
+                scope=self.spec.cache_scope)
+            if hasattr(self.placement, "add_node"):
+                self.placement.add_node(node_id)
+        self.failed.discard(node_id)
+        with self._lock:
+            self._owner_strikes.pop(node_id, None)
+        self.transport.ensure_node(node_id)
+
+    # legacy names (pre-churn API); same transitions
+    def fail_node(self, node_id: int) -> None:
+        self.mark_failed(node_id)
 
     def recover_node(self, node_id: int) -> None:
-        self.failed.discard(node_id)
+        self.mark_joined(node_id)
+
+    def replicate_partition(self, pid: int, src: int, dst: int, *,
+                            lane: str = "write") -> int:
+        """Copy partition ``pid`` from ``src`` onto ``dst`` through the
+        write path (real wire cost on the concurrent write lane), then
+        extend every affected file's replica set so failover reads see
+        the restored copy immediately. Returns bytes shipped."""
+        blob = self.nodes[src].partition_blob(pid)
+        name = f".rebalance/partition_{pid:08d}"
+        item = FetchItem(path=name, size=len(blob), stored=len(blob))
+        if src == dst:
+            return 0
+        self.transport.put_remote_batch(src, dst, [(item, blob)],
+                                        lane=lane, round_trips=1)
+        # the shipment paid the wire; the staged copy is install-only
+        self.nodes[dst].drop_staging(src, name)
+        self.nodes[dst].load_partition(pid, blob)
+        with self._lock:
+            for path in list(self.metadata.paths()):
+                st, loc = self.metadata.lookup(path)
+                if loc.partition_id != pid or dst in loc.all_owners:
+                    continue
+                self.metadata.insert(path, st, FileLocation(
+                    node_id=loc.node_id, partition_id=pid,
+                    record_index=loc.record_index,
+                    replicas=tuple(loc.replicas) + (dst,)))
+        return len(blob)
+
+    def heal(self, target_replication: Optional[int] = None) -> int:
+        """Plan + execute one re-replication pass: restore every
+        under-replicated partition onto live nodes through the write path
+        (see :func:`repro.train.elastic.execute_rebalance`). Returns the
+        number of partition copies made."""
+        from repro.train.elastic import execute_rebalance, plan_rebalance
+        if target_replication is None:
+            target_replication = self.spec.replication
+        plan = plan_rebalance(self, target_replication=target_replication)
+        return execute_rebalance(self, plan)
+
+    def heal_async(self, target_replication: Optional[int] = None
+                   ) -> "Future[int]":
+        """Background re-replication on the transport's I/O pool — the
+        churn story's 'keep serving while healing' half: demand reads
+        keep failing over to surviving replicas while this future
+        restores R in the background."""
+        return self.transport.submit(self.heal, target_replication)
+
+    def tick_step(self, step: int) -> None:
+        """Advance the fault injector's training-step clock (drives
+        ``FaultPolicy.kill_at_step``). No-op without an injector."""
+        if self.faults is not None:
+            self.faults.on_step(step)
+
+    def fault_stats(self) -> Dict[str, int]:
+        """The injector's counters plus the cluster retry ledger (empty
+        injector counters when no FaultPolicy is configured)."""
+        stats = self.faults.stats() if self.faults is not None else {
+            "ops": 0, "injected": 0, "dropped": 0, "errored": 0,
+            "delayed": 0, "killed": False, "step": -1}
+        stats["retries"] = self.accounting.retries()
+        stats["failed_nodes"] = sorted(self.failed)
+        return stats
 
     def unreachable_paths(self) -> List[str]:
         """Input files whose every owner is failed (data loss without R>=2)."""
@@ -318,14 +430,23 @@ class FanStoreCluster:
         return hit
 
     def _choose_owner(self, loc: FileLocation, item: FetchItem,
-                      pending_serve: Dict[int, float]) -> Optional[int]:
+                      pending_serve: Dict[int, float], *,
+                      avoid: Optional[int] = None) -> Optional[int]:
         """Pick the live replica that serves this fetch, propagating the
         in-batch load (``pending_serve``) so one batch spreads across
         replicas. Returns None when every owner is failed — demand paths
         raise, the prefetch path skips. Shared by ``read_many`` and
         ``prefetch_window`` so selection policy cannot drift between them.
+
+        ``avoid`` names an owner that just failed this read: the failover
+        loop prefers any OTHER live replica, falling back to the avoided
+        owner itself when it is the only live one (so a transient fault
+        at R=1 still gets its retries before the strike counter marks the
+        node failed for good).
         """
         owners = [o for o in loc.all_owners if o not in self.failed]
+        if avoid is not None and len(owners) > 1:
+            owners = [o for o in owners if o != avoid]
         if not owners:
             return None
         load = {o: self.clocks[o].serve_s + pending_serve.get(o, 0.0)
@@ -335,6 +456,115 @@ class FanStoreCluster:
             self.net.local_cost(item.stored)
             + item.stored / self.net.bandwidth_Bps)
         return owner
+
+    # ---- failover plumbing -------------------------------------------------
+    def _note_owner_failure(self, owner: int, exc: BaseException) -> None:
+        """One transport failure against ``owner``: bump its strike count
+        and, at ``fault_threshold`` consecutive strikes, mark it failed
+        cluster-wide — organic failure detection, no oracle required."""
+        with self._lock:
+            strikes = self._owner_strikes.get(owner, 0) + 1
+            self._owner_strikes[owner] = strikes
+            threshold_hit = strikes >= self.fault_threshold
+        if threshold_hit and owner not in self.failed:
+            self.mark_failed(owner)
+
+    def _note_owner_ok(self, owner: int) -> None:
+        """A successful fetch resets the owner's consecutive-strike count
+        (only sustained failure takes a node out of rotation)."""
+        if self._owner_strikes.get(owner):
+            with self._lock:
+                self._owner_strikes[owner] = 0
+
+    def _retry_backoff(self, requester: int, attempt: int, *,
+                       count: int = 1) -> None:
+        """Capped exponential backoff for failover attempt ``attempt``
+        (1-based), booked on the requester's retry ledger."""
+        delay = min(self.spec.retry_backoff_cap_s,
+                    self.spec.retry_backoff_s * (2 ** (attempt - 1)))
+        self.transport.account_retry(requester, delay, count=count)
+
+    def _fetch_with_failover(self, requester: int, groups: Dict[
+            int, List[Tuple[int, FetchItem, FileLocation]]], *,
+            materialize: bool, batched: bool, window: bool,
+            on_data, lost_ok: bool) -> None:
+        """Drain an (owner -> [(slot, item, loc)]) worklist, classifying
+        owner errors and retrying on the next live replica.
+
+        One round fetches every group; a group whose owner raised a
+        transport failure (ConnectionError / timeout / ERR frame /
+        injected fault — see :func:`repro.fanstore.faults
+        .is_transport_failure`) strikes that owner, pays ONE retry tick of
+        capped exponential backoff, and is re-routed via
+        :meth:`_choose_owner` (``avoid=`` the owner that just failed).
+        Entries with no live replica left raise
+        :class:`~repro.fanstore.faults.NodeLostError` naming the lost
+        partitions — or are silently dropped when ``lost_ok`` (the
+        best-effort prefetch path; demand reads surface the loss).
+        Non-transport errors re-raise unclassified: a genuine
+        ``FileNotFoundError`` must never burn replicas. Successful
+        payloads are delivered through ``on_data(slot, item, data)``.
+
+        Termination: every retry either removes a group (success), or
+        strikes its owner — and at ``fault_threshold`` strikes the owner
+        is marked failed and drops out of ``_choose_owner`` for good, so
+        the live-owner set is strictly shrinking along any failure path.
+        ``max_attempts`` is a belt-and-suspenders valve on top.
+        """
+        from repro.fanstore.faults import NodeLostError, is_transport_failure
+        attempt = 0
+        max_attempts = (self.fault_threshold + 1) * max(2, len(self.nodes))
+        while groups:
+            attempt += 1
+            failed: List[Tuple[
+                int, List[Tuple[int, FetchItem, FileLocation]],
+                BaseException]] = []
+            for owner, entries in list(groups.items()):
+                items = [it for _, it, _ in entries]
+                try:
+                    if window:
+                        datas = self.transport.fetch_window(
+                            requester, owner, items, materialize=materialize)
+                    elif batched:
+                        datas = self.transport.fetch_remote_batch(
+                            requester, owner, items, materialize=materialize)
+                    else:
+                        datas = [self.transport.fetch_remote(
+                            requester, owner, it, materialize=materialize)
+                            for it in items]
+                except Exception as exc:
+                    if not is_transport_failure(exc):
+                        raise
+                    self._note_owner_failure(owner, exc)
+                    failed.append((owner, entries, exc))
+                    continue
+                self._note_owner_ok(owner)
+                del groups[owner]
+                for (slot, item, _), data in zip(entries, datas):
+                    on_data(slot, item, data)
+            if not failed:
+                continue
+            # one retry tick per failed group, one shared backoff level
+            self._retry_backoff(requester, min(attempt, 16),
+                                count=len(failed))
+            last_exc = failed[-1][2]
+            regroup: Dict[int, List[
+                Tuple[int, FetchItem, FileLocation]]] = {}
+            pending_serve: Dict[int, float] = {}
+            lost: List[Tuple[str, int]] = []
+            exhausted = attempt >= max_attempts
+            for owner, entries, _ in failed:
+                for slot, item, loc in entries:
+                    new_owner = None if exhausted else self._choose_owner(
+                        loc, item, pending_serve, avoid=owner)
+                    if new_owner is None:
+                        lost.append((item.path, loc.partition_id))
+                    else:
+                        regroup.setdefault(new_owner, []).append(
+                            (slot, item, loc))
+            if lost and not lost_ok:
+                raise NodeLostError.for_items(lost) from last_exc
+            groups = regroup
 
     def read(self, requester: int, path: str, *, worker_id: int = 0,
              materialize: bool = True) -> bytes:
@@ -363,10 +593,13 @@ class FanStoreCluster:
         """
         if requester in self.failed:
             raise IOError(f"node {requester} is failed")
+        from repro.fanstore.faults import NodeLostError
         out: List[Optional[bytes]] = [None] * len(paths)
         tier = self.cache_tiers[requester]
-        # (owner -> [(output slot, item)]) for the remote leg
-        groups: Dict[int, List[Tuple[int, FetchItem]]] = {}
+        # (owner -> [(output slot, item, location)]) for the remote leg;
+        # the location rides along so a failed fetch can re-route to the
+        # next live replica without a second metadata pass
+        groups: Dict[int, List[Tuple[int, FetchItem, FileLocation]]] = {}
         pending_serve: Dict[int, float] = {}
         for i, raw in enumerate(paths):
             path = raw.strip("/")
@@ -394,24 +627,20 @@ class FanStoreCluster:
                 continue
             owner = self._choose_owner(loc, item, pending_serve)
             if owner is None:
-                raise IOError("all replicas failed")
-            groups.setdefault(owner, []).append((i, item))
-        for owner, entries in groups.items():
-            items = [it for _, it in entries]
-            if batched:
-                datas = self.transport.fetch_remote_batch(
-                    requester, owner, items, materialize=materialize)
-            else:
-                datas = [self.transport.fetch_remote(
-                    requester, owner, it, materialize=materialize)
-                    for it in items]
-            for (i, item), data in zip(entries, datas):
-                out[i] = data
-                if tier.enabled:
-                    ev = tier.put(item.path,
-                                  data if materialize else None,
-                                  size=item.size, worker_id=worker_id)
-                    self.transport.account_cache_eviction(requester, ev)
+                raise NodeLostError.for_items([(path, loc.partition_id)])
+            groups.setdefault(owner, []).append((i, item, loc))
+
+        def deliver(slot: int, item: FetchItem, data: bytes) -> None:
+            out[slot] = data
+            if tier.enabled:
+                ev = tier.put(item.path, data if materialize else None,
+                              size=item.size, worker_id=worker_id)
+                self.transport.account_cache_eviction(requester, ev)
+
+        self._fetch_with_failover(requester, groups,
+                                  materialize=materialize, batched=batched,
+                                  window=False, on_data=deliver,
+                                  lost_ok=False)
         return out  # type: ignore[return-value]
 
     def read_many_async(self, requester: int, paths: Sequence[str], *,
@@ -445,7 +674,7 @@ class FanStoreCluster:
             raise ValueError("prefetch_window requires an enabled client "
                              "cache (cache_bytes > 0)")
         local_items: List[FetchItem] = []
-        groups: Dict[int, List[FetchItem]] = {}
+        groups: Dict[int, List[Tuple[int, FetchItem, FileLocation]]] = {}
         pending_serve: Dict[int, float] = {}
         for raw in paths:
             path = raw.strip("/")
@@ -462,7 +691,7 @@ class FanStoreCluster:
             owner = self._choose_owner(loc, item, pending_serve)
             if owner is None:
                 continue                      # unreachable: surfaces on demand
-            groups.setdefault(owner, []).append(item)
+            groups.setdefault(owner, []).append((0, item, loc))
         staged = 0
         evictions = 0
 
@@ -479,11 +708,13 @@ class FanStoreCluster:
                                                   materialize=materialize)
             for item, data in zip(local_items, datas):
                 insert(item, data)
-        for owner, items in groups.items():
-            datas = self.transport.fetch_window(requester, owner, items,
-                                                materialize=materialize)
-            for item, data in zip(items, datas):
-                insert(item, data)
+        # remote windows ride the same failover loop as demand reads —
+        # but best-effort (lost_ok): an unreachable file is skipped here
+        # and the demand read surfaces the NodeLostError
+        self._fetch_with_failover(
+            requester, groups, materialize=materialize, batched=True,
+            window=True, on_data=lambda _slot, item, data:
+            insert(item, data), lost_ok=True)
         if evictions:
             self.transport.account_cache_eviction(requester, evictions)
         return staged

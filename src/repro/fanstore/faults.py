@@ -1,0 +1,195 @@
+"""Deterministic fault injection and failure classification.
+
+The fault-tolerance layer has three pieces, and this module is the first
+two of them:
+
+* **Injection** — :class:`FaultInjector` sits on the transport seam
+  (``TransportBackend._timed_fetch`` / ``put_remote_batch`` call
+  :meth:`FaultInjector.check` before any bytes move) and deterministically
+  raises/delays a policy-chosen fraction of operations. Everything is
+  driven by a seeded RNG plus a monotone operation counter, so a given
+  ``FaultPolicy`` produces the *same* fault sequence on every run — the
+  property the failover tests and the ``failover`` BENCH block rely on.
+
+* **Classification** — :func:`is_transport_failure` is the single
+  predicate the failover read path uses to decide "retry on another
+  replica" vs "re-raise": transport failures (socket resets, timeouts,
+  ERR frames, injected faults) are retryable; anything else (a genuine
+  ``FileNotFoundError``, a programming error) is not.
+
+The third piece — the retry/strike/churn machinery — lives in
+``cluster.py`` (``read_many`` failover loops, ``mark_failed`` /
+``mark_joined``) and ``train/elastic.py`` (re-replication).
+"""
+from __future__ import annotations
+
+import random
+import threading
+from typing import TYPE_CHECKING, Iterable, Optional, Tuple
+
+from . import wire
+
+if TYPE_CHECKING:   # pragma: no cover
+    from .spec import FaultPolicy
+
+
+class InjectedFault(ConnectionError):
+    """A policy-injected transport failure (dropped fetch or killed node).
+
+    Subclasses ``ConnectionError`` so the failover classifier treats it
+    exactly like a real dead peer — the read path cannot (and must not)
+    tell the difference.
+    """
+
+
+class InjectedError(wire.WireError):
+    """A policy-injected server-side error (the ERR-frame failure mode)."""
+
+
+class NodeLostError(IOError):
+    """Data is unreachable: every replica of the named partitions is on a
+    failed node. Raised by the failover read path when it runs out of
+    live owners — the classified, actionable alternative to hanging.
+
+    Attributes:
+        partitions: sorted partition ids with no live replica.
+        paths: the requested paths that became unreachable.
+    """
+
+    def __init__(self, msg: str, *, partitions: Tuple[int, ...] = (),
+                 paths: Tuple[str, ...] = ()) -> None:
+        super().__init__(msg)
+        self.partitions = tuple(partitions)
+        self.paths = tuple(paths)
+
+    @classmethod
+    def for_items(cls, lost: Iterable[Tuple[str, int]]) -> "NodeLostError":
+        """Build from ``(path, partition_id)`` pairs of unreachable reads."""
+        lost = list(lost)
+        parts = tuple(sorted({pid for _, pid in lost}))
+        paths = tuple(sorted({p for p, _ in lost}))
+        head = ", ".join(str(p) for p in parts[:8])
+        more = f" (+{len(parts) - 8} more)" if len(parts) > 8 else ""
+        return cls(
+            f"all replicas failed for partition(s) {head}{more}: "
+            f"{len(paths)} path(s) unreachable",
+            partitions=parts, paths=paths)
+
+
+# a server that raises NodeLostError while re-serving must round-trip it
+# through the ERR frame instead of degrading to bare IOError
+wire._EXC_TYPES.setdefault("NodeLostError", NodeLostError)
+
+#: exception classes the failover loop treats as "this owner is unhealthy,
+#: retry elsewhere". TimeoutError covers socket timeouts (it is an OSError
+#: subclass but classified explicitly for clarity); WireError covers
+#: protocol damage and ERR frames raised by a sick server.
+_RETRYABLE = (ConnectionError, TimeoutError, wire.WireError)
+
+
+def is_transport_failure(exc: BaseException) -> bool:
+    """True when ``exc`` means the *owner* (not the request) failed and the
+    same read may succeed against another replica."""
+    if isinstance(exc, NodeLostError):
+        return False          # already the terminal classification
+    return isinstance(exc, _RETRYABLE)
+
+
+class FaultInjector:
+    """Deterministic fault source driven by a :class:`FaultPolicy`.
+
+    One injector per cluster, shared by all transport verbs. All state
+    updates happen under a lock; the decision for operation *k* depends
+    only on (seed, k, requester, owner, verb), so a fixed policy yields a
+    reproducible fault schedule regardless of thread interleaving **when
+    the operation order is deterministic** (the modeled backend; real
+    wires get a reproducible *rate* rather than a reproducible schedule).
+
+    Counters (all monotone, read via :meth:`stats`):
+        ops        operations checked
+        injected   faults raised (drops + kills + errors)
+        dropped / errored / delayed   per-mode breakdown
+        killed     True once the kill-node trigger has fired
+    """
+
+    def __init__(self, policy: "FaultPolicy") -> None:
+        self.policy = policy
+        self._rng = random.Random(policy.seed)
+        self._lock = threading.Lock()
+        self._ops = 0
+        self._step = -1
+        self.injected = 0
+        self.dropped = 0
+        self.errored = 0
+        self.delayed = 0
+        self.killed = False
+
+    # ---- lifecycle ---------------------------------------------------------
+    def on_step(self, step: int) -> None:
+        """Advance the training-step clock (drives ``kill_at_step``)."""
+        with self._lock:
+            if step > self._step:
+                self._step = step
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"ops": self._ops, "injected": self.injected,
+                    "dropped": self.dropped, "errored": self.errored,
+                    "delayed": self.delayed, "killed": self.killed,
+                    "step": self._step}
+
+    # ---- the seam ----------------------------------------------------------
+    def _applies(self, owner: int, verb: str) -> bool:
+        p = self.policy
+        if p.owners is not None and owner not in p.owners:
+            return False
+        if p.verbs is not None:
+            return verb in p.verbs
+        # default scope: data-plane fetches; writes only when asked for
+        return verb != "put"
+
+    def check(self, requester: int, owner: int, verb: str) -> float:
+        """Decide the fate of one transport operation.
+
+        Raises :class:`InjectedFault` (kill / drop) or
+        :class:`InjectedError` (server-side error), or returns a delay in
+        seconds (0.0 almost always) the backend must account as injected
+        latency. Called with the requester/owner/verb of every movement.
+        """
+        p = self.policy
+        with self._lock:
+            self._ops += 1
+            ops = self._ops
+            # the kill trigger: once fired, EVERY op against the dead
+            # owner fails until the membership layer routes around it
+            if p.kill_node is not None and not self.killed:
+                fire = ((p.kill_at_op is not None and ops >= p.kill_at_op)
+                        or (p.kill_at_step is not None
+                            and self._step >= p.kill_at_step))
+                if fire:
+                    self.killed = True
+            if self.killed and owner == p.kill_node:
+                self.injected += 1
+                self.dropped += 1
+                raise InjectedFault(
+                    f"injected: node {owner} is dead "
+                    f"(killed at op {ops}, step {self._step})")
+            if not self._applies(owner, verb):
+                return 0.0
+            draw = self._rng.random()
+            if draw < p.drop_fraction:
+                self.injected += 1
+                self.dropped += 1
+                raise InjectedFault(
+                    f"injected drop: {verb} {requester}->{owner} (op {ops})")
+            draw -= p.drop_fraction
+            if draw < p.error_fraction:
+                self.injected += 1
+                self.errored += 1
+                raise InjectedError(
+                    f"injected error: {verb} {requester}->{owner} (op {ops})")
+            draw -= p.error_fraction
+            if draw < p.delay_fraction:
+                self.delayed += 1
+                return p.delay_s
+        return 0.0

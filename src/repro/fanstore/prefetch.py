@@ -459,6 +459,26 @@ class SchedulerGroup:
     def run_all(self) -> int:
         return sum(s.run_all() for s in self.schedulers)
 
+    def drop_node(self, node_id: int) -> None:
+        """Membership: detach every member scheduler that RUNS ON the dead
+        node (its windows can never be consumed) and drain it, swallowing
+        transport failures — in-flight windows racing the node's death may
+        surface connection errors that are exactly the event being
+        handled. Members on surviving nodes are untouched; their later
+        windows re-resolve owners against the live failure set."""
+        keep: List[PrefetchScheduler] = []
+        for s in self.schedulers:
+            if s.node_id != node_id:
+                keep.append(s)
+                continue
+            try:
+                s.drain()
+            except (ConnectionError, TimeoutError, IOError):
+                pass
+        if keep:                       # never empty the group entirely
+            self.schedulers = keep
+            self.window_steps = max(s.window_steps for s in keep)
+
     def drain(self) -> None:
         self._fan("drain")
 

@@ -36,7 +36,7 @@ from repro.fanstore.placement import (PLACEMENTS, SELECTORS, make_placement,
                                       make_selector)
 from repro.fanstore.wire import WIRE_CODECS
 
-__all__ = ["ClusterSpec", "WorkerContext", "CACHE_SCOPES",
+__all__ = ["ClusterSpec", "FaultPolicy", "WorkerContext", "CACHE_SCOPES",
            "suggest_names"]
 
 #: how one node's byte budget is carved up across its co-located workers:
@@ -81,6 +81,68 @@ class WorkerContext:
 
 
 @dataclass(frozen=True)
+class FaultPolicy:
+    """Deterministic fault-injection knobs (the ``faults`` spec field).
+
+    All randomness is drawn from ``random.Random(seed)`` inside one
+    :class:`repro.fanstore.faults.FaultInjector`, so a fixed policy yields
+    a reproducible fault sequence on the modeled backend (and a
+    reproducible fault *rate* on real wires, where thread interleaving
+    reorders operations).
+
+    Failure modes, applied per transport operation in this order:
+
+    * ``kill_node`` + (``kill_at_step`` | ``kill_at_op``) — once the
+      trigger fires, EVERY operation against ``kill_node`` raises
+      ``InjectedFault`` until the membership layer routes around it: the
+      crashed-peer scenario end to end.
+    * ``drop_fraction`` — probability an op raises ``InjectedFault``
+      (a vanished connection: retryable on another replica).
+    * ``error_fraction`` — probability an op raises ``InjectedError``
+      (a server-side ERR frame: also retryable).
+    * ``delay_fraction`` / ``delay_s`` — probability an op is delayed by
+      ``delay_s`` (a straggler: accounted, never failed).
+
+    ``owners``/``verbs`` scope injection to specific owner node ids or
+    transport verbs (``fetch_remote``, ``fetch_remote_batch``,
+    ``fetch_window``, ``put``...). By default every fetch verb is in
+    scope and writes are exempt (set ``verbs=("put",)`` to fault the
+    write path). The kill trigger ignores scoping — a dead node is dead
+    for every verb.
+    """
+    seed: int = 0
+    drop_fraction: float = 0.0
+    error_fraction: float = 0.0
+    delay_fraction: float = 0.0
+    delay_s: float = 0.0
+    kill_node: Optional[int] = None
+    kill_at_step: Optional[int] = None
+    kill_at_op: Optional[int] = None
+    owners: Optional[Tuple[int, ...]] = None
+    verbs: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self) -> None:
+        for name in ("drop_fraction", "error_fraction", "delay_fraction"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        total = self.drop_fraction + self.error_fraction + self.delay_fraction
+        if total > 1.0:
+            raise ValueError(
+                f"drop+error+delay fractions must sum to <= 1, got {total}")
+        if self.delay_s < 0.0:
+            raise ValueError("delay_s must be >= 0")
+        if self.kill_node is not None and self.kill_at_step is None \
+                and self.kill_at_op is None:
+            raise ValueError(
+                "kill_node needs a trigger: set kill_at_step or kill_at_op")
+        for name in ("owners", "verbs"):
+            v = getattr(self, name)
+            if v is not None:
+                object.__setattr__(self, name, tuple(v))
+
+
+@dataclass(frozen=True)
 class ClusterSpec:
     """The whole deployment as one frozen, validated, serializable value.
 
@@ -106,6 +168,15 @@ class ClusterSpec:
     # consult stripes, all wires validate the codec at build time)
     wire_stripes: int = 4
     wire_codec: str = "none"
+    # fault tolerance: `faults` is a FaultPolicy as a mapping (kept
+    # JSON-representable like every other field); the retry knobs bound
+    # the failover read path's capped exponential backoff, and
+    # fault_threshold is the consecutive-strike count after which an
+    # owner is marked failed cluster-wide
+    faults: Optional[Mapping[str, Any]] = None
+    fault_threshold: int = 3
+    retry_backoff_s: float = 1e-4
+    retry_backoff_cap_s: float = 2e-3
 
     def __post_init__(self) -> None:
         if not isinstance(self.num_nodes, int) or self.num_nodes < 1:
@@ -131,6 +202,20 @@ class ClusterSpec:
         if not isinstance(self.wire_stripes, int) or self.wire_stripes < 1:
             raise ValueError("wire_stripes must be an int >= 1")
         _check_choice(self.wire_codec, WIRE_CODECS, kind="wire codec")
+        if self.fault_threshold < 1:
+            raise ValueError("fault_threshold must be >= 1")
+        if self.retry_backoff_s < 0 or self.retry_backoff_cap_s < 0:
+            raise ValueError(
+                "retry_backoff_s / retry_backoff_cap_s must be >= 0")
+        if self.faults is not None:
+            known = {f.name for f in fields(FaultPolicy)}
+            pol = dict(self.faults)
+            for k in pol:
+                if k not in known:
+                    raise ValueError(
+                        suggest_names(k, known, kind="FaultPolicy field"))
+            FaultPolicy(**pol)      # validate values now, fail at build time
+            object.__setattr__(self, "faults", pol)
         object.__setattr__(self, "backend_options",
                            dict(self.backend_options or {}))
         if self.interconnect is not None:
@@ -170,6 +255,13 @@ class ClusterSpec:
     def make_selector(self):
         return make_selector(self.selector)
 
+    def make_fault_policy(self) -> Optional[FaultPolicy]:
+        """The ``faults`` mapping as a validated :class:`FaultPolicy`
+        (None when no injection is configured)."""
+        if self.faults is None:
+            return None
+        return FaultPolicy(**dict(self.faults))
+
     # ---- serialization (round-trip is identity; pinned in tests) -----------
     def to_dict(self) -> Dict[str, Any]:
         return asdict(self)
@@ -199,7 +291,9 @@ class ClusterSpec:
     LEGACY_KWARGS = ("codec", "backend", "backend_options", "cache_policy",
                      "cache_bytes", "cache_scope", "workers_per_node",
                      "placement", "selector", "replication", "io_threads",
-                     "interconnect", "wire_stripes", "wire_codec")
+                     "interconnect", "wire_stripes", "wire_codec",
+                     "faults", "fault_threshold", "retry_backoff_s",
+                     "retry_backoff_cap_s")
 
     @classmethod
     def from_kwargs(cls, num_nodes: int, **kwargs) -> "ClusterSpec":
@@ -220,6 +314,8 @@ class ClusterSpec:
         net = spec_kwargs.pop("interconnect", None)
         if isinstance(net, InterconnectModel):
             net = asdict(net)
+        if isinstance(spec_kwargs.get("faults"), FaultPolicy):
+            spec_kwargs["faults"] = asdict(spec_kwargs["faults"])
         if net is not None:
             spec_kwargs["interconnect"] = dict(net)
         for name, registry_default in (("placement", "modulo"),

@@ -31,10 +31,22 @@ class RebalancePlan:
     moves: List[Tuple[int, int, int]]      # (partition_id, src_node, dst_node)
     re_replicate: List[Tuple[int, int]]    # (partition_id, new_owner)
     lost_partitions: List[int]             # no surviving replica (need SFS refill)
+    total_partitions: int = 0              # denominator for the fractions
 
     @property
     def bytes_moved_fraction(self) -> float:
-        return 0.0 if not self.moves else len(self.moves)
+        """Fraction of the cluster's partitions this plan moves — the
+        consistent-hashing selling point is that this stays O(changed/N)."""
+        if not self.moves or not self.total_partitions:
+            return 0.0
+        return len(self.moves) / self.total_partitions
+
+    @property
+    def re_replicate_fraction(self) -> float:
+        """Fraction of partitions the plan copies to restore replication."""
+        if not self.re_replicate or not self.total_partitions:
+            return 0.0
+        return len(self.re_replicate) / self.total_partitions
 
 
 def partition_owners(cluster: FanStoreCluster) -> Dict[int, List[int]]:
@@ -74,22 +86,38 @@ def plan_rebalance(cluster: FanStoreCluster, *, target_replication: int = 1
                 load[c] += 1
                 alive.append(c)
                 deficit -= 1
-    return RebalancePlan(moves=[], re_replicate=re_rep, lost_partitions=lost)
+    return RebalancePlan(moves=[], re_replicate=re_rep, lost_partitions=lost,
+                         total_partitions=len(owners))
 
 
-def apply_rebalance(cluster: FanStoreCluster, plan: RebalancePlan) -> int:
-    """Execute re-replication from surviving owners; returns copies made."""
+def execute_rebalance(cluster: FanStoreCluster, plan: RebalancePlan) -> int:
+    """Execute a plan's re-replication THROUGH the engine: each copy ships
+    src -> dst over the transport's write lane
+    (``cluster.replicate_partition``), paying real/modeled wire cost, and
+    extends the metadata replica sets so failover reads route to the
+    restored copy immediately. The least-loaded surviving owner sources
+    each copy. Returns copies made; lost partitions (no surviving
+    replica) are the caller's problem — they need an SFS refill."""
     owners = partition_owners(cluster)
     live = set(cluster.live_nodes())
     done = 0
     for pid, dst in plan.re_replicate:
-        srcs = [o for o in owners.get(pid, []) if o in live]
+        srcs = [o for o in owners.get(pid, []) if o in live and o != dst]
         if not srcs:
             continue
-        blob = cluster.nodes[srcs[0]]._partitions[pid]
-        cluster.nodes[dst].load_partition(pid, blob)
+        src = min(srcs, key=lambda o: cluster.clocks[o].serve_s)
+        cluster.replicate_partition(pid, src, dst)
+        owners.setdefault(pid, []).append(dst)
         done += 1
     return done
+
+
+def apply_rebalance(cluster: FanStoreCluster, plan: RebalancePlan) -> int:
+    """Execute re-replication from surviving owners; returns copies made.
+    Delegates to :func:`execute_rebalance` (the engine path: wire cost on
+    the write lane + metadata replica-set repair); kept as the historical
+    entry point."""
+    return execute_rebalance(cluster, plan)
 
 
 @dataclass

@@ -5,7 +5,8 @@ import pytest
 from repro.data.synthetic import small_file_dataset
 from repro.fanstore.cluster import FanStoreCluster
 from repro.fanstore.prepare import prepare_dataset
-from repro.train.elastic import (apply_rebalance, plan_rebalance,
+from repro.train.elastic import (RebalancePlan, apply_rebalance,
+                                 execute_rebalance, plan_rebalance,
                                  rescale_batch)
 
 
@@ -37,6 +38,43 @@ def test_repair_after_failure_restores_reads():
     assert c.unreachable_paths() == []
     for p in list(files)[::13]:
         assert c.read(0, p) == files[p]
+
+
+def test_bytes_moved_fraction_is_a_fraction():
+    # regression: this used to return len(moves) — a COUNT, not a
+    # fraction, so a 3-move plan over 100 partitions reported 3.0
+    plan = RebalancePlan(moves=[(0, 1, 2), (5, 1, 3), (9, 1, 4)],
+                         re_replicate=[(2, 3)], lost_partitions=[],
+                         total_partitions=12)
+    assert plan.bytes_moved_fraction == pytest.approx(3 / 12)
+    assert plan.re_replicate_fraction == pytest.approx(1 / 12)
+    empty = RebalancePlan(moves=[], re_replicate=[], lost_partitions=[])
+    assert empty.bytes_moved_fraction == 0.0
+    assert empty.re_replicate_fraction == 0.0
+
+
+def test_planned_fractions_stay_small_after_one_failure():
+    # the consistent-hashing selling point: repairing ONE failed node out
+    # of six re-replicates only that node's share, not the whole set
+    c, _ = _cluster()
+    c.fail_node(1)
+    plan = plan_rebalance(c, target_replication=2)
+    assert plan.total_partitions == 12
+    assert 0.0 < plan.re_replicate_fraction <= 0.5
+
+
+def test_execute_rebalance_repairs_metadata_replica_sets():
+    c, files = _cluster()
+    c.fail_node(1)
+    plan = plan_rebalance(c, target_replication=2)
+    made = execute_rebalance(c, plan)
+    assert made == len(plan.re_replicate)
+    # the repair is visible to the ROUTING layer, not just the stores:
+    # every file has >= 2 live owners in its metadata replica set
+    for path in files:
+        _, loc = c.metadata.lookup(path)
+        live = [o for o in loc.all_owners if o not in c.failed]
+        assert len(set(live)) >= 2, path
 
 
 def test_lost_partition_detected():

@@ -1,0 +1,582 @@
+"""Fault tolerance: deterministic injection, replica failover, churn.
+
+The contract under test, end to end:
+
+* a ``FaultPolicy`` on the spec drives a seeded :class:`FaultInjector`
+  at the transport seam — the same policy produces the same fault
+  sequence on every run;
+* at R>=2 a mid-epoch node kill is INVISIBLE to readers: every
+  ``read_many`` returns byte-identical data via replica failover, the
+  retry ledger equals the injected-fault count exactly, and the dead
+  node is detected organically (strike counter -> ``mark_failed``);
+* at R=1 the same kill fails FAST and CLASSIFIED: ``NodeLostError``
+  naming the lost partitions, never a hang;
+* membership churn (``mark_failed`` / ``mark_joined`` / ``heal``)
+  restores replication through the write path so reads survive a
+  SECOND failure;
+* the socket backend's dial path retries refused connections with
+  backoff, its teardown names threads that fail to join, and
+  ``drop_node`` closes a dead peer's serving loop and stripes.
+"""
+import socket as socket_mod
+import threading
+
+import pytest
+
+from repro.fanstore.api import FanStoreSession
+from repro.fanstore.backends.socket import _NodeServer, SocketBackend
+from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.faults import (FaultInjector, InjectedError,
+                                   InjectedFault, NodeLostError,
+                                   is_transport_failure)
+from repro.fanstore.prefetch import EpochSchedule, SchedulerGroup
+from repro.fanstore.prepare import prepare_dataset
+from repro.fanstore.spec import ClusterSpec, FaultPolicy
+from repro.fanstore import wire
+
+
+def make_files(n=48):
+    return {f"train/f_{i:03d}.bin":
+            bytes((i * j * 2654435761) % 256 for j in range(600 + i))
+            for i in range(n)}
+
+
+def build(*, nodes=8, replication=2, faults=None, backend="modeled",
+          placement="ring", files=None, partitions=16, **spec_kw):
+    files = files if files is not None else make_files()
+    blobs, _ = prepare_dataset(files, partitions, compress=False)
+    spec = ClusterSpec(num_nodes=nodes, replication=replication,
+                       placement=placement, backend=backend,
+                       faults=faults, **spec_kw)
+    c = FanStoreCluster.from_spec(spec)
+    c.load_partitions(blobs, by_placement=True)
+    return c, files
+
+
+def owners_of(c, path):
+    _, loc = c.metadata.lookup(path)
+    return list(loc.all_owners)
+
+
+# ---------------------------------------------------------------------------
+# FaultPolicy: validation, spec round trip
+# ---------------------------------------------------------------------------
+
+def test_policy_validates_fractions():
+    with pytest.raises(ValueError, match="drop_fraction"):
+        FaultPolicy(drop_fraction=1.5)
+    with pytest.raises(ValueError, match="sum"):
+        FaultPolicy(drop_fraction=0.6, error_fraction=0.6)
+    with pytest.raises(ValueError, match="delay_s"):
+        FaultPolicy(delay_s=-1.0)
+
+
+def test_policy_kill_requires_trigger():
+    with pytest.raises(ValueError, match="kill_node"):
+        FaultPolicy(kill_node=3)
+    # either trigger form is enough
+    FaultPolicy(kill_node=3, kill_at_step=1)
+    FaultPolicy(kill_node=3, kill_at_op=10)
+
+
+def test_spec_rejects_unknown_fault_key_with_suggestion():
+    with pytest.raises(ValueError, match="drop_fraction"):
+        ClusterSpec(num_nodes=2, faults={"drop_fractoin": 0.1})
+
+
+def test_spec_faults_json_round_trip():
+    spec = ClusterSpec(num_nodes=4, replication=2,
+                       faults={"drop_fraction": 0.25, "seed": 9},
+                       fault_threshold=5, retry_backoff_s=1e-3)
+    back = ClusterSpec.from_json(spec.to_json())
+    assert back == spec
+    pol = back.make_fault_policy()
+    assert isinstance(pol, FaultPolicy)
+    assert pol.drop_fraction == 0.25 and pol.seed == 9
+    assert ClusterSpec(num_nodes=2).make_fault_policy() is None
+
+
+def test_spec_validates_retry_knobs():
+    with pytest.raises(ValueError, match="fault_threshold"):
+        ClusterSpec(num_nodes=2, fault_threshold=0)
+    with pytest.raises(ValueError, match="retry_backoff"):
+        ClusterSpec(num_nodes=2, retry_backoff_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: determinism, scoping
+# ---------------------------------------------------------------------------
+
+def _sequence(policy, ops=200):
+    inj = FaultInjector(policy)
+    out = []
+    for _ in range(ops):
+        try:
+            inj.check(0, 1, "fetch")
+            out.append("ok")
+        except InjectedFault:
+            out.append("drop")
+        except InjectedError:
+            out.append("err")
+    return out, inj.stats()
+
+
+def test_injector_deterministic_for_seed():
+    pol = FaultPolicy(drop_fraction=0.2, error_fraction=0.1, seed=42)
+    a, stats_a = _sequence(pol)
+    b, stats_b = _sequence(pol)
+    assert a == b
+    assert stats_a == stats_b
+    assert stats_a["dropped"] > 0 and stats_a["errored"] > 0
+    assert stats_a["injected"] == stats_a["dropped"] + stats_a["errored"]
+    c, _ = _sequence(FaultPolicy(drop_fraction=0.2, error_fraction=0.1,
+                                 seed=43))
+    assert c != a
+
+
+def test_injector_scopes_owners_and_exempts_put_by_default():
+    inj = FaultInjector(FaultPolicy(drop_fraction=1.0, owners=(2,)))
+    inj.check(0, 1, "fetch")                       # other owner: clean
+    with pytest.raises(InjectedFault):
+        inj.check(0, 2, "fetch")
+    inj.check(0, 2, "put")                         # puts exempt by default
+    put_inj = FaultInjector(FaultPolicy(drop_fraction=1.0, verbs=("put",)))
+    with pytest.raises(InjectedFault):
+        put_inj.check(0, 2, "put")
+    put_inj.check(0, 2, "fetch")                   # ...and nothing else
+
+
+def test_injector_kill_fires_on_step_and_is_permanent():
+    inj = FaultInjector(FaultPolicy(kill_node=1, kill_at_step=2))
+    inj.check(0, 1, "fetch")                       # before the kill: clean
+    inj.on_step(2)
+    for _ in range(3):                             # after: every op fails
+        with pytest.raises(InjectedFault):
+            inj.check(0, 1, "fetch")
+    inj.check(0, 3, "fetch")                       # other owners untouched
+    assert inj.stats()["killed"] is True
+
+
+def test_classifier():
+    assert is_transport_failure(InjectedFault("x"))
+    assert is_transport_failure(InjectedError("x"))
+    assert is_transport_failure(ConnectionResetError("x"))
+    assert is_transport_failure(TimeoutError("x"))
+    assert is_transport_failure(wire.WireError("x"))
+    assert not is_transport_failure(FileNotFoundError("x"))
+    assert not is_transport_failure(NodeLostError("x"))
+    # ERR frames can reconstruct the loss class across the wire
+    assert wire._EXC_TYPES["NodeLostError"] is NodeLostError
+
+
+# ---------------------------------------------------------------------------
+# replication >= 2 placement (load_partitions + replica_set)
+# ---------------------------------------------------------------------------
+
+def test_load_partitions_by_placement_replica_sets():
+    c, files = build(nodes=6, replication=3)
+    try:
+        for path in files:
+            owners = owners_of(c, path)
+            assert len(owners) == len(set(owners)) == 3
+            _, loc = c.metadata.lookup(path)
+            # the head of the replica set is the placement's primary
+            assert owners[0] == loc.node_id
+            assert loc.node_id == c.placement.replica_set(
+                f"partition:{loc.partition_id:08d}", 3)[0]
+            # every replica owner physically holds the partition
+            for o in owners:
+                assert loc.partition_id in c.nodes[o].partition_ids
+    finally:
+        c.close()
+
+
+def test_load_partitions_replication_exceeding_nodes_raises():
+    c, files = build(nodes=4, replication=1)
+    try:
+        blobs, _ = prepare_dataset(make_files(8), 4, compress=False)
+        with pytest.raises(ValueError, match="replication"):
+            c.load_partitions(blobs, replication=5)
+    finally:
+        c.close()
+
+
+def test_reads_byte_identical_from_every_replica():
+    c, files = build(nodes=6, replication=2)
+    try:
+        paths = sorted(files)
+        # force reads onto each replica in turn by failing the other one
+        probe = paths[0]
+        owners = owners_of(c, probe)
+        reader = next(n for n in range(6) if n not in owners)
+        for excluded in owners:
+            for o in owners:
+                c.mark_joined(o)
+            c.mark_failed(excluded)
+            c.clear_caches()
+            assert c.read_many(reader, [probe]) == [files[probe]]
+    finally:
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# failover reads, modeled wire
+# ---------------------------------------------------------------------------
+
+def _drive_epoch(c, files, steps=6):
+    """Read the whole namespace from every live node, step by step,
+    driving the injector's step clock. Returns nothing; raises on any
+    client-visible failure."""
+    paths = sorted(files)
+    per = max(1, len(paths) // steps)
+    for step in range(steps):
+        c.tick_step(step)
+        batch = paths[step * per:(step + 1) * per] or paths[:per]
+        for nid in range(c.num_nodes):
+            if nid in c.failed:
+                continue
+            got = c.read_many(nid, batch)
+            assert [bytes(d) for d in got] == [files[p] for p in batch]
+
+
+def test_kill_node_r2_reads_all_succeed_ledger_exact():
+    c, files = build(nodes=8, replication=2,
+                     faults={"kill_node": 3, "kill_at_step": 2, "seed": 7})
+    try:
+        _drive_epoch(c, files)
+        s = c.fault_stats()
+        assert s["killed"] and s["injected"] > 0
+        # one retry tick per injected fault — exactly, no slack
+        assert s["retries"] == s["injected"]
+        # the kill was detected organically via the strike counter
+        assert 3 in c.failed and s["failed_nodes"] == [3]
+    finally:
+        c.close()
+
+
+def test_kill_node_r1_raises_classified_loss():
+    c, files = build(nodes=6, replication=1,
+                     faults={"kill_node": 2, "kill_at_op": 1, "seed": 7})
+    try:
+        victim_paths = [p for p in sorted(files)
+                        if owners_of(c, p) == [2]]
+        assert victim_paths, "placement gave node 2 nothing to lose"
+        with pytest.raises(NodeLostError) as ei:
+            c.read_many(0, victim_paths[:2])
+        assert ei.value.partitions
+        assert str(ei.value.partitions[0]) in str(ei.value)
+        assert ei.value.paths
+        s = c.fault_stats()
+        # convergence is deterministic: threshold strikes, one retry each
+        assert s["retries"] == s["injected"] == c.fault_threshold
+        assert 2 in c.failed
+        # once the owner is marked failed the loss is immediate (no more
+        # injector raises, no more retries — fail fast, not fail slowly)
+        with pytest.raises(NodeLostError):
+            c.read_many(0, victim_paths[:1])
+        assert c.fault_stats()["retries"] == s["retries"]
+    finally:
+        c.close()
+
+
+def test_transient_drops_retry_without_marking_failed():
+    # a 15% drop rate is transient noise, not a dead node: every read
+    # must succeed and no owner may cross the strike threshold
+    c, files = build(nodes=4, replication=2, fault_threshold=10,
+                     faults={"drop_fraction": 0.15, "seed": 3})
+    try:
+        _drive_epoch(c, files, steps=4)
+        s = c.fault_stats()
+        assert s["injected"] > 0
+        assert s["retries"] == s["injected"]
+        assert not c.failed
+    finally:
+        c.close()
+
+
+def test_injected_error_frames_failover_like_drops():
+    c, files = build(nodes=4, replication=2, fault_threshold=10,
+                     faults={"error_fraction": 0.15, "seed": 5})
+    try:
+        _drive_epoch(c, files, steps=4)
+        s = c.fault_stats()
+        assert s["errored"] > 0 and s["dropped"] == 0
+        assert s["retries"] == s["injected"] == s["errored"]
+    finally:
+        c.close()
+
+
+def test_injected_delay_accrues_on_consume_lane():
+    c, files = build(nodes=4, replication=2,
+                     faults={"delay_fraction": 1.0, "delay_s": 1e-3,
+                             "seed": 0})
+    try:
+        _drive_epoch(c, files, steps=2)
+        s = c.fault_stats()
+        assert s["delayed"] > 0 and s["injected"] == 0
+        assert sum(cl.consume_s for cl in c.clocks.values()) >= \
+            s["delayed"] * 1e-3
+    finally:
+        c.close()
+
+
+def test_prefetch_window_survives_kill():
+    c, files = build(nodes=4, replication=2, cache_bytes=1 << 22,
+                     faults={"kill_node": 1, "kill_at_op": 1, "seed": 11})
+    try:
+        paths = sorted(files)
+        staged = c.prefetch_window(0, paths)
+        assert staged > 0
+        got = c.read_many(0, paths)
+        assert [bytes(d) for d in got] == [files[p] for p in paths]
+        s = c.fault_stats()
+        assert s["retries"] == s["injected"] > 0
+    finally:
+        c.close()
+
+
+def test_fault_stats_via_session_and_zero_default():
+    c, files = build(nodes=4, replication=2,
+                     faults={"kill_node": 1, "kill_at_op": 1, "seed": 1})
+    try:
+        sess = c.connect(0)
+        _drive_epoch(c, files, steps=2)
+        s = sess.fault_stats()
+        assert s["injected"] > 0 and s["retries"] == s["injected"]
+    finally:
+        c.close()
+    clean, _ = build(nodes=2, replication=1)
+    try:
+        s = clean.fault_stats()
+        assert s["injected"] == s["retries"] == 0
+        assert s["failed_nodes"] == []
+    finally:
+        clean.close()
+
+
+# ---------------------------------------------------------------------------
+# membership churn: mark_failed / mark_joined / heal
+# ---------------------------------------------------------------------------
+
+def test_heal_restores_replication_and_survives_second_failure():
+    c, files = build(nodes=6, replication=2)
+    try:
+        c.mark_failed(0)
+        copies = c.heal()
+        assert copies > 0
+        # every partition is back at R=2 on LIVE nodes
+        for path in files:
+            live = [o for o in owners_of(c, path) if o not in c.failed]
+            assert len(set(live)) >= 2
+        # so a second, different failure still leaves a live replica
+        c.mark_failed(1)
+        paths = sorted(files)
+        got = c.read_many(2, paths)
+        assert [bytes(d) for d in got] == [files[p] for p in paths]
+        assert not c.unreachable_paths()
+    finally:
+        c.close()
+
+
+def test_heal_async_runs_on_transport_pool():
+    c, files = build(nodes=6, replication=2)
+    try:
+        c.mark_failed(0)
+        assert c.heal_async().result() > 0
+    finally:
+        c.close()
+
+
+def test_mark_joined_new_node_gets_ring_seat_and_heal_targets_it():
+    c, files = build(nodes=4, replication=2)
+    try:
+        new_id = 4
+        c.mark_joined(new_id)
+        assert new_id in c.nodes and new_id in c.live_nodes()
+        assert not c.nodes[new_id].partition_ids
+        # the new seat participates in repair placement: fail a node and
+        # heal — some copies may land on the new member, and either way
+        # reads keep working with it in the membership
+        c.mark_failed(1)
+        assert c.heal() > 0
+        paths = sorted(files)
+        got = c.read_many(new_id, paths)
+        assert [bytes(d) for d in got] == [files[p] for p in paths]
+    finally:
+        c.close()
+
+
+def test_mark_failed_idempotent_and_rejoin_clears_strikes():
+    c, files = build(nodes=4, replication=2)
+    try:
+        c.mark_failed(1)
+        c.mark_failed(1)               # idempotent
+        assert c.failed == {1}
+        c.mark_joined(1)
+        assert not c.failed
+        paths = sorted(files)
+        got = c.read_many(1, paths)
+        assert [bytes(d) for d in got] == [files[p] for p in paths]
+    finally:
+        c.close()
+
+
+def test_replicate_partition_pays_wire_and_updates_metadata():
+    c, files = build(nodes=4, replication=1)
+    try:
+        path = sorted(files)[0]
+        _, loc = c.metadata.lookup(path)
+        src = loc.node_id
+        dst = next(n for n in range(4) if n != src)
+        before = c.clocks[src].write_s
+        shipped = c.replicate_partition(loc.partition_id, src, dst)
+        assert shipped > 0
+        assert c.clocks[src].write_s > before       # the copy cost wire time
+        assert dst in owners_of(c, path)
+        assert loc.partition_id in c.nodes[dst].partition_ids
+        # same-node copy is a no-op
+        assert c.replicate_partition(loc.partition_id, src, src) == 0
+    finally:
+        c.close()
+
+
+def test_scheduler_group_drop_node_detaches_members():
+    c, files = build(nodes=4, replication=2, cache_bytes=1 << 22)
+    try:
+        paths = sorted(files)
+        sched = EpochSchedule.from_trace(
+            {nid: [paths[:8], paths[8:16]] for nid in range(4)}, cluster=c)
+        group = SchedulerGroup.for_schedule(c, sched)
+        assert len(group) == 4
+        group.drop_node(2)
+        assert len(group) == 3
+        assert all(s.node_id != 2 for s in group.schedulers)
+        group.ensure(1)
+        group.drain()
+        group.close()
+    finally:
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# socket backend: real wire failover, dial retry, teardown
+# ---------------------------------------------------------------------------
+
+def test_socket_drop_node_then_reads_fail_over():
+    c, files = build(nodes=4, replication=2, backend="socket")
+    try:
+        paths = sorted(files)
+        c.read_many(0, paths[:4])                  # start the wire
+        # kill node 1's serving loop out from under the cluster — the
+        # routing layer has NOT been told; failover must discover it
+        c.transport.drop_node(1)
+        # every epoch pass succeeds via failover; each pass that routes a
+        # group at the dead peer strikes it, and within fault_threshold
+        # passes the cluster marks it failed organically
+        for _ in range(c.fault_threshold + 2):
+            got = c.read_many(0, paths)
+            assert [bytes(d) for d in got] == [files[p] for p in paths]
+            if 1 in c.failed:
+                break
+        assert 1 in c.failed
+        assert c.accounting.retries() > 0
+    finally:
+        c.close()
+
+
+def test_socket_ensure_node_reopens_peer():
+    c, files = build(nodes=4, replication=2, backend="socket")
+    try:
+        paths = sorted(files)
+        c.read_many(0, paths[:4])
+        c.mark_failed(1)
+        assert 1 not in c.transport._servers
+        c.mark_joined(1)
+        assert 1 in c.transport._servers
+        got = c.read_many(1, paths)
+        assert [bytes(d) for d in got] == [files[p] for p in paths]
+    finally:
+        c.close()
+
+
+def test_socket_dial_retries_refused_connections(monkeypatch):
+    c, files = build(nodes=2, replication=1, backend="socket")
+    try:
+        c.start()                                  # spin the serving loops
+        real = socket_mod.create_connection
+        calls = {"n": 0}
+
+        def flaky(address, *a, **kw):
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise ConnectionRefusedError("injected refuse")
+            return real(address, *a, **kw)
+
+        monkeypatch.setattr(
+            "repro.fanstore.backends.socket.socket.create_connection",
+            flaky)
+        sock = c.transport._connect(1)
+        sock.close()
+        assert calls["n"] == 3                     # 2 refusals + 1 success
+    finally:
+        c.close()
+
+
+def test_socket_dial_gives_up_with_connection_error(monkeypatch):
+    c, files = build(nodes=2, replication=1, backend="socket")
+    try:
+        c.start()
+
+        def always_refused(address, *a, **kw):
+            raise ConnectionRefusedError("injected refuse")
+
+        monkeypatch.setattr(
+            "repro.fanstore.backends.socket.socket.create_connection",
+            always_refused)
+        with pytest.raises(ConnectionError, match="attempts"):
+            c.transport._connect(1)
+        # teardown (and drop_node) dial the accept loop awake — restore
+        # the real dial before touching any serving loop
+        monkeypatch.undo()
+        # a dead (dropped) peer fails fast with a NAMED error, no dialing
+        c.transport.drop_node(1)
+        with pytest.raises(ConnectionError, match="no serving loop"):
+            c.transport._connect(1)
+    finally:
+        c.close()
+
+
+class _StuckThread:
+    """Stands in for a handler thread that never joins (no real thread is
+    leaked into the conftest fixture's enumerate check)."""
+    name = "fanstore-conn-stuck"
+
+    @staticmethod
+    def is_alive():
+        return True
+
+    @staticmethod
+    def join(timeout=None):
+        pass
+
+
+def test_node_server_teardown_names_stuck_threads():
+    from repro.fanstore.store import NodeStore
+    srv = _NodeServer(0, NodeStore(0), "127.0.0.1", join_timeout_s=0.2)
+    srv._threads.append(_StuckThread())
+    with pytest.raises(RuntimeError, match="fanstore-conn-stuck"):
+        srv.close()
+
+
+def test_socket_backend_close_surfaces_stuck_teardown():
+    c, files = build(nodes=2, replication=1, backend="socket")
+    closed = False
+    try:
+        c.start()
+        c.transport._servers[1]._threads.append(_StuckThread())
+        with pytest.raises(RuntimeError, match="failed to join"):
+            c.close()
+        closed = True
+    finally:
+        if not closed:
+            c.close()
