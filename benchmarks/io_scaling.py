@@ -1181,6 +1181,13 @@ def bench_json(*, nodes_list=(8, 64), smoke: bool = False) -> Dict:
     # finish via replica failover, retry ledger == injected faults,
     # bounded makespan inflation) with the R=1 classified-loss control
     results["failover"] = failover_comparison(smoke=smoke)
+    # the serving-plane block: 64 read-mostly tenants on 8 nodes replaying
+    # a zipfian shard trace through admission-gated tenant sessions —
+    # hot-shard replication vs single-owner, per-tenant attribution
+    # tie-out, and the inflight-byte cap (benchmarks/app_throughput.py;
+    # smoke shrinks per-tenant request counts, never the tenant count)
+    from benchmarks.app_throughput import serving_comparison
+    results["serving"] = serving_comparison(smoke=smoke)
     return results
 
 

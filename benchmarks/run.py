@@ -25,8 +25,13 @@ throughput floor and wire-codec engagement truth), the
 scheduled-prefetch ratio is guarded), and the ``failover`` block (kill a
 node mid-epoch at R=2: zero failed reads via replica failover, retry
 ledger == injected faults, bounded degraded makespan, plus the R=1
-classified-NodeLostError control). ``--smoke`` shrinks it to the
-fast-lane CI variant (scripts/ci.sh fast).
+classified-NodeLostError control), and the ``serving`` block (64
+read-mostly tenants on 8 nodes replaying a zipfian shard trace through
+the admission-gated serving plane: hot-shard replication strictly beats
+single-owner makespan, per-tenant attribution ties out exactly, peak
+inflight respects ``max_inflight_bytes``, and the within-node fairness
+ratio stays under 2x). ``--smoke`` shrinks it to the fast-lane CI
+variant (scripts/ci.sh fast).
 """
 from __future__ import annotations
 
@@ -196,6 +201,39 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
     assert r1["error"] == "NodeLostError" and r1["lost_partitions"], (
         f"R=1 control did not surface a classified loss "
         f"(error={r1['error']}, lost={r1['lost_partitions']})")
+    # serving-plane guards: the multi-tenant zipfian trace must stay
+    # multi-tenant (>= 64 tenants, 8 nodes, smoke included), hot-shard
+    # replication must strictly beat single-owner makespan, per-tenant
+    # attribution must tie out exactly on both arms, the measured peak
+    # inflight must respect the admission cap, promotion must have
+    # actually fired, and the slowest co-located tenant stays within the
+    # 2x fairness bound of its node's mean
+    sv = result["serving"]
+    assert sv["tenants"] >= 64 and sv["nodes"] == 8, (
+        f"serving arm shrank below the multi-tenant claim "
+        f"({sv['tenants']} tenants, {sv['nodes']} nodes)")
+    ssv, rsv = sv["single"], sv["replicated"]
+    assert rsv["makespan_s"] < ssv["makespan_s"], (
+        f"hot-shard replication no longer beats single-owner serving "
+        f"({rsv['makespan_s']} vs {ssv['makespan_s']})")
+    assert ssv["attribution_ok"] and rsv["attribution_ok"], (
+        "per-tenant serving attribution no longer sums to the "
+        "serve-app lane totals")
+    assert rsv["promoted_partitions"], (
+        "serving arm promoted no hot shards — the popularity "
+        "threshold never tripped")
+    for arm_name, arm in (("single", ssv), ("replicated", rsv)):
+        assert 0 < arm["peak_inflight_bytes"] <= sv["max_inflight_bytes"], (
+            f"{arm_name} serving arm peak inflight "
+            f"({arm['peak_inflight_bytes']}) outside "
+            f"(0, {sv['max_inflight_bytes']}] — the admission gate is off")
+        assert arm["admission_shed"] == 0, (
+            f"{arm_name} serving arm shed requests under a queue that "
+            f"should absorb this trace")
+        assert arm["fairness_ratio"] <= 2.0, (
+            f"{arm_name} serving arm fairness ratio "
+            f"{arm['fairness_ratio']:.3f} exceeds the 2x bound — a "
+            f"zipf-head tenant is starving its node's tail")
     for entry in result["arms"]:
         w = entry["write"]
         print(f"io_json,nodes={entry['nodes']},"
@@ -237,6 +275,12 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
           f"injected={fd['injected']},retries={fd['retries']},"
           f"healed_copies={fd['healed_copies']},"
           f"r1_lost={len(r1['lost_partitions'])}", flush=True)
+    print(f"io_json,serving_tenants={sv['tenants']},"
+          f"serving_nodes={sv['nodes']},"
+          f"replication_speedup={sv['replication_speedup']:.2f},"
+          f"promoted={len(rsv['promoted_partitions'])},"
+          f"peak_inflight={rsv['peak_inflight_bytes']},"
+          f"fairness_ratio={rsv['fairness_ratio']:.3f}", flush=True)
     print(f"io_json,wrote={path}", flush=True)
 
 

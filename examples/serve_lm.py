@@ -4,6 +4,15 @@ Exercises every cache family by default (full KV, sliding-window + SSM via
 hymba, MLA latent via deepseek smoke config):
 
   PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b
+
+``--fanstore`` runs the serving-plane flow instead: a publisher streams
+the params AND a shared prompt-prefix KV cache into the FanStore output
+tier, then N inference tenants restore both through admission-gated
+:class:`~repro.fanstore.serving.TenantSession` reads on the concurrent
+serve-app lane (per-tenant attributed, hot shards auto-promoted to
+replicated placement) and decode from the restored state:
+
+  PYTHONPATH=src python examples/serve_lm.py --fanstore --tenants 8
 """
 import argparse
 import time
@@ -17,6 +26,72 @@ from repro.models import build_model
 from repro.serve.serve_step import generate, make_decode_step, make_prefill_step
 
 
+def run_fanstore(args) -> None:
+    """Publish params + a shared KV prefix once; serve them to N tenants
+    through the admission-gated serving plane."""
+    from repro.fanstore.cluster import FanStoreCluster
+    from repro.fanstore.serving import ServeGroup
+    from repro.fanstore.spec import ClusterSpec
+    from repro.train.checkpoint import restore_from_session, save_to_session
+
+    cfg = get_smoke(args.arch).scaled(remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompt = {"tokens": jnp.asarray(rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32))}
+    max_len = args.prompt_len + args.steps
+    prefill = jax.jit(make_prefill_step(model, max_len))
+    logits, caches = prefill(params, prompt)
+    # transport as float32 (npy shards); restored leaves cast back below
+    caches_f32 = jax.tree_util.tree_map(
+        lambda a: jnp.asarray(a, jnp.float32), caches)
+
+    # every tenant restores every shard, so a shard goes hot exactly when
+    # the last tenant reads it — the demo promotes on that final pass
+    spec = ClusterSpec(num_nodes=4, selector="power-of-two",
+                       max_inflight_bytes=16 << 20,
+                       hot_shard_threshold=args.tenants,
+                       hot_shard_replication=2)
+    with FanStoreCluster.from_spec(spec) as cluster:
+        publisher = cluster.connect(0, 0)
+        save_to_session(publisher, 0, params, prefix="params")
+        save_to_session(publisher, 0, caches_f32, prefix="kvprefix")
+        group = ServeGroup(cluster, args.tenants)
+        t0 = time.perf_counter()
+        t_params = t_caches = None
+        for tenant in group.tenants:
+            ts = group.session(tenant)    # gated, serve_app-lane session
+            t_params, _ = restore_from_session(ts, params, prefix="params")
+            t_caches, _ = restore_from_session(ts, caches_f32,
+                                               prefix="kvprefix")
+        dt = time.perf_counter() - t0
+        t_caches = jax.tree_util.tree_map(
+            lambda a, orig: jnp.asarray(a, orig.dtype), t_caches, caches)
+        # the last tenant decodes one step from the RESTORED state
+        decode = jax.jit(make_decode_step(model))
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        tok, _, _ = decode(t_params, nxt, t_caches,
+                           jnp.int32(args.prompt_len))
+        stats = group.stats()
+        per_tenant = stats["tenant_bytes"]
+        print(f"{args.arch}: published params + KV prefix, restored by "
+              f"{args.tenants} tenants in {dt:.2f}s")
+        print(f"serve_app bytes={stats['serve_app_bytes']} "
+              f"requests={stats['serve_app_requests']} "
+              f"peak_inflight={stats['peak_inflight_bytes']} "
+              f"waits={stats['waits']} shed={stats['shed']}")
+        print(f"promoted hot outputs: "
+              f"{len(stats['promoted_outputs'])} of "
+              f"{len(cluster.output_ns.paths())} shards; "
+              f"attribution ties out: {group.attribution_ok()}")
+        worst = max(per_tenant, key=per_tenant.get)
+        print(f"per-tenant bytes: min={min(per_tenant.values())} "
+              f"max={per_tenant[worst]} ({worst})")
+        print("decoded token sample from restored state:",
+              np.asarray(tok)[:4].tolist())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="hymba-1.5b", choices=ARCH_IDS)
@@ -24,7 +99,14 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--fanstore", action="store_true",
+                    help="serve params + KV prefix to N tenants through "
+                         "the FanStore serving plane")
+    ap.add_argument("--tenants", type=int, default=8)
     args = ap.parse_args()
+    if args.fanstore:
+        run_fanstore(args)
+        return
 
     cfg = get_smoke(args.arch).scaled(remat=False)
     model = build_model(cfg)

@@ -29,12 +29,18 @@ case "$lane" in
     # replica failover (zero client-visible errors at R=2, retry ledger
     # == injected faults), R=1 classified NodeLostError, membership churn
     # (mark_failed/mark_joined/heal), and socket dial-retry/teardown.
+    # ... plus the serving-plane suite: admission gate caps inflight
+    # bytes under a 16-thread storm, DRR keeps a backlogged zipf-head
+    # tenant from starving the tail, per-tenant attribution sums equal
+    # the serve-app lane totals exactly, and hot shards (partitions AND
+    # committed outputs) promote to replicated placement.
     python -m pytest -x -q tests/test_wire.py tests/test_backends.py \
-        tests/test_topology.py tests/test_faults.py
+        tests/test_topology.py tests/test_faults.py tests/test_serving.py
     python -m pytest -x -q -m "not slow" --ignore=tests/test_wire.py \
         --ignore=tests/test_backends.py \
         --ignore=tests/test_topology.py \
-        --ignore=tests/test_faults.py
+        --ignore=tests/test_faults.py \
+        --ignore=tests/test_serving.py
     # perf trajectory smoke: seed/batched/prefetched arms + cache policies
     # + the multi-tenant `workers` block (shared node tier strictly beats
     # private per-worker caches; attribution ledgers tie out) + the
@@ -48,9 +54,13 @@ case "$lane" in
     # ratio on the slow latency-bound fabric + the guarded `failover`
     # block (mid-epoch node kill at R=2: zero failed reads, retry ledger
     # == injected faults, bounded degraded makespan; R=1 control loses
-    # partitions with a classified error). Writes BENCH_io.json (uploaded
-    # as the bench-io artifact, `workers`, `measured.wire`,
-    # `prefetch_depth`, and `failover` blocks included).
+    # partitions with a classified error) + the guarded `serving` block
+    # (64 tenants on 8 nodes over a zipfian trace: hot-shard replication
+    # strictly beats single-owner makespan, attribution ties out, peak
+    # inflight <= max_inflight_bytes, within-node fairness <= 2x).
+    # Writes BENCH_io.json (uploaded as the bench-io artifact, `workers`,
+    # `measured.wire`, `prefetch_depth`, `failover`, and `serving`
+    # blocks included).
     python benchmarks/run.py --only io-json --io-json BENCH_io.json --smoke
     ;;
   full)

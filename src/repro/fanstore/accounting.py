@@ -72,6 +72,23 @@ class NodeClock:
     # same makespan the healthy run is measured by.
     retries: int = 0
     retry_s: float = 0.0
+    # serve-app lane: read-mostly SERVING tenants (inference replicas,
+    # param/KV streaming — repro.fanstore.serving) issuing reads through
+    # this node. Like prefetch and write it is a concurrent timeline: a
+    # node co-hosting a trainer and N serving tenants models
+    # max(consume, serve_app, ...), not the sum. Every accrual carries a
+    # tenant id, so the per-tenant breakdown below sums to these totals
+    # by construction (same contract as the worker cache attribution).
+    serve_app_s: float = 0.0
+    serve_app_bytes: int = 0
+    serve_app_requests: int = 0
+    # per-tenant attribution of the serve-app lane: bytes / requests /
+    # modeled seconds per tenant id. Sums equal the lane totals above by
+    # construction (every accrual goes through attribute_tenant under
+    # the transport lock; pinned in tests and the BENCH serving guard).
+    tenant_bytes: Dict[str, int] = field(default_factory=dict)
+    tenant_requests: Dict[str, int] = field(default_factory=dict)
+    tenant_serve_s: Dict[str, float] = field(default_factory=dict)
     # client-side read cache (repro.fanstore.cache), surfaced here so one
     # object answers "what did this node's I/O look like"
     cache_hits: int = 0
@@ -103,15 +120,31 @@ class NodeClock:
             self.worker_cache_misses[worker_id] = \
                 self.worker_cache_misses.get(worker_id, 0) + 1
 
+    def attribute_tenant(self, tenant: str, *, nbytes: int = 0,
+                         cost_s: float = 0.0, requests: int = 0) -> None:
+        """Book one serve-app accrual onto BOTH the lane totals and the
+        tenant's attribution row (call under the transport lock). This is
+        the only writer of the serve-app lane, so per-tenant sums equal
+        the totals by construction."""
+        self.serve_app_s += cost_s
+        self.serve_app_bytes += nbytes
+        self.serve_app_requests += requests
+        self.tenant_bytes[tenant] = \
+            self.tenant_bytes.get(tenant, 0) + nbytes
+        self.tenant_requests[tenant] = \
+            self.tenant_requests.get(tenant, 0) + requests
+        self.tenant_serve_s[tenant] = \
+            self.tenant_serve_s.get(tenant, 0.0) + cost_s
+
     @property
     def busy_s(self) -> float:
-        # consumption, service, scheduled prefetch, and batched writes
-        # contend for the same NIC/cores but run on separate threads; a
-        # node's makespan is at least each and at most the sum — use max
-        # (full overlap) as the optimistic bound the paper's threaded
-        # workers approach.
+        # consumption, service, scheduled prefetch, batched writes, and
+        # serving-tenant reads contend for the same NIC/cores but run on
+        # separate threads; a node's makespan is at least each and at
+        # most the sum — use max (full overlap) as the optimistic bound
+        # the paper's threaded workers approach.
         return max(self.consume_s, self.serve_s, self.prefetch_s,
-                   self.write_s)
+                   self.write_s, self.serve_app_s)
 
     @property
     def cache_hit_rate(self) -> float:
@@ -123,14 +156,16 @@ class NodeClock:
 class WallClock:
     """Per-node MEASURED timeline: real nanoseconds spent moving bytes.
 
-    Lanes mirror ``NodeClock`` (consume / serve / prefetch / write) so the
-    two ledgers line up column-for-column; values are wall-clock activity
-    totals recorded by the real-wire backends around every transfer.
+    Lanes mirror ``NodeClock`` (consume / serve / prefetch / write /
+    serve_app) so the two ledgers line up column-for-column; values are
+    wall-clock activity totals recorded by the real-wire backends around
+    every transfer.
     """
     consume_ns: int = 0
     serve_ns: int = 0
     prefetch_ns: int = 0
     write_ns: int = 0
+    serve_app_ns: int = 0
     bytes_in: int = 0
     bytes_out: int = 0
     requests: int = 0
@@ -166,6 +201,8 @@ class WallClock:
             self.write_ns += dt_ns
         elif lane == "serve":
             self.serve_ns += dt_ns
+        elif lane == "serve_app":
+            self.serve_app_ns += dt_ns
         else:
             self.consume_ns += dt_ns
 
@@ -174,13 +211,13 @@ class WallClock:
         # same optimistic-overlap bound as NodeClock.busy_s: the lanes run
         # on separate threads, so a node is busy at least max() of them
         return max(self.consume_ns, self.serve_ns, self.prefetch_ns,
-                   self.write_ns) / 1e9
+                   self.write_ns, self.serve_app_ns) / 1e9
 
     @property
     def total_s(self) -> float:
         """Serialized (no-overlap) bound: the sum of every lane."""
         return (self.consume_ns + self.serve_ns + self.prefetch_ns
-                + self.write_ns) / 1e9
+                + self.write_ns + self.serve_app_ns) / 1e9
 
 
 class ClusterAccounting:
@@ -257,6 +294,39 @@ class ClusterAccounting:
 
     def write_rpcs(self) -> int:
         return sum(c.write_rpcs for c in self.clocks.values())
+
+    # ---- serving plane (repro.fanstore.serving) ----------------------------
+    def serve_app_bytes(self) -> int:
+        """Cluster-wide bytes read on the serve-app lane."""
+        return sum(c.serve_app_bytes for c in self.clocks.values())
+
+    def serve_app_requests(self) -> int:
+        return sum(c.serve_app_requests for c in self.clocks.values())
+
+    def tenant_bytes(self) -> Dict[str, int]:
+        """Per-tenant bytes merged across nodes; values sum to
+        :meth:`serve_app_bytes` by construction."""
+        out: Dict[str, int] = {}
+        for c in self.clocks.values():
+            for t, n in c.tenant_bytes.items():
+                out[t] = out.get(t, 0) + n
+        return out
+
+    def tenant_requests(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for c in self.clocks.values():
+            for t, n in c.tenant_requests.items():
+                out[t] = out.get(t, 0) + n
+        return out
+
+    def tenant_serve_s(self) -> Dict[str, float]:
+        """Per-tenant modeled serve-app seconds merged across nodes —
+        the fairness metric the serving BENCH block bounds."""
+        out: Dict[str, float] = {}
+        for c in self.clocks.values():
+            for t, s in c.tenant_serve_s.items():
+                out[t] = out.get(t, 0.0) + s
+        return out
 
     def retries(self) -> int:
         """Cluster-wide failover retry count (modeled ledger)."""

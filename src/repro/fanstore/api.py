@@ -141,7 +141,8 @@ class FanStoreSession:
 
     def __init__(self, cluster: FanStoreCluster, node_id: int, *,
                  worker_id: int = 0, mount: str = MOUNT,
-                 lane: str = "write"):
+                 lane: str = "write", read_lane: str = "consume",
+                 tenant: Optional[str] = None):
         self.cluster = cluster
         self.context = WorkerContext(node_id, worker_id)
         # direct construction must reject out-of-range coordinates just
@@ -156,6 +157,13 @@ class FanStoreSession:
         self.worker_id = worker_id
         self.mount = mount.rstrip("/")
         self.lane = lane
+        # tenant-aware read routing (the serving plane): read_lane
+        # "serve_app" books every read onto the concurrent serving
+        # timeline attributed to `tenant` — cluster.connect(node, worker,
+        # read_lane="serve_app", tenant="t-003") is how ServeGroup opens
+        # its tenant sessions
+        self.read_lane = read_lane
+        self.tenant = tenant
         self._fds: Dict[int, _OpenFile] = {}
         self._next_fd = FD_BASE
         self._lock = threading.Lock()
@@ -217,7 +225,8 @@ class FanStoreSession:
             self.cluster.write_begin(self.node_id, rel)
             return self._alloc(_OpenFile(rel, True, self.lane))
         data = self.cluster.read(self.node_id, rel,
-                                 worker_id=self.worker_id)
+                                 worker_id=self.worker_id,
+                                 lane=self.read_lane, tenant=self.tenant)
         return self._alloc(_OpenFile(rel, False, self.lane, data=data))
 
     def close(self, fd: int) -> Optional[StatRecord]:
@@ -379,16 +388,20 @@ class FanStoreSession:
     def read_many(self, paths: Sequence[str], *,
                   materialize: bool = True) -> List[bytes]:
         """Batched whole-file reads: one modeled round trip per (this node,
-        owner) pair instead of one per file."""
+        owner) pair instead of one per file. A serving session
+        (``read_lane="serve_app"``) books the cost onto the concurrent
+        serving timeline, attributed to its tenant."""
         return self.cluster.read_many(
             self.node_id, [self.resolve(p) for p in paths],
-            worker_id=self.worker_id, materialize=materialize)
+            worker_id=self.worker_id, materialize=materialize,
+            lane=self.read_lane, tenant=self.tenant)
 
     def read_many_async(self, paths: Sequence[str], *,
                         materialize: bool = True) -> "Future[List[bytes]]":
         return self.cluster.read_many_async(
             self.node_id, [self.resolve(p) for p in paths],
-            worker_id=self.worker_id, materialize=materialize)
+            worker_id=self.worker_id, materialize=materialize,
+            lane=self.read_lane, tenant=self.tenant)
 
     def write_many(self, entries: Sequence[Tuple[str, bytes]], *,
                    batched: bool = True) -> List[StatRecord]:

@@ -247,52 +247,69 @@ class TransportBackend:
 
     # ---- local tier --------------------------------------------------------
     def fetch_local(self, node_id: int, item: FetchItem, *,
-                    materialize: bool = True) -> bytes:
-        """Read a file the requesting node already holds (SSD tier)."""
+                    materialize: bool = True, lane: str = "consume",
+                    tenant: Optional[str] = None) -> bytes:
+        """Read a file the requesting node already holds (SSD tier).
+
+        ``lane="serve_app"`` books the cost onto the concurrent serving
+        lane (attributed to ``tenant``) instead of ``consume_s`` — a
+        serving tenant's local read must not serialize into the trainer's
+        demand timeline."""
         node = self.nodes[node_id]
         if materialize:
             t0 = time.perf_counter_ns() if self.measured else 0
             data = node.open_local(item.path)
             node.release(item.path)
             if self.measured:
-                self._wall_accrue(node_id, "consume",
+                self._wall_accrue(node_id, lane,
                                   time.perf_counter_ns() - t0,
                                   bytes_in=len(data), requests=1)
         else:
             data = b""
         with self._lock:
             clock = self.clocks[node_id]
-            clock.consume_s += self.net.local_cost(item.size,
-                                                   compressed=item.compressed)
+            cost = self.net.local_cost(item.size,
+                                       compressed=item.compressed)
+            if lane == "serve_app":
+                clock.attribute_tenant(tenant or "anon", nbytes=item.size,
+                                       cost_s=cost, requests=1)
+            else:
+                clock.consume_s += cost
             clock.local_bytes += item.size
         return data
 
     # ---- remote tier -------------------------------------------------------
     def fetch_remote(self, requester: int, owner: int, item: FetchItem, *,
-                     materialize: bool = True) -> bytes:
+                     materialize: bool = True, lane: str = "consume",
+                     tenant: Optional[str] = None) -> bytes:
         """One synchronous round trip: one ``latency_s`` for one file."""
         data = self._timed_fetch(requester, owner, [item], materialize,
-                                 "fetch", "consume")[0]
+                                 "fetch", lane)[0]
         with self._lock:
-            self._account_remote(requester, owner, [item])
+            self._account_remote(requester, owner, [item], lane=lane,
+                                 tenant=tenant)
         return data
 
     def fetch_remote_batch(self, requester: int, owner: int,
                            items: Sequence[FetchItem], *,
-                           materialize: bool = True) -> List[bytes]:
+                           materialize: bool = True, lane: str = "consume",
+                           tenant: Optional[str] = None) -> List[bytes]:
         """Coalesced fetch: K files from one owner, ONE round-trip latency.
 
         The requester pays ``latency_s`` once for the whole group and the
         owner pays one request-handling ``open_overhead_s`` (one message,
         one scatter-gather over its already-open partition blobs); per-byte
         costs are unchanged. See ``_account_remote`` for the exact model.
+        ``lane="serve_app"`` routes the requester-side cost onto the
+        concurrent serving lane with per-``tenant`` attribution.
         """
         if not items:
             return []
         out = self._timed_fetch(requester, owner, items, materialize,
-                                "fetch_batch", "consume")
+                                "fetch_batch", lane)
         with self._lock:
-            self._account_remote(requester, owner, items, round_trips=1)
+            self._account_remote(requester, owner, items, round_trips=1,
+                                 lane=lane, tenant=tenant)
         return out
 
     def fetch_window(self, requester: int, owner: int,
@@ -372,7 +389,8 @@ class TransportBackend:
     def _account_remote(self, requester: int, owner: int,
                         items: Sequence[FetchItem], *,
                         round_trips: Optional[int] = None,
-                        lane: str = "consume") -> None:
+                        lane: str = "consume",
+                        tenant: Optional[str] = None) -> None:
         """Accrue modeled cost; ``round_trips`` defaults to one per item.
 
         With ``round_trips=1`` (batched) the requester pays one ``latency_s``
@@ -384,7 +402,10 @@ class TransportBackend:
 
         ``lane="prefetch"`` books the requester side onto the concurrent
         prefetch timeline (``prefetch_s`` + per-window ledger) instead of
-        ``consume_s``; the owner's serve side is lane-independent.
+        ``consume_s``; ``lane="serve_app"`` books it onto the concurrent
+        serving lane with per-``tenant`` attribution
+        (:meth:`NodeClock.attribute_tenant`). The owner's serve side is
+        lane-independent.
         """
         trips = len(items) if round_trips is None else round_trips
         stored = sum(it.stored for it in items)
@@ -399,6 +420,9 @@ class TransportBackend:
             clock.prefetch_windows += trips
             clock.prefetch_log.append(WindowAccount(
                 owner=owner, files=len(items), bytes=stored, cost_s=cost))
+        elif lane == "serve_app":
+            clock.attribute_tenant(tenant or "anon", nbytes=stored,
+                                   cost_s=cost, requests=trips)
         else:
             clock.consume_s += cost
             clock.bytes_in += stored
@@ -485,13 +509,21 @@ class TransportBackend:
 
     # ---- cache tier (accounting only; payload comes from the cache) --------
     def account_cache_hit(self, node_id: int, item: FetchItem, *,
-                          worker_id: int = 0) -> None:
+                          worker_id: int = 0, lane: str = "consume",
+                          tenant: Optional[str] = None) -> None:
         """A client-cache hit: RAM-speed consume cost on the node, plus
         per-worker attribution (co-located workers share the node tier,
-        so the breakdown is the only record of WHOSE read hit)."""
+        so the breakdown is the only record of WHOSE read hit). On the
+        serve-app lane the RAM cost lands on the concurrent serving
+        timeline and the bytes are attributed to ``tenant`` as well."""
         with self._lock:
             clock = self.clocks[node_id]
-            clock.consume_s += self.net.cache_cost(item.size)
+            cost = self.net.cache_cost(item.size)
+            if lane == "serve_app":
+                clock.attribute_tenant(tenant or "anon", nbytes=item.size,
+                                       cost_s=cost)
+            else:
+                clock.consume_s += cost
             clock.attribute_cache(worker_id, hit=True, nbytes=item.size)
 
     def account_cache_miss(self, node_id: int, *,
@@ -526,9 +558,11 @@ class TransportBackend:
 
     def fetch_remote_batch_async(self, requester: int, owner: int,
                                  items: Sequence[FetchItem], *,
-                                 materialize: bool = True) -> Future:
+                                 materialize: bool = True,
+                                 lane: str = "consume",
+                                 tenant: Optional[str] = None) -> Future:
         return self.submit(self.fetch_remote_batch, requester, owner, items,
-                           materialize=materialize)
+                           materialize=materialize, lane=lane, tenant=tenant)
 
     def fetch_window_async(self, requester: int, owner: int,
                            items: Sequence[FetchItem], *,

@@ -253,12 +253,14 @@ class RdmaBackend(TransportBackend):
     def _account_remote(self, requester: int, owner: int,
                         items: Sequence[FetchItem], *,
                         round_trips: Optional[int] = None,
-                        lane: str = "consume") -> None:
+                        lane: str = "consume",
+                        tenant: Optional[str] = None) -> None:
         """One-sided modeled cost: the requester pays a registration-table
         lookup per trip plus line-rate bytes (plus the universal
         requester-side decompress); the owner's serve lane accrues ZERO —
         only its ``bytes_out`` ledgers the bytes that left its memory.
-        Lane bookkeeping mirrors the base exactly."""
+        Lane bookkeeping mirrors the base exactly (including the
+        serve-app lane's per-tenant attribution)."""
         trips = len(items) if round_trips is None else round_trips
         stored = sum(it.stored for it in items)
         clock = self.clocks[requester]
@@ -273,6 +275,9 @@ class RdmaBackend(TransportBackend):
             clock.prefetch_windows += trips
             clock.prefetch_log.append(WindowAccount(
                 owner=owner, files=len(items), bytes=stored, cost_s=cost))
+        elif lane == "serve_app":
+            clock.attribute_tenant(tenant or "anon", nbytes=stored,
+                                   cost_s=cost, requests=trips)
         else:
             clock.consume_s += cost
             clock.bytes_in += stored

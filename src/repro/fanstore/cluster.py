@@ -179,7 +179,7 @@ class FanStoreCluster:
         """Open a per-worker session: the one client surface co-located
         workers share a node cache tier through. ``session_kwargs`` pass
         to :class:`repro.fanstore.api.FanStoreSession` (``mount=``,
-        ``lane=``)."""
+        ``lane=``, and the serving plane's ``read_lane=``/``tenant=``)."""
         ctx = WorkerContext(node_id, worker_id)
         if ctx.node_id not in self.nodes:
             raise ValueError(f"node_id {node_id} outside the "
@@ -360,11 +360,48 @@ class FanStoreCluster:
                     replicas=tuple(loc.replicas) + (dst,)))
         return len(blob)
 
+    def replicate_output(self, path: str, src: int, dst: int, *,
+                         lane: str = "write") -> int:
+        """Copy a committed output's payload from ``src`` onto ``dst``
+        through the write path (real wire cost on the concurrent write
+        lane), then extend its replica set so failover reads see the
+        restored copy immediately — the output-tier mirror of
+        :meth:`replicate_partition` (PR-7 left outputs single-owner).
+        Returns bytes shipped."""
+        path = path.strip("/")
+        hit = self.output_ns.lookup(path)
+        if hit is None:
+            raise FileNotFoundError(path)
+        st, loc = hit
+        if src == dst or dst in loc.all_owners:
+            return 0
+        payload = self.nodes[src].serve_remote(path)
+        item = FetchItem(path=path, size=len(payload), stored=len(payload))
+        self.transport.put_remote_batch(src, dst, [(item, payload)],
+                                        lane=lane, round_trips=1)
+        # the shipment staged the chunk under (src, path); installing it
+        # into dst's committed output tier is the local half of the copy
+        self.nodes[dst].commit_output(src, path)
+        with self._lock:
+            cur = self.output_ns.lookup(path)
+            if cur is None:          # unlinked while the copy was in flight
+                self.nodes[dst].drop_output(path)
+                return 0
+            st, loc = cur
+            if dst not in loc.all_owners:
+                self.output_ns.insert(path, st, FileLocation(
+                    node_id=loc.node_id, partition_id=loc.partition_id,
+                    record_index=loc.record_index,
+                    replicas=tuple(loc.replicas) + (dst,)))
+            self.output_meta[dst][path] = st
+        return len(payload)
+
     def heal(self, target_replication: Optional[int] = None) -> int:
         """Plan + execute one re-replication pass: restore every
-        under-replicated partition onto live nodes through the write path
-        (see :func:`repro.train.elastic.execute_rebalance`). Returns the
-        number of partition copies made."""
+        under-replicated partition AND committed output onto live nodes
+        through the write path (see
+        :func:`repro.train.elastic.execute_rebalance`). Returns the
+        number of copies made."""
         from repro.train.elastic import execute_rebalance, plan_rebalance
         if target_replication is None:
             target_replication = self.spec.replication
@@ -487,7 +524,8 @@ class FanStoreCluster:
     def _fetch_with_failover(self, requester: int, groups: Dict[
             int, List[Tuple[int, FetchItem, FileLocation]]], *,
             materialize: bool, batched: bool, window: bool,
-            on_data, lost_ok: bool) -> None:
+            on_data, lost_ok: bool, lane: str = "consume",
+            tenant: Optional[str] = None) -> None:
         """Drain an (owner -> [(slot, item, loc)]) worklist, classifying
         owner errors and retrying on the next live replica.
 
@@ -527,10 +565,12 @@ class FanStoreCluster:
                             requester, owner, items, materialize=materialize)
                     elif batched:
                         datas = self.transport.fetch_remote_batch(
-                            requester, owner, items, materialize=materialize)
+                            requester, owner, items, materialize=materialize,
+                            lane=lane, tenant=tenant)
                     else:
                         datas = [self.transport.fetch_remote(
-                            requester, owner, it, materialize=materialize)
+                            requester, owner, it, materialize=materialize,
+                            lane=lane, tenant=tenant)
                             for it in items]
                 except Exception as exc:
                     if not is_transport_failure(exc):
@@ -567,7 +607,8 @@ class FanStoreCluster:
             groups = regroup
 
     def read(self, requester: int, path: str, *, worker_id: int = 0,
-             materialize: bool = True) -> bytes:
+             materialize: bool = True, lane: str = "consume",
+             tenant: Optional[str] = None) -> bytes:
         """Whole-file read as the training process sees it (paper §3.4).
 
         ``materialize=False`` runs the identical placement + timeline
@@ -576,11 +617,13 @@ class FanStoreCluster:
         spend their wall time in host memcpy instead of the modeled fabric.
         """
         return self.read_many(requester, [path], worker_id=worker_id,
-                              materialize=materialize, batched=False)[0]
+                              materialize=materialize, batched=False,
+                              lane=lane, tenant=tenant)[0]
 
     def read_many(self, requester: int, paths: Sequence[str], *,
                   worker_id: int = 0, materialize: bool = True,
-                  batched: bool = True) -> List[bytes]:
+                  batched: bool = True, lane: str = "consume",
+                  tenant: Optional[str] = None) -> List[bytes]:
         """Batched read: all remote requests for one owner ride ONE round trip.
 
         ``batched=False`` degrades to per-file round trips (the paper's
@@ -590,6 +633,12 @@ class FanStoreCluster:
         the requester node's co-located workers is reading: the node's
         shared cache tier serves them all, with per-worker hit/miss
         attribution (modeled costs are worker-independent by contract).
+
+        ``lane="serve_app"`` is the tenant-aware read verb the serving
+        plane (:mod:`repro.fanstore.serving`) drives: every cost lands on
+        the concurrent ``NodeClock.serve_app_s`` timeline attributed to
+        ``tenant``, so hundreds of read-mostly serving tenants overlap —
+        rather than serialize into — the trainer's demand lane.
         """
         if requester in self.failed:
             raise IOError(f"node {requester} is failed")
@@ -610,7 +659,8 @@ class FanStoreCluster:
                                  require_data=materialize)
                 if entry is not None:
                     self.transport.account_cache_hit(requester, item,
-                                                     worker_id=worker_id)
+                                                     worker_id=worker_id,
+                                                     lane=lane, tenant=tenant)
                     out[i] = entry.data if materialize else b""
                     continue
                 self.transport.account_cache_miss(requester,
@@ -618,7 +668,8 @@ class FanStoreCluster:
             if self.nodes[requester].has(path) or \
                     self.nodes[requester].has_output(path):
                 data = self.transport.fetch_local(requester, item,
-                                                  materialize=materialize)
+                                                  materialize=materialize,
+                                                  lane=lane, tenant=tenant)
                 out[i] = data
                 if tier.enabled:
                     ev = tier.put(path, data if materialize else None,
@@ -640,16 +691,18 @@ class FanStoreCluster:
         self._fetch_with_failover(requester, groups,
                                   materialize=materialize, batched=batched,
                                   window=False, on_data=deliver,
-                                  lost_ok=False)
+                                  lost_ok=False, lane=lane, tenant=tenant)
         return out  # type: ignore[return-value]
 
     def read_many_async(self, requester: int, paths: Sequence[str], *,
-                        worker_id: int = 0, materialize: bool = True
+                        worker_id: int = 0, materialize: bool = True,
+                        lane: str = "consume", tenant: Optional[str] = None
                         ) -> "Future[List[bytes]]":
         """Batched read on the transport's I/O pool; returns a Future."""
         return self.transport.submit(self.read_many, requester, list(paths),
                                      worker_id=worker_id,
-                                     materialize=materialize)
+                                     materialize=materialize,
+                                     lane=lane, tenant=tenant)
 
     # ---- scheduled prefetch (repro.fanstore.prefetch drives this) ----------
     def prefetch_window(self, requester: int, paths: Sequence[str], *,
@@ -953,10 +1006,14 @@ class FanStoreCluster:
             if hit is None:
                 raise FileNotFoundError(path)
             st, loc = hit
-            owner = loc.node_id
-            self.nodes[owner].drop_output(path)
+            # replicated outputs (heal / hot promotion) hold the payload
+            # on every owner — the unlink must reclaim all of them, or a
+            # rewrite of the freed name could read a stale replica
+            for owner in loc.all_owners:
+                if owner in self.nodes:
+                    self.nodes[owner].drop_output(path)
+                    self.output_meta[owner].pop(path, None)
             self.output_ns.remove(path)
-            self.output_meta[owner].pop(path, None)
             # a reader may hold the dead payload in its client cache; a
             # rewrite of the freed name must never serve the old bytes
             for tier in self.cache_tiers.values():

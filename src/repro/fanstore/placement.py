@@ -187,6 +187,51 @@ class PowerOfTwoSelector:
         return min((a, b), key=lambda o: (load.get(o, 0.0), o))
 
 
+class ShardPopularity:
+    """Online read-popularity counter over partition ids — the hot-shard
+    detector the serving plane (:mod:`repro.fanstore.serving`) promotes
+    replicated placement from.
+
+    Thread-safe: serving tenants note reads from many threads. ``hot()``
+    answers "which partitions have crossed the promotion threshold",
+    hottest first, so the promoter replicates the worst offender before
+    the merely warm ones."""
+
+    def __init__(self) -> None:
+        self._counts: dict = {}
+        self._total = 0
+        self._lock = threading.Lock()
+
+    def note(self, partition_id: int, n: int = 1) -> None:
+        with self._lock:
+            self._counts[partition_id] = \
+                self._counts.get(partition_id, 0) + n
+            self._total += n
+
+    def count(self, partition_id: int) -> int:
+        with self._lock:
+            return self._counts.get(partition_id, 0)
+
+    @property
+    def total(self) -> int:
+        with self._lock:
+            return self._total
+
+    def hot(self, *, min_reads: int) -> List[int]:
+        """Partitions with at least ``min_reads`` noted reads, hottest
+        first (ties broken by id for determinism)."""
+        if min_reads < 1:
+            raise ValueError("min_reads must be >= 1")
+        with self._lock:
+            return [pid for pid, c in sorted(self._counts.items(),
+                                             key=lambda kv: (-kv[1], kv[0]))
+                    if c >= min_reads]
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return dict(self._counts)
+
+
 #: registry for :class:`repro.fanstore.spec.ClusterSpec` — selector by name
 SELECTORS = ("least-loaded", "power-of-two")
 

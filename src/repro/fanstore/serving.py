@@ -1,0 +1,505 @@
+"""Serving plane: multi-tenant read-mostly sessions over the engine.
+
+Everything through PR 7 drives ONE training job; the ROADMAP's north star
+is a production system serving heavy read traffic from many concurrent
+clients. This module opens the engine to that workload: hundreds of
+inference replicas ("tenants") per node streaming param / KV shards
+through ``FanStoreSession.read_many`` on the concurrent
+``NodeClock.serve_app_s`` lane, governed by three mechanisms a shared
+store needs before it can take public traffic:
+
+* **Admission control** — :class:`AdmissionGate`, one per node: a
+  ``max_inflight_bytes`` byte gate that QUEUES new requests when the
+  node's wire is saturated and SHEDS them (:class:`AdmissionShed`) when
+  the queue itself is full, instead of oversubscribing the fabric. The
+  same backpressure idea as the prefetch scheduler's inflight cap
+  (PR 2), promoted to a multi-client gate.
+
+* **Fairness** — queued requests release in deficit-round-robin order:
+  every backlogged tenant accrues a byte quantum per scheduling round
+  and admits requests against its deficit, so a zipf-head tenant
+  pushing 10x the tail's load gets 10x the QUEUE time, not 10x the
+  service share. Per-tenant byte/request/time attribution lands on
+  ``NodeClock.tenant_*`` (sums tie out to the serve-app lane totals by
+  construction, like PR 5's worker cache attribution).
+
+* **Hot-shard replication** — :class:`placement.ShardPopularity` counts
+  reads per partition online; when one crosses
+  ``hot_shard_threshold`` reads the :class:`ServeGroup` promotes it to
+  replicated placement through PR 7's ``cluster.replicate_partition``
+  (write-lane wire cost, metadata replica-set extension) and subsequent
+  reads spread over the replicas via the cluster's selector —
+  ``selector="power-of-two"`` on the spec is the intended pairing
+  (sample two owners, serve from the lighter).
+
+Knob defaults come from the :class:`~repro.fanstore.spec.ClusterSpec`
+serving fields (``max_inflight_bytes`` / ``serve_queue_depth`` /
+``serve_quantum_bytes`` / ``hot_shard_threshold`` /
+``hot_shard_replication``); ``ServeGroup`` kwargs override per group.
+
+Hoard (PAPERS.md) is the closest prior shape — a shared node cache tier
+absorbing many concurrent readers; FalconFS motivates keeping the
+metadata path cheap as client count explodes (tenant sessions here add
+zero metadata state: they are coordinates plus a ledger key).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from concurrent.futures import Future
+from typing import Deque, Dict, List, Optional, Sequence
+
+from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.placement import ShardPopularity, make_selector
+
+__all__ = ["AdmissionShed", "AdmissionGate", "TenantSession", "ServeGroup"]
+
+
+class AdmissionShed(RuntimeError):
+    """The admission gate refused a request instead of queueing it:
+    either the per-node queue is at ``queue_depth`` (the node is beyond
+    saturated — callers should back off / retry elsewhere) or a single
+    request exceeds ``max_inflight_bytes`` outright (it could never be
+    admitted and would deadlock the queue)."""
+
+
+class _Ticket:
+    """One queued admission request (internal)."""
+
+    __slots__ = ("tenant", "nbytes", "admitted", "event")
+
+    def __init__(self, tenant: str, nbytes: int):
+        self.tenant = tenant
+        self.nbytes = nbytes
+        self.admitted = False
+        self.event = threading.Event()
+
+
+class AdmissionGate:
+    """Per-node ``max_inflight_bytes`` gate with deficit-round-robin
+    release order.
+
+    ``acquire(tenant, nbytes)`` admits immediately while the node's
+    inflight budget covers the request, blocks the caller while it does
+    not, and raises :class:`AdmissionShed` when the queue is full. Every
+    ``release(nbytes)`` pumps the queue: backlogged tenants are visited
+    round-robin, each visit tops up the tenant's byte deficit by
+    ``quantum_bytes``, and its head request admits once the deficit
+    covers it AND the budget fits it — classic DRR, so service share
+    under contention is per-tenant, not per-request (a zipf-head tenant
+    cannot starve the tail by queueing more).
+
+    ``max_inflight_bytes=None`` (or 0 via the spec) disables the cap:
+    every request admits immediately, but the inflight/peak ledger is
+    still kept so benchmarks can report actual concurrency.
+
+    The deterministic test surface: :meth:`submit` enqueues without
+    blocking and returns the ticket; tests drive :meth:`release` and
+    assert on admission order. ``acquire`` is submit + wait.
+    """
+
+    def __init__(self, max_inflight_bytes: Optional[int], *,
+                 quantum_bytes: int = 1 << 20, queue_depth: int = 1024):
+        if max_inflight_bytes is not None and max_inflight_bytes <= 0:
+            max_inflight_bytes = None
+        self.max_inflight_bytes = max_inflight_bytes
+        self.quantum_bytes = max(1, int(quantum_bytes))
+        self.queue_depth = max(1, int(queue_depth))
+        self._lock = threading.Lock()
+        self._queues: Dict[str, Deque[_Ticket]] = {}
+        self._ring: Deque[str] = deque()
+        self._deficit: Dict[str, int] = {}
+        self._queued = 0
+        # ledger (read under the lock via stats())
+        self.inflight_bytes = 0
+        self.peak_inflight_bytes = 0
+        self.admitted = 0
+        self.waits = 0          # acquires that had to queue
+        self.shed = 0
+        self.queued_peak = 0
+
+    def _fits(self, nbytes: int) -> bool:
+        return self.max_inflight_bytes is None or \
+            self.inflight_bytes + nbytes <= self.max_inflight_bytes
+
+    def _admit(self, ticket: _Ticket) -> None:
+        self.inflight_bytes += ticket.nbytes
+        self.peak_inflight_bytes = max(self.peak_inflight_bytes,
+                                       self.inflight_bytes)
+        self.admitted += 1
+        ticket.admitted = True
+        ticket.event.set()
+
+    def _pump(self) -> None:
+        """Admit every queued request the budget and deficits allow
+        (call under the lock). One DRR round per pass over the ring;
+        stops when the head-of-ring request no longer fits the budget —
+        WITHOUT accruing that tenant's quantum, and without rotating, so
+        the next ``release`` resumes at the same tenant. Deficit only
+        accrues on visits where the budget could serve the tenant:
+        otherwise a backlogged tenant banks unbounded deficit while the
+        gate is full and drains it all ahead of everyone else once bytes
+        free up (the starvation DRR exists to prevent)."""
+        progressed = True
+        while progressed and self._ring:
+            progressed = False
+            for _ in range(len(self._ring)):
+                tenant = self._ring[0]
+                q = self._queues.get(tenant)
+                if not q:
+                    # drained tenant leaves the ring; its unused deficit
+                    # dies with it (standard DRR — no banking across
+                    # idle periods)
+                    self._ring.popleft()
+                    self._queues.pop(tenant, None)
+                    self._deficit.pop(tenant, None)
+                    progressed = True
+                    continue
+                if not self._fits(q[0].nbytes):
+                    return                # budget-bound: wait for release
+                self._deficit[tenant] = \
+                    self._deficit.get(tenant, 0) + self.quantum_bytes
+                while q and self._deficit[tenant] >= q[0].nbytes:
+                    if not self._fits(q[0].nbytes):
+                        break             # spent the freed budget
+                    ticket = q.popleft()
+                    self._queued -= 1
+                    self._deficit[tenant] -= ticket.nbytes
+                    self._admit(ticket)
+                    progressed = True
+                self._ring.rotate(-1)
+
+    def submit(self, tenant: str, nbytes: int) -> _Ticket:
+        """Enqueue one admission request without blocking; the returned
+        ticket's ``event`` fires when it admits. Raises
+        :class:`AdmissionShed` on a full queue or an unserviceable
+        (over-budget) request."""
+        nbytes = max(0, int(nbytes))
+        ticket = _Ticket(tenant, nbytes)
+        with self._lock:
+            if self.max_inflight_bytes is not None \
+                    and nbytes > self.max_inflight_bytes:
+                self.shed += 1
+                raise AdmissionShed(
+                    f"request of {nbytes} bytes exceeds max_inflight_bytes="
+                    f"{self.max_inflight_bytes} (tenant {tenant})")
+            # fast path: idle queue + budget headroom -> admit in place
+            if not self._queued and self._fits(nbytes):
+                self._admit(ticket)
+                return ticket
+            if self._queued >= self.queue_depth:
+                self.shed += 1
+                raise AdmissionShed(
+                    f"admission queue full ({self.queue_depth} deep); "
+                    f"shedding tenant {tenant}")
+            self.waits += 1
+            if tenant not in self._queues:
+                self._queues[tenant] = deque()
+                self._ring.append(tenant)
+            self._queues[tenant].append(ticket)
+            self._queued += 1
+            self.queued_peak = max(self.queued_peak, self._queued)
+            self._pump()
+        return ticket
+
+    def acquire(self, tenant: str, nbytes: int,
+                timeout: Optional[float] = None) -> None:
+        """Block until ``nbytes`` are admitted under the gate (or raise
+        :class:`AdmissionShed`). ``timeout`` bounds the wait; on timeout
+        the request counts as shed."""
+        ticket = self.submit(tenant, nbytes)
+        if ticket.event.wait(timeout):
+            return
+        with self._lock:
+            if ticket.admitted:        # admitted as the wait expired
+                return
+            self._queues[tenant].remove(ticket)
+            self._queued -= 1
+            self.shed += 1
+        raise AdmissionShed(
+            f"tenant {tenant} timed out awaiting {nbytes} bytes")
+
+    def release(self, nbytes: int) -> None:
+        """Return ``nbytes`` of budget and admit what now fits."""
+        with self._lock:
+            self.inflight_bytes = max(0, self.inflight_bytes - int(nbytes))
+            self._pump()
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "max_inflight_bytes": self.max_inflight_bytes or 0,
+                "inflight_bytes": self.inflight_bytes,
+                "peak_inflight_bytes": self.peak_inflight_bytes,
+                "admitted": self.admitted,
+                "waits": self.waits,
+                "shed": self.shed,
+                "queued": self._queued,
+                "queued_peak": self.queued_peak,
+            }
+
+
+class TenantSession:
+    """One tenant's read-mostly handle: a :class:`FanStoreSession` bound
+    to (node, worker) with ``read_lane="serve_app"`` + the tenant id,
+    fronted by the node's admission gate and the group's hot-shard
+    tracker. Non-read verbs (``exists``/``listdir``/``stat``/...)
+    delegate untouched, so pytree restore helpers
+    (``repro.train.checkpoint.restore_from_session``) work on a tenant
+    session unmodified — params and KV shards stream through the gated
+    serve-app lane."""
+
+    def __init__(self, group: "ServeGroup", tenant: str, session):
+        self.group = group
+        self.tenant = tenant
+        self.session = session
+        self.node_id = session.node_id
+
+    def read_many(self, paths: Sequence[str], *,
+                  materialize: bool = True) -> List[bytes]:
+        """Gated batched read on the serve-app lane: admission is sized
+        by the batch's metadata byte total BEFORE any payload moves, so
+        a saturated node queues (or sheds) the request instead of
+        oversubscribing its wire."""
+        return self.group._gated_read(self, paths, materialize=materialize)
+
+    def read_many_async(self, paths: Sequence[str], *,
+                        materialize: bool = True) -> "Future[List[bytes]]":
+        """Gated read on the transport's I/O pool (the gate blocks the
+        pool thread, not the caller)."""
+        return self.group.cluster.transport.submit(
+            self.read_many, list(paths), materialize=materialize)
+
+    def __getattr__(self, name):
+        # everything that is not a gated read (exists/listdir/stat/
+        # resolve/open/...) is the plain session surface
+        return getattr(self.session, name)
+
+
+class ServeGroup:
+    """The serving plane over one cluster: opens ``num_tenants``
+    read-mostly tenant sessions spread round-robin across the live
+    nodes, gates their admissions per node, attributes every byte per
+    tenant, and promotes hot shards to replicated placement.
+
+    >>> spec = ClusterSpec(num_nodes=8, selector="power-of-two",
+    ...                    max_inflight_bytes=4 << 20,
+    ...                    hot_shard_threshold=64)
+    >>> with FanStoreCluster.from_spec(spec) as cluster:
+    ...     group = ServeGroup(cluster, num_tenants=128)
+    ...     data = group.read_many("tenant-0007", shard_paths)
+
+    Thread-safe end to end: tenants are expected to call in from many
+    threads (or via :meth:`submit` on the transport pool).
+    """
+
+    def __init__(self, cluster: FanStoreCluster, num_tenants: int, *,
+                 worker_id: int = 0,
+                 max_inflight_bytes: Optional[int] = None,
+                 quantum_bytes: Optional[int] = None,
+                 queue_depth: Optional[int] = None,
+                 hot_shard_threshold: Optional[int] = None,
+                 hot_shard_replication: Optional[int] = None,
+                 selector: Optional[str] = None):
+        if num_tenants < 1:
+            raise ValueError("num_tenants must be >= 1")
+        spec = cluster.spec
+        self.cluster = cluster
+        if max_inflight_bytes is None:
+            max_inflight_bytes = spec.max_inflight_bytes
+        self.max_inflight_bytes = max_inflight_bytes or 0
+        quantum = quantum_bytes or spec.serve_quantum_bytes
+        depth = queue_depth or spec.serve_queue_depth
+        self.hot_shard_threshold = spec.hot_shard_threshold \
+            if hot_shard_threshold is None else hot_shard_threshold
+        self.hot_shard_replication = spec.hot_shard_replication \
+            if hot_shard_replication is None else hot_shard_replication
+        if self.hot_shard_threshold > 0 \
+                and self.hot_shard_replication > cluster.num_nodes:
+            raise ValueError(
+                f"hot_shard_replication={self.hot_shard_replication} "
+                f"exceeds the {cluster.num_nodes}-node topology")
+        if selector is not None:
+            # the power-of-two pairing: promotion only pays off when
+            # reads actually spread over the new replicas
+            cluster.selector = make_selector(selector)
+        live = cluster.live_nodes()
+        if not live:
+            raise RuntimeError("no live nodes to serve from")
+        self.gates: Dict[int, AdmissionGate] = {
+            n: AdmissionGate(self.max_inflight_bytes or None,
+                             quantum_bytes=quantum, queue_depth=depth)
+            for n in cluster.nodes}
+        self.popularity = ShardPopularity()
+        # output files have no partition id; their heat is tracked by
+        # path and promoted through cluster.replicate_output instead
+        self.output_popularity = ShardPopularity()
+        self.promoted: List[int] = []
+        self.promoted_outputs: List[str] = []
+        self._promo_lock = threading.Lock()
+        self._sessions: Dict[str, TenantSession] = {}
+        for i in range(num_tenants):
+            tenant = f"tenant-{i:04d}"
+            node = live[i % len(live)]
+            raw = cluster.connect(node, worker_id, read_lane="serve_app",
+                                  tenant=tenant)
+            self._sessions[tenant] = TenantSession(self, tenant, raw)
+
+    # ---- tenant surface ----------------------------------------------------
+    @property
+    def tenants(self) -> List[str]:
+        return sorted(self._sessions)
+
+    def session(self, tenant: str) -> TenantSession:
+        try:
+            return self._sessions[tenant]
+        except KeyError:
+            raise KeyError(f"unknown tenant {tenant!r} "
+                           f"(group has {len(self._sessions)})") from None
+
+    def read_many(self, tenant: str, paths: Sequence[str], *,
+                  materialize: bool = True) -> List[bytes]:
+        return self.session(tenant).read_many(paths, materialize=materialize)
+
+    def submit(self, tenant: str, paths: Sequence[str], *,
+               materialize: bool = True) -> "Future[List[bytes]]":
+        return self.session(tenant).read_many_async(
+            paths, materialize=materialize)
+
+    # ---- the gated read path ----------------------------------------------
+    def _gated_read(self, ts: TenantSession, paths: Sequence[str], *,
+                    materialize: bool) -> List[bytes]:
+        session = ts.session
+        resolved = [session.resolve(p) for p in paths]
+        nbytes = 0
+        pids: List[int] = []
+        outs: List[str] = []
+        for path in resolved:
+            st, loc = self.cluster._lookup(path)
+            nbytes += st.st_size
+            if loc.partition_id >= 0:
+                pids.append(loc.partition_id)
+            else:
+                outs.append(path)            # committed output: heat by path
+        gate = self.gates[ts.node_id]
+        gate.acquire(ts.tenant, nbytes)
+        try:
+            out = self.cluster.read_many(
+                ts.node_id, resolved, worker_id=session.worker_id,
+                materialize=materialize, lane="serve_app", tenant=ts.tenant)
+        finally:
+            gate.release(nbytes)
+        for pid in pids:
+            self.popularity.note(pid)
+        for path in outs:
+            self.output_popularity.note(path)
+        if self.hot_shard_threshold > 0:
+            self._maybe_promote()
+        return out
+
+    # ---- hot-shard promotion ----------------------------------------------
+    def _maybe_promote(self) -> None:
+        """Promote everything past the popularity threshold to
+        ``hot_shard_replication`` live copies: input partitions through
+        PR 7's ``replicate_partition``, committed outputs through
+        ``replicate_output`` (both pay write-lane wire cost and extend
+        the replica-set metadata). Runs inline on the reader thread that
+        tripped the threshold; the promo lock keeps concurrent readers
+        from double-shipping the same shard."""
+        hot = self.popularity.hot(min_reads=self.hot_shard_threshold)
+        hot_outs = self.output_popularity.hot(
+            min_reads=self.hot_shard_threshold)
+        if not hot and not hot_outs:
+            return
+        with self._promo_lock:
+            for pid in hot:
+                self._promote_locked(pid)
+            for path in hot_outs:
+                self._promote_output_locked(path)
+
+    def _promote_locked(self, pid: int) -> None:
+        cluster = self.cluster
+        live = set(cluster.live_nodes())
+        holders = [n for n in live if pid in cluster.nodes[n].partition_ids]
+        if not holders:
+            return
+        want = min(self.hot_shard_replication, len(live))
+        while len(holders) < want:
+            candidates = [n for n in live if n not in holders]
+            if not candidates:
+                break
+            # least-serve-loaded live node takes the new copy
+            dst = min(candidates,
+                      key=lambda n: (cluster.clocks[n].serve_s, n))
+            src = min(holders,
+                      key=lambda n: (cluster.clocks[n].serve_s, n))
+            cluster.replicate_partition(pid, src, dst)
+            holders.append(dst)
+            if pid not in self.promoted:
+                self.promoted.append(pid)
+
+    def _promote_output_locked(self, path: str) -> None:
+        cluster = self.cluster
+        hit = cluster.output_ns.lookup(path)
+        if hit is None:                      # unlinked since it got hot
+            return
+        _, loc = hit
+        live = set(cluster.live_nodes())
+        holders = [n for n in loc.all_owners if n in live]
+        if not holders:
+            return
+        want = min(self.hot_shard_replication, len(live))
+        while len(holders) < want:
+            candidates = [n for n in live if n not in holders]
+            if not candidates:
+                break
+            dst = min(candidates,
+                      key=lambda n: (cluster.clocks[n].serve_s, n))
+            src = min(holders,
+                      key=lambda n: (cluster.clocks[n].serve_s, n))
+            cluster.replicate_output(path, src, dst)
+            holders.append(dst)
+            if path not in self.promoted_outputs:
+                self.promoted_outputs.append(path)
+
+    # ---- observability -----------------------------------------------------
+    def gate_stats(self) -> Dict[int, Dict[str, int]]:
+        return {n: g.stats() for n, g in self.gates.items()}
+
+    def peak_inflight_bytes(self) -> int:
+        """Max measured inflight bytes across every node gate — the
+        BENCH guard asserts this never exceeds ``max_inflight_bytes``."""
+        return max((g.peak_inflight_bytes for g in self.gates.values()),
+                   default=0)
+
+    def stats(self) -> Dict[str, object]:
+        acct = self.cluster.accounting
+        gates = self.gate_stats()
+        return {
+            "tenants": len(self._sessions),
+            "max_inflight_bytes": self.max_inflight_bytes,
+            "peak_inflight_bytes": self.peak_inflight_bytes(),
+            "admitted": sum(g["admitted"] for g in gates.values()),
+            "waits": sum(g["waits"] for g in gates.values()),
+            "shed": sum(g["shed"] for g in gates.values()),
+            "promoted_partitions": sorted(self.promoted),
+            "promoted_outputs": sorted(self.promoted_outputs),
+            "serve_app_bytes": acct.serve_app_bytes(),
+            "serve_app_requests": acct.serve_app_requests(),
+            "tenant_bytes": acct.tenant_bytes(),
+            "tenant_requests": acct.tenant_requests(),
+            "tenant_serve_s": acct.tenant_serve_s(),
+        }
+
+    def attribution_ok(self) -> bool:
+        """Exact tie-out: per-tenant sums equal the serve-app lane totals
+        on every node (the PR-5 attribution contract, serving edition)."""
+        for clock in self.cluster.clocks.values():
+            if sum(clock.tenant_bytes.values()) != clock.serve_app_bytes:
+                return False
+            if sum(clock.tenant_requests.values()) != clock.serve_app_requests:
+                return False
+            if abs(sum(clock.tenant_serve_s.values())
+                   - clock.serve_app_s) > 1e-9 * max(1.0, clock.serve_app_s):
+                return False
+        return True

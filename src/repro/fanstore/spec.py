@@ -177,6 +177,15 @@ class ClusterSpec:
     fault_threshold: int = 3
     retry_backoff_s: float = 1e-4
     retry_backoff_cap_s: float = 2e-3
+    # serving plane (repro.fanstore.serving): per-node admission gate +
+    # deficit-round-robin fairness + hot-shard promotion defaults.
+    # max_inflight_bytes=0 disables the gate (unbounded admission);
+    # hot_shard_threshold=0 disables popularity-driven promotion.
+    max_inflight_bytes: int = 0
+    serve_queue_depth: int = 1024
+    serve_quantum_bytes: int = 1 << 20
+    hot_shard_threshold: int = 0
+    hot_shard_replication: int = 2
 
     def __post_init__(self) -> None:
         if not isinstance(self.num_nodes, int) or self.num_nodes < 1:
@@ -207,6 +216,23 @@ class ClusterSpec:
         if self.retry_backoff_s < 0 or self.retry_backoff_cap_s < 0:
             raise ValueError(
                 "retry_backoff_s / retry_backoff_cap_s must be >= 0")
+        if self.max_inflight_bytes < 0:
+            raise ValueError("max_inflight_bytes must be >= 0 (0 = no gate)")
+        if self.serve_queue_depth < 1:
+            raise ValueError("serve_queue_depth must be >= 1")
+        if self.serve_quantum_bytes < 1:
+            raise ValueError("serve_quantum_bytes must be >= 1")
+        if self.hot_shard_threshold < 0:
+            raise ValueError(
+                "hot_shard_threshold must be >= 0 (0 = no promotion)")
+        if self.hot_shard_replication < 1:
+            raise ValueError("hot_shard_replication must be >= 1")
+        if self.hot_shard_threshold > 0 \
+                and self.hot_shard_replication > self.num_nodes:
+            raise ValueError(
+                f"hot_shard_replication must be <= num_nodes="
+                f"{self.num_nodes} when promotion is enabled, "
+                f"got {self.hot_shard_replication}")
         if self.faults is not None:
             known = {f.name for f in fields(FaultPolicy)}
             pol = dict(self.faults)
@@ -293,7 +319,9 @@ class ClusterSpec:
                      "placement", "selector", "replication", "io_threads",
                      "interconnect", "wire_stripes", "wire_codec",
                      "faults", "fault_threshold", "retry_backoff_s",
-                     "retry_backoff_cap_s")
+                     "retry_backoff_cap_s", "max_inflight_bytes",
+                     "serve_queue_depth", "serve_quantum_bytes",
+                     "hot_shard_threshold", "hot_shard_replication")
 
     @classmethod
     def from_kwargs(cls, num_nodes: int, **kwargs) -> "ClusterSpec":

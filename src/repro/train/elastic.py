@@ -32,6 +32,11 @@ class RebalancePlan:
     re_replicate: List[Tuple[int, int]]    # (partition_id, new_owner)
     lost_partitions: List[int]             # no surviving replica (need SFS refill)
     total_partitions: int = 0              # denominator for the fractions
+    # output tier (committed checkpoints etc.): same repair story as
+    # partitions, keyed by path — PR-7 left outputs single-owner, so a
+    # node loss used to take its committed outputs with it
+    re_replicate_outputs: List[Tuple[str, int]] = field(default_factory=list)
+    lost_outputs: List[str] = field(default_factory=list)
 
     @property
     def bytes_moved_fraction(self) -> float:
@@ -57,10 +62,20 @@ def partition_owners(cluster: FanStoreCluster) -> Dict[int, List[int]]:
     return owners
 
 
+def output_owners(cluster: FanStoreCluster) -> Dict[str, List[int]]:
+    """Committed output path -> nodes holding its payload (primary first)."""
+    owners: Dict[str, List[int]] = {}
+    for path in cluster.output_ns.paths():
+        _, loc = cluster.output_ns.lookup(path)
+        owners[path] = list(loc.all_owners)
+    return owners
+
+
 def plan_rebalance(cluster: FanStoreCluster, *, target_replication: int = 1
                    ) -> RebalancePlan:
-    """Plan repair after failures: restore every partition to the target
-    replica count using surviving copies, spreading load by ring order."""
+    """Plan repair after failures: restore every partition AND committed
+    output to the target replica count using surviving copies, spreading
+    load by ring order."""
     owners = partition_owners(cluster)
     live = set(cluster.live_nodes())
     ring = ConsistentHashRing(sorted(live))
@@ -86,8 +101,29 @@ def plan_rebalance(cluster: FanStoreCluster, *, target_replication: int = 1
                 load[c] += 1
                 alive.append(c)
                 deficit -= 1
+    # output tier: same deficit walk keyed by path (the PR-7 debt — a
+    # checkpoint must survive its owner like an input partition does)
+    out_rep: List[Tuple[str, int]] = []
+    out_lost: List[str] = []
+    for path, owns in sorted(output_owners(cluster).items()):
+        alive = [o for o in owns if o in live]
+        if not alive:
+            out_lost.append(path)
+            continue
+        deficit = target_replication - len(alive)
+        if deficit <= 0:
+            continue
+        for c in ring.owners(f"output:{path}", len(live)):
+            if deficit == 0:
+                break
+            if c not in alive:
+                out_rep.append((path, c))
+                alive.append(c)
+                deficit -= 1
     return RebalancePlan(moves=[], re_replicate=re_rep, lost_partitions=lost,
-                         total_partitions=len(owners))
+                         total_partitions=len(owners),
+                         re_replicate_outputs=out_rep,
+                         lost_outputs=out_lost)
 
 
 def execute_rebalance(cluster: FanStoreCluster, plan: RebalancePlan) -> int:
@@ -108,6 +144,15 @@ def execute_rebalance(cluster: FanStoreCluster, plan: RebalancePlan) -> int:
         src = min(srcs, key=lambda o: cluster.clocks[o].serve_s)
         cluster.replicate_partition(pid, src, dst)
         owners.setdefault(pid, []).append(dst)
+        done += 1
+    out_owners = output_owners(cluster)
+    for path, dst in plan.re_replicate_outputs:
+        srcs = [o for o in out_owners.get(path, []) if o in live and o != dst]
+        if not srcs:
+            continue
+        src = min(srcs, key=lambda o: cluster.clocks[o].serve_s)
+        cluster.replicate_output(path, src, dst)
+        out_owners.setdefault(path, []).append(dst)
         done += 1
     return done
 

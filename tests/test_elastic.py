@@ -77,6 +77,67 @@ def test_execute_rebalance_repairs_metadata_replica_sets():
         assert len(set(live)) >= 2, path
 
 
+def test_heal_re_replicates_outputs_and_survives_owner_loss():
+    # the PR-7 debt: committed outputs were single-owner, so losing the
+    # placement owner lost the checkpoint. heal() must now restore R=2
+    # for outputs too, and reads must fail over to the new copy.
+    from repro.train.checkpoint import restore_from_session, save_to_session
+    c, _ = _cluster()
+    sess = c.connect(0, 0)
+    state = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+             "b": np.ones(4, dtype=np.float32)}
+    save_to_session(sess, 7, state)
+    plan = plan_rebalance(c, target_replication=2)
+    assert plan.re_replicate_outputs          # every output is R=1 so far
+    assert plan.lost_outputs == []
+    made = execute_rebalance(c, plan)
+    assert made >= len(plan.re_replicate_outputs)
+    # every committed output now has two live payload holders, and the
+    # replica set is visible to the routing layer
+    for path in c.output_ns.paths():
+        _, loc = c.output_ns.lookup(path)
+        holders = [o for o in loc.all_owners if c.nodes[o].has_output(path)]
+        assert len(set(holders)) >= 2, path
+    # kill the PRIMARY owner of one checkpoint shard; the restore must
+    # come back byte-identical from the surviving replica
+    some_path = next(iter(c.output_ns.paths()))
+    _, loc = c.output_ns.lookup(some_path)
+    c.fail_node(loc.node_id)
+    target = {"w": np.zeros((3, 4), dtype=np.float32),
+              "b": np.zeros(4, dtype=np.float32)}
+    reader = c.connect([n for n in c.live_nodes()][0], 0)
+    restored, manifest = restore_from_session(reader, target)
+    assert manifest["step"] == 7
+    np.testing.assert_array_equal(restored["w"], state["w"])
+    np.testing.assert_array_equal(restored["b"], state["b"])
+    # and healing AGAIN brings the outputs back to R=2 on the survivors
+    plan2 = plan_rebalance(c, target_replication=2)
+    assert plan2.lost_outputs == []
+    execute_rebalance(c, plan2)
+    for path in c.output_ns.paths():
+        _, loc = c.output_ns.lookup(path)
+        live = [o for o in loc.all_owners if o not in c.failed]
+        assert len(set(live)) >= 2, path
+
+
+def test_unlink_reclaims_all_output_replicas():
+    # replicated outputs must unlink everywhere, or a rewrite of the
+    # freed name could serve stale bytes from a surviving replica
+    c, _ = _cluster()
+    sess = c.connect(0, 0)
+    sess.write_many([("out/result.bin", b"v1" * 100)])
+    c.heal(target_replication=2)
+    _, loc = c.output_ns.lookup("out/result.bin")
+    holders = list(loc.all_owners)
+    assert len(set(holders)) == 2
+    sess.unlink("out/result.bin")
+    for o in holders:
+        assert not c.nodes[o].has_output("out/result.bin")
+    # the freed name is writable again and serves the NEW bytes
+    sess.write_many([("out/result.bin", b"v2")])
+    assert c.read(0, "out/result.bin") == b"v2"
+
+
 def test_lost_partition_detected():
     c, _ = _cluster(replication=1)
     c.fail_node(0)

@@ -160,6 +160,7 @@ def test_scheduler_windows_span_batches():
     out = cluster.read_many(1, paths)
     assert out == [files[p] for p in paths]
     assert cluster.clocks[1].cache_hits == 32
+    cluster.close()
 
 
 def test_scheduler_backpressure_byte_cap():
@@ -176,6 +177,7 @@ def test_scheduler_backpressure_byte_cap():
     assert issued == pf.num_windows == 8
     assert cluster.clocks[1].prefetch_windows == 8
     assert pf.bytes_scheduled == 64 * 1024
+    cluster.close()
 
 
 def test_scheduler_installs_belady_future():

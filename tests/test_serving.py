@@ -1,0 +1,326 @@
+"""Serving plane: admission control, DRR fairness, per-tenant
+attribution, hot-shard promotion, and the multi-tenant session surface."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.layout import pack_partition
+from repro.fanstore.placement import ShardPopularity
+from repro.fanstore.serving import (AdmissionGate, AdmissionShed, ServeGroup,
+                                    TenantSession)
+from repro.fanstore.spec import ClusterSpec
+
+
+def _packed_cluster(spec, *, num_files=64, per_part=8, file_size=2048):
+    """Contiguously packed partitions (partition 0 holds files 0..per_part)
+    so a head-concentrated trace has an actual hot shard."""
+    payload = bytes(range(256)) * (file_size // 256)
+    parts = [pack_partition(
+        [(f"serve/f{i:03d}.bin", payload)
+         for i in range(p * per_part, (p + 1) * per_part)], compress=False)
+        for p in range(num_files // per_part)]
+    c = FanStoreCluster.from_spec(spec)
+    c.load_partitions(parts)
+    return c, payload
+
+
+# ---- spec knobs -------------------------------------------------------------
+
+def test_spec_serving_knob_validation():
+    with pytest.raises(ValueError):
+        ClusterSpec(num_nodes=2, max_inflight_bytes=-1)
+    with pytest.raises(ValueError):
+        ClusterSpec(num_nodes=2, serve_queue_depth=0)
+    with pytest.raises(ValueError):
+        ClusterSpec(num_nodes=2, serve_quantum_bytes=0)
+    with pytest.raises(ValueError):
+        ClusterSpec(num_nodes=2, hot_shard_threshold=-1)
+    with pytest.raises(ValueError):
+        ClusterSpec(num_nodes=2, hot_shard_replication=0)
+    # promotion enabled: the replica target must fit the topology
+    with pytest.raises(ValueError):
+        ClusterSpec(num_nodes=2, hot_shard_threshold=4,
+                    hot_shard_replication=3)
+    # promotion DISABLED: the default replication target is inert, so a
+    # single-node spec stays constructible
+    assert ClusterSpec(num_nodes=1).hot_shard_replication == 2
+
+
+def test_spec_serving_knobs_round_trip():
+    spec = ClusterSpec(num_nodes=4, max_inflight_bytes=1 << 20,
+                       serve_queue_depth=64, serve_quantum_bytes=4096,
+                       hot_shard_threshold=16, hot_shard_replication=3)
+    again = ClusterSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.max_inflight_bytes == 1 << 20
+    assert again.hot_shard_replication == 3
+
+
+# ---- admission gate ---------------------------------------------------------
+
+def test_gate_caps_inflight_under_thread_storm():
+    cap = 4096
+    gate = AdmissionGate(cap, quantum_bytes=1024, queue_depth=10_000)
+    lock = threading.Lock()
+    inflight = {"now": 0, "peak": 0}
+
+    def worker():
+        for _ in range(25):
+            gate.acquire("t", 512)
+            with lock:
+                inflight["now"] += 512
+                inflight["peak"] = max(inflight["peak"], inflight["now"])
+            time.sleep(0.0002)
+            with lock:
+                inflight["now"] -= 512
+            gate.release(512)
+
+    threads = [threading.Thread(target=worker) for _ in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # the gate's own ledger AND the independent measurement both respect
+    # the cap; the storm (16 threads x 512B vs a 4KB budget) had to queue
+    assert 0 < inflight["peak"] <= cap
+    st = gate.stats()
+    assert 0 < st["peak_inflight_bytes"] <= cap
+    assert st["admitted"] == 16 * 25
+    assert st["waits"] > 0
+    assert st["inflight_bytes"] == 0 and st["queued"] == 0
+
+
+def test_gate_sheds_oversize_and_full_queue():
+    gate = AdmissionGate(1000, quantum_bytes=100, queue_depth=2)
+    with pytest.raises(AdmissionShed):
+        gate.acquire("big", 1001)           # can never fit: shed, not queued
+    gate.acquire("a", 1000)                 # saturate the budget
+    t1 = gate.submit("b", 100)
+    t2 = gate.submit("c", 100)
+    assert not t1.admitted and not t2.admitted
+    with pytest.raises(AdmissionShed):      # queue_depth=2 exhausted
+        gate.submit("d", 100)
+    assert gate.stats()["shed"] == 2
+    gate.release(1000)
+    assert t1.admitted and t2.admitted
+
+
+def test_gate_acquire_timeout_counts_as_shed():
+    gate = AdmissionGate(100, quantum_bytes=100, queue_depth=10)
+    gate.acquire("a", 100)
+    with pytest.raises(AdmissionShed):
+        gate.acquire("b", 100, timeout=0.01)
+    st = gate.stats()
+    assert st["shed"] == 1 and st["queued"] == 0
+    gate.release(100)                       # the timed-out ticket is gone
+    assert gate.stats()["inflight_bytes"] == 0
+
+
+def test_gate_drr_interleaves_backlogged_head_with_tail():
+    # a head tenant with a 6-deep backlog must NOT drain before the tail
+    # tenant's single queued request: deficit round-robin admits one per
+    # tenant per budget grant
+    gate = AdmissionGate(300, quantum_bytes=100, queue_depth=100)
+    gate.acquire("seed", 300)               # saturate so everything queues
+    head = [gate.submit("head", 100) for _ in range(6)]
+    tail = [gate.submit("tail", 100) for _ in range(2)]
+    gate.release(100)                       # one slot: head's turn
+    assert head[0].admitted and not tail[0].admitted
+    gate.release(100)                       # next slot: TAIL's turn, not
+    assert tail[0].admitted                 # head's 5-deep backlog
+    assert not head[1].admitted
+    gate.release(100)
+    assert head[1].admitted
+    gate.release(300)                       # free the three admitted above
+    gate.release(300)                       # ...and drain the rest
+    assert all(t.admitted for t in head + tail)
+
+
+def test_gate_uncapped_tracks_but_never_blocks():
+    gate = AdmissionGate(None)
+    for _ in range(5):
+        gate.acquire("t", 1 << 30)
+    st = gate.stats()
+    assert st["waits"] == 0 and st["admitted"] == 5
+    assert st["peak_inflight_bytes"] == 5 * (1 << 30)
+
+
+# ---- popularity -------------------------------------------------------------
+
+def test_shard_popularity_hot_ordering():
+    pop = ShardPopularity()
+    for _ in range(5):
+        pop.note(3)
+    for _ in range(2):
+        pop.note(1)
+    pop.note(7)
+    assert pop.hot(min_reads=2) == [3, 1]
+    assert pop.hot(min_reads=6) == []
+    assert pop.count(3) == 5 and pop.total == 8
+    with pytest.raises(ValueError):
+        pop.hot(min_reads=0)
+
+
+# ---- serve group ------------------------------------------------------------
+
+def test_serve_group_payload_identity_and_attribution():
+    spec = ClusterSpec(num_nodes=4, max_inflight_bytes=1 << 20)
+    c, payload = _packed_cluster(spec)
+    with c:
+        group = ServeGroup(c, num_tenants=6)
+        for tenant in group.tenants:
+            out = group.read_many(tenant, ["serve/f000.bin",
+                                           "serve/f033.bin"])
+            assert out == [payload, payload]
+        assert group.attribution_ok()
+        stats = group.stats()
+        # 6 tenants x 2 files x 2048B, attributed per tenant, summing to
+        # the serve-app lane totals exactly
+        assert stats["serve_app_bytes"] == 6 * 2 * 2048
+        assert sum(stats["tenant_bytes"].values()) == 6 * 2 * 2048
+        assert set(stats["tenant_bytes"]) == set(group.tenants)
+        assert stats["peak_inflight_bytes"] == 2 * 2048
+
+
+def test_serve_app_lane_is_concurrent_not_consume():
+    spec = ClusterSpec(num_nodes=2)
+    c, _ = _packed_cluster(spec, num_files=8, per_part=4)
+    with c:
+        group = ServeGroup(c, num_tenants=2)
+        c.reset_clocks()
+        group.read_many("tenant-0000", [f"serve/f{i:03d}.bin"
+                                       for i in range(8)])
+        clock = c.clocks[0]
+        # serving cost landed on the serve_app lane, NOT the trainer's
+        # demand lane — and busy_s takes the max across concurrent lanes
+        assert clock.serve_app_s > 0
+        assert clock.consume_s == 0
+        assert clock.busy_s == pytest.approx(
+            max(clock.serve_app_s, clock.serve_s, clock.prefetch_s,
+                clock.write_s))
+
+
+def test_hot_shard_promotion_spreads_replicas():
+    spec = ClusterSpec(num_nodes=4, selector="power-of-two",
+                       max_inflight_bytes=1 << 20,
+                       hot_shard_threshold=6, hot_shard_replication=3)
+    c, _ = _packed_cluster(spec)
+    with c:
+        group = ServeGroup(c, num_tenants=8)
+        # a head-concentrated trace: every tenant hammers partition 0
+        for tenant in group.tenants:
+            group.read_many(tenant, ["serve/f000.bin", "serve/f001.bin"])
+        assert 0 in group.promoted
+        holders = [n for n in c.live_nodes()
+                   if 0 in c.nodes[n].partition_ids]
+        assert len(holders) == 3
+        # the routing layer sees the promotion: replica sets grew too
+        _, loc = c.metadata.lookup("serve/f000.bin")
+        assert len(set(loc.all_owners)) == 3
+        # the cold tail was NOT promoted
+        assert c.accounting is not None
+        for pid in range(1, 8):
+            assert pid not in group.promoted
+
+
+def test_hot_output_promotion_uses_replicate_output():
+    spec = ClusterSpec(num_nodes=4, max_inflight_bytes=1 << 20,
+                       hot_shard_threshold=3, hot_shard_replication=2)
+    c, _ = _packed_cluster(spec)
+    with c:
+        sess = c.connect(0, 0)
+        sess.write_many([("out/hot.bin", b"H" * 512),
+                         ("out/cold.bin", b"C" * 512)])
+        group = ServeGroup(c, num_tenants=4)
+        for tenant in group.tenants:
+            assert group.read_many(tenant, ["out/hot.bin"]) == [b"H" * 512]
+        assert "out/hot.bin" in group.promoted_outputs
+        _, loc = c.output_ns.lookup("out/hot.bin")
+        assert len(set(loc.all_owners)) == 2
+        for o in loc.all_owners:
+            assert c.nodes[o].has_output("out/hot.bin")
+        _, cold = c.output_ns.lookup("out/cold.bin")
+        assert len(set(cold.all_owners)) == 1
+
+
+def test_serve_group_storm_respects_cluster_cap():
+    cap = 8192
+    spec = ClusterSpec(num_nodes=4, max_inflight_bytes=cap,
+                       serve_quantum_bytes=4096)
+    c, payload = _packed_cluster(spec)
+    with c:
+        group = ServeGroup(c, num_tenants=16)
+        errors = []
+
+        def drive(tenant):
+            try:
+                for r in range(8):
+                    i = (hash((tenant, r)) % 64)
+                    out = group.read_many(tenant, [f"serve/f{i:03d}.bin"])
+                    assert out == [payload]
+            except BaseException as exc:
+                errors.append(exc)
+
+        threads = [threading.Thread(target=drive, args=(t,))
+                   for t in group.tenants]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert 0 < group.peak_inflight_bytes() <= cap
+        assert group.attribution_ok()
+        stats = group.stats()
+        assert stats["shed"] == 0
+        assert stats["serve_app_requests"] == 16 * 8
+
+
+def test_tenant_session_delegates_namespace_and_restores_checkpoints():
+    from repro.train.checkpoint import restore_from_session, save_to_session
+    spec = ClusterSpec(num_nodes=4, max_inflight_bytes=1 << 22)
+    c, _ = _packed_cluster(spec)
+    with c:
+        writer = c.connect(0, 0)
+        state = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+        save_to_session(writer, 3, state)
+        group = ServeGroup(c, num_tenants=2)
+        ts = group.session("tenant-0001")
+        assert isinstance(ts, TenantSession)
+        # non-read verbs delegate to the raw session untouched
+        assert ts.exists("ckpt/step_00000003/manifest.json")
+        assert "step_00000003" in ts.listdir("ckpt")
+        # restore streams through the GATED serve_app read path
+        target = {"w": np.zeros((2, 3), dtype=np.float32)}
+        restored, manifest = restore_from_session(ts, target)
+        assert manifest["step"] == 3
+        np.testing.assert_array_equal(np.asarray(restored["w"]), state["w"])
+        assert c.accounting.tenant_bytes().get("tenant-0001", 0) > 0
+        assert group.attribution_ok()
+
+
+def test_serve_group_async_submit():
+    spec = ClusterSpec(num_nodes=2, max_inflight_bytes=1 << 20)
+    c, payload = _packed_cluster(spec, num_files=8, per_part=4)
+    with c:
+        group = ServeGroup(c, num_tenants=2)
+        futs = [group.submit(t, ["serve/f002.bin"]) for t in group.tenants]
+        for f in futs:
+            assert f.result(timeout=30) == [payload]
+        assert group.attribution_ok()
+
+
+def test_serve_group_rejects_bad_shapes():
+    spec = ClusterSpec(num_nodes=2)
+    c, _ = _packed_cluster(spec, num_files=8, per_part=4)
+    with c:
+        with pytest.raises(ValueError):
+            ServeGroup(c, num_tenants=0)
+        with pytest.raises(ValueError):
+            ServeGroup(c, num_tenants=2, hot_shard_threshold=1,
+                       hot_shard_replication=5)
+        group = ServeGroup(c, num_tenants=1)
+        with pytest.raises(KeyError):
+            group.read_many("tenant-9999", ["serve/f000.bin"])
