@@ -14,7 +14,10 @@ writes the machine-readable BENCH_io.json perf snapshot: epoch makespan,
 hit rates, and bytes moved for the seed / batched / prefetched arms at 8
 and 64 nodes, the write half (write_many vs per-file loop, checkpoint
 flush makespan with/without prefetch-lane overlap), the
-LRU-vs-Belady-vs-2Q cache comparison, the multi-tenant ``workers`` block
+LRU-vs-Belady-vs-2Q cache comparison, the guarded ``cache_policy_sweep``
+(all seven eviction policies x three byte budgets x permutation / zipf /
+scan traces) and ``cross_epoch`` block (stitched multi-epoch prefetch
+schedule vs drain-and-refill), the multi-tenant ``workers`` block
 (shared node cache tier vs private per-worker caches at the same total
 bytes), the ``measured`` block (read+write, scheduled-prefetch, and
 checkpoint-overlap traces over the real socket/shm wires), the
@@ -70,6 +73,43 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
     cp = result["cache_policies"]
     assert cp["belady_hit_rate"] > cp["lru_hit_rate"], (
         "Belady no longer beats LRU at equal byte budget")
+    # online-intelligence guards: on EVERY (budget, trace) arm of the
+    # policy sweep the adaptive policies must not lose to plain LRU, the
+    # reuse-distance predictor must close >= 40% of the LRU->Belady gap
+    # on the zipf trace, and the oracle must stay the upper bound
+    cs = result["cache_policy_sweep"]
+    for kind in ("uniform", "zipf"):
+        for bf, arm in cs[kind]["arms"].items():
+            top = max(arm.values())
+            assert arm["arc"] >= arm["lru"], (
+                f"ARC lost to LRU on the {kind} trace at {bf} files "
+                f"({arm['arc']:.3f} < {arm['lru']:.3f})")
+            assert arm["predictive"] >= arm["lru"], (
+                f"Predictive lost to LRU on the {kind} trace at {bf} "
+                f"files ({arm['predictive']:.3f} < {arm['lru']:.3f})")
+            assert arm["belady"] >= top, (
+                f"Belady is no longer the upper bound on the {kind} "
+                f"trace at {bf} files ({arm['belady']:.3f} < {top:.3f})")
+    for bf, closure in cs["zipf_gap_closure"].items():
+        assert closure >= 0.40, (
+            f"Predictive closes only {closure:.0%} of the LRU->Belady "
+            f"gap on the zipf trace at {bf} files (need >= 40%)")
+    assert cs["scan"]["2q"] >= cs["scan"]["lru"], (
+        f"2Q lost to LRU on the scan trace "
+        f"({cs['scan']['2q']:.3f} < {cs['scan']['lru']:.3f})")
+    # cross-epoch stitching guards: the stitched multi-epoch schedule
+    # must make strictly fewer boundary round trips than drain-and-refill
+    # and therefore finish strictly earlier, with a clean retry ledger
+    ce = result["cross_epoch"]
+    assert ce["stitched"]["makespan_s"] < ce["drain_refill"]["makespan_s"], (
+        f"cross-epoch stitching no longer beats drain-and-refill "
+        f"({ce['stitched']['makespan_s']} vs "
+        f"{ce['drain_refill']['makespan_s']})")
+    assert (ce["stitched"]["prefetch_windows"]
+            < ce["drain_refill"]["prefetch_windows"]), (
+        "stitched arm no longer saves the boundary window round trip")
+    assert ce["stitched"]["retries"] == 0 == ce["drain_refill"]["retries"], (
+        "cross-epoch arms recorded retries with fault injection off")
     # multi-tenant guards: the shared node cache tier must strictly beat
     # private per-worker caches of the same total bytes, and the
     # per-worker attribution ledgers must tie out against the tier totals
@@ -245,6 +285,24 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
     print(f"io_json,lru_hit={cp['lru_hit_rate']:.3f},"
           f"belady_hit={cp['belady_hit_rate']:.3f},"
           f"twoq_hit={cp['2q_hit_rate']:.3f}", flush=True)
+    for kind in ("uniform", "zipf"):
+        for bf, arm in sorted(cs[kind]["arms"].items(),
+                              key=lambda kv: int(kv[0])):
+            print(f"io_json,sweep={kind},budget_files={bf},"
+                  + ",".join(f"{p}_hit={arm[p]:.3f}"
+                             for p in cs["policies"]), flush=True)
+    print("io_json,"
+          + ",".join(f"zipf_gap_closure_{bf}={c:.2f}"
+                     for bf, c in sorted(cs["zipf_gap_closure"].items(),
+                                         key=lambda kv: int(kv[0])))
+          + f",scan_lru_hit={cs['scan']['lru']:.3f}"
+          f",scan_twoq_hit={cs['scan']['2q']:.3f}", flush=True)
+    print(f"io_json,cross_epoch_stitched="
+          f"{ce['stitched']['makespan_s']:.4f}s,"
+          f"drain_refill={ce['drain_refill']['makespan_s']:.4f}s,"
+          f"stall_speedup={ce['stall_speedup']:.3f},"
+          f"windows={ce['stitched']['prefetch_windows']}v"
+          f"{ce['drain_refill']['prefetch_windows']}", flush=True)
     print(f"io_json,workers={wb['workers']},nodes={wb['nodes']},"
           f"shared_hit={wb['shared']['cache_hit_rate']:.3f},"
           f"private_hit={wb['private']['cache_hit_rate']:.3f},"

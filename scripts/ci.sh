@@ -34,13 +34,20 @@ case "$lane" in
     # tenant from starving the tail, per-tenant attribution sums equal
     # the serve-app lane totals exactly, and hot shards (partitions AND
     # committed outputs) promote to replicated placement.
+    # ... plus the online cache-intelligence suite: LFU/ARC/GDSF/
+    # Predictive policy behavior, invalidate/clear forgetting ghost +
+    # predictor state per policy, cross-epoch prefetch stitching (the
+    # boundary window covers the next epoch's step 0, clean retry
+    # ledger), and per-job attribution tie-out under a 2-job storm.
     python -m pytest -x -q tests/test_wire.py tests/test_backends.py \
-        tests/test_topology.py tests/test_faults.py tests/test_serving.py
+        tests/test_topology.py tests/test_faults.py tests/test_serving.py \
+        tests/test_cache_online.py
     python -m pytest -x -q -m "not slow" --ignore=tests/test_wire.py \
         --ignore=tests/test_backends.py \
         --ignore=tests/test_topology.py \
         --ignore=tests/test_faults.py \
-        --ignore=tests/test_serving.py
+        --ignore=tests/test_serving.py \
+        --ignore=tests/test_cache_online.py
     # perf trajectory smoke: seed/batched/prefetched arms + cache policies
     # + the multi-tenant `workers` block (shared node tier strictly beats
     # private per-worker caches; attribution ledgers tie out) + the
@@ -58,6 +65,12 @@ case "$lane" in
     # (64 tenants on 8 nodes over a zipfian trace: hot-shard replication
     # strictly beats single-owner makespan, attribution ties out, peak
     # inflight <= max_inflight_bytes, within-node fairness <= 2x).
+    # ... and the guarded `cache_policy_sweep` (all seven policies x
+    # three byte budgets x permutation/zipf/scan traces: ARC/Predictive
+    # >= LRU everywhere, Predictive closes >= 40% of the LRU->Belady
+    # zipf gap, Belady stays the upper bound, 2Q >= LRU on the scan
+    # arm) + the guarded `cross_epoch` block (stitched multi-epoch
+    # prefetch schedule strictly beats drain-and-refill makespan).
     # Writes BENCH_io.json (uploaded as the bench-io artifact, `workers`,
     # `measured.wire`, `prefetch_depth`, `failover`, and `serving`
     # blocks included).

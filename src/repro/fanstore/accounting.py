@@ -103,11 +103,22 @@ class NodeClock:
     worker_cache_hits: Dict[int, int] = field(default_factory=dict)
     worker_cache_misses: Dict[int, int] = field(default_factory=dict)
     worker_cache_hit_bytes: Dict[int, int] = field(default_factory=dict)
+    # per-JOB attribution of the same counters: several jobs (train +
+    # eval) can attach to one namespace and share a node's cache tier, so
+    # each cache event also lands on the issuing job's row. Reads that
+    # never named a job book under "default", keeping the job sums equal
+    # to the node totals by construction (tenant-ledger discipline).
+    job_cache_hits: Dict[str, int] = field(default_factory=dict)
+    job_cache_misses: Dict[str, int] = field(default_factory=dict)
+    job_cache_hit_bytes: Dict[str, int] = field(default_factory=dict)
 
     def attribute_cache(self, worker_id: int, *, hit: bool,
-                        nbytes: int = 0) -> None:
-        """Book one cache event onto BOTH the node totals and the
-        worker's attribution row (call under the transport lock)."""
+                        nbytes: int = 0,
+                        job: "str | None" = None) -> None:
+        """Book one cache event onto the node totals, the worker's
+        attribution row, AND the issuing job's row (call under the
+        transport lock)."""
+        jkey = job if job is not None else "default"
         if hit:
             self.cache_hits += 1
             self.cache_hit_bytes += nbytes
@@ -115,10 +126,16 @@ class NodeClock:
                 self.worker_cache_hits.get(worker_id, 0) + 1
             self.worker_cache_hit_bytes[worker_id] = \
                 self.worker_cache_hit_bytes.get(worker_id, 0) + nbytes
+            self.job_cache_hits[jkey] = \
+                self.job_cache_hits.get(jkey, 0) + 1
+            self.job_cache_hit_bytes[jkey] = \
+                self.job_cache_hit_bytes.get(jkey, 0) + nbytes
         else:
             self.cache_misses += 1
             self.worker_cache_misses[worker_id] = \
                 self.worker_cache_misses.get(worker_id, 0) + 1
+            self.job_cache_misses[jkey] = \
+                self.job_cache_misses.get(jkey, 0) + 1
 
     def attribute_tenant(self, tenant: str, *, nbytes: int = 0,
                          cost_s: float = 0.0, requests: int = 0) -> None:
@@ -348,3 +365,27 @@ class ClusterAccounting:
         hits = sum(c.cache_hits for c in self.clocks.values())
         total = hits + sum(c.cache_misses for c in self.clocks.values())
         return hits / total if total else 0.0
+
+    # ---- per-job cache attribution (multi-job seam) ------------------------
+    def job_cache_hits(self) -> Dict[str, int]:
+        """Per-job cache hits merged across nodes; values sum to the
+        node totals by construction (every accrual books both)."""
+        out: Dict[str, int] = {}
+        for c in self.clocks.values():
+            for j, n in c.job_cache_hits.items():
+                out[j] = out.get(j, 0) + n
+        return out
+
+    def job_cache_misses(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for c in self.clocks.values():
+            for j, n in c.job_cache_misses.items():
+                out[j] = out.get(j, 0) + n
+        return out
+
+    def job_cache_hit_bytes(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for c in self.clocks.values():
+            for j, n in c.job_cache_hit_bytes.items():
+                out[j] = out.get(j, 0) + n
+        return out

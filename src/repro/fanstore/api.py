@@ -142,7 +142,8 @@ class FanStoreSession:
     def __init__(self, cluster: FanStoreCluster, node_id: int, *,
                  worker_id: int = 0, mount: str = MOUNT,
                  lane: str = "write", read_lane: str = "consume",
-                 tenant: Optional[str] = None):
+                 tenant: Optional[str] = None,
+                 job: Optional[str] = None):
         self.cluster = cluster
         self.context = WorkerContext(node_id, worker_id)
         # direct construction must reject out-of-range coordinates just
@@ -164,6 +165,12 @@ class FanStoreSession:
         # its tenant sessions
         self.read_lane = read_lane
         self.tenant = tenant
+        # multi-job seam: several jobs (train + eval) attach to one
+        # namespace and share the node's cache tier; every read this
+        # session issues is attributed to `job` on the tier ledger and
+        # the NodeClock — cluster.connect(node, worker, job="eval") is
+        # how the second job opens its sessions
+        self.job = job
         self._fds: Dict[int, _OpenFile] = {}
         self._next_fd = FD_BASE
         self._lock = threading.Lock()
@@ -226,7 +233,8 @@ class FanStoreSession:
             return self._alloc(_OpenFile(rel, True, self.lane))
         data = self.cluster.read(self.node_id, rel,
                                  worker_id=self.worker_id,
-                                 lane=self.read_lane, tenant=self.tenant)
+                                 lane=self.read_lane, tenant=self.tenant,
+                                 job=self.job)
         return self._alloc(_OpenFile(rel, False, self.lane, data=data))
 
     def close(self, fd: int) -> Optional[StatRecord]:
@@ -394,14 +402,14 @@ class FanStoreSession:
         return self.cluster.read_many(
             self.node_id, [self.resolve(p) for p in paths],
             worker_id=self.worker_id, materialize=materialize,
-            lane=self.read_lane, tenant=self.tenant)
+            lane=self.read_lane, tenant=self.tenant, job=self.job)
 
     def read_many_async(self, paths: Sequence[str], *,
                         materialize: bool = True) -> "Future[List[bytes]]":
         return self.cluster.read_many_async(
             self.node_id, [self.resolve(p) for p in paths],
             worker_id=self.worker_id, materialize=materialize,
-            lane=self.read_lane, tenant=self.tenant)
+            lane=self.read_lane, tenant=self.tenant, job=self.job)
 
     def write_many(self, entries: Sequence[Tuple[str, bytes]], *,
                    batched: bool = True) -> List[StatRecord]:

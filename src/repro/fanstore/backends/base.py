@@ -510,12 +510,14 @@ class TransportBackend:
     # ---- cache tier (accounting only; payload comes from the cache) --------
     def account_cache_hit(self, node_id: int, item: FetchItem, *,
                           worker_id: int = 0, lane: str = "consume",
-                          tenant: Optional[str] = None) -> None:
+                          tenant: Optional[str] = None,
+                          job: Optional[str] = None) -> None:
         """A client-cache hit: RAM-speed consume cost on the node, plus
-        per-worker attribution (co-located workers share the node tier,
-        so the breakdown is the only record of WHOSE read hit). On the
-        serve-app lane the RAM cost lands on the concurrent serving
-        timeline and the bytes are attributed to ``tenant`` as well."""
+        per-worker (and per-job) attribution (co-located workers share
+        the node tier, so the breakdown is the only record of WHOSE read
+        hit). On the serve-app lane the RAM cost lands on the concurrent
+        serving timeline and the bytes are attributed to ``tenant`` as
+        well."""
         with self._lock:
             clock = self.clocks[node_id]
             cost = self.net.cache_cost(item.size)
@@ -524,12 +526,14 @@ class TransportBackend:
                                        cost_s=cost)
             else:
                 clock.consume_s += cost
-            clock.attribute_cache(worker_id, hit=True, nbytes=item.size)
+            clock.attribute_cache(worker_id, hit=True, nbytes=item.size,
+                                  job=job)
 
-    def account_cache_miss(self, node_id: int, *,
-                           worker_id: int = 0) -> None:
+    def account_cache_miss(self, node_id: int, *, worker_id: int = 0,
+                           job: Optional[str] = None) -> None:
         with self._lock:
-            self.clocks[node_id].attribute_cache(worker_id, hit=False)
+            self.clocks[node_id].attribute_cache(worker_id, hit=False,
+                                                 job=job)
 
     def account_cache_eviction(self, node_id: int, count: int = 1) -> None:
         with self._lock:

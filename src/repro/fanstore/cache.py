@@ -10,7 +10,7 @@ in front of the transport. Hits, misses, and evictions are reported through
 the node's ``NodeClock`` (see :mod:`repro.fanstore.accounting`) so
 benchmarks can plot hit rate against the byte budget.
 
-Three eviction policies behind one interface (``ByteCache``):
+Seven eviction policies behind one interface (``ByteCache``):
 
 * ``ByteLRUCache``   — classic least-recently-used. Uniform random access
   defeats it within an epoch; it is the baseline the others beat.
@@ -23,11 +23,25 @@ Three eviction policies behind one interface (``ByteCache``):
   absorbs one-shot scans, a ghost list remembers recently-evicted keys, and
   only re-referenced files are promoted to the protected LRU main queue.
   Scan-resistant without needing the future.
+* ``LFUCache``       — in-cache frequency with periodic aging: hot files
+  survive arbitrary recency noise; aging keeps dead hotness from pinning
+  entries forever.
+* ``ArcCache``       — ARC (Megiddo & Modha '03), byte-weighted: resident
+  recency (T1) and frequency (T2) lists balanced by a self-tuning target
+  ``p``, steered by hits in the B1/B2 ghost lists of recently evicted keys.
+* ``GdsfCache``      — Greedy-Dual-Size-Frequency (Cherkasova '98):
+  priority = L + freq * cost / size, the right shape when file sizes are
+  mixed — a huge once-read blob should not outlive many small hot files.
+* ``PredictiveCache``— an online Belady approximation: estimate each
+  path's next reuse from a per-path EWMA of its observed reuse distances
+  and evict the entry whose predicted next use is farthest away. The
+  oracle Belady needs, learned from history instead of given.
 
 ``FanStoreCluster(cache_policy=...)`` selects the policy via
 :func:`make_cache`. Caches are OFF by default (``capacity_bytes=0``
 disabled) so the paper-faithful read path is unchanged unless a deployment
-opts in.
+opts in. Per-policy constructor knobs travel through
+``ClusterSpec.cache_policy_options``.
 
 Ownership sits one level up, in :class:`NodeCacheTier`: the paper's
 deployment runs SEVERAL training workers per node (§3), and per Hoard the
@@ -198,27 +212,39 @@ class ByteCache:
         """Post-eviction hook (2Q moves the key to its ghost list)."""
 
     def _forget(self, path: str) -> None:
-        """Post-invalidation hook: drop any per-path policy state (2Q
-        removes the key from its probation/ghost queues). Unlike
-        ``_evicted``, the entry must leave no trace — the file is gone."""
+        """Post-invalidation hook: drop any per-path policy state (2Q/ARC
+        remove the key from their probation/ghost queues, the predictor
+        drops its reuse history). Unlike ``_evicted``, the entry must
+        leave no trace — the file is gone (PR-4 unlink invalidation), and
+        a rewrite of the freed name must start from a clean slate."""
 
     def invalidate(self, path: str) -> bool:
         """Drop a path outright (output GC/unlink): NOT an eviction — no
         victim policy, no eviction counters, no ghost history. Inputs are
         immutable so only unlinked outputs ever need this. Returns True
-        when the path was resident."""
+        when the path was resident.
+
+        ``_forget`` runs even for a NON-resident path: ghost lists (2Q,
+        ARC) and the predictor's reuse history outlive residency, and an
+        unlinked name must vanish from those too — otherwise rewriting
+        the freed path replays the dead file's ghost credit/period."""
         with self._lock:
             entry = self._entries.pop(path, None)
-            if entry is None:
-                return False
-            self._bytes -= entry.size
+            if entry is not None:
+                self._bytes -= entry.size
             self._forget(path)
-            return True
+            return entry is not None
+
+    def _on_clear(self) -> None:
+        """Post-clear hook: reset ALL policy state (queues, ghost lists,
+        frequency counters, predictor history) — a cleared cache must be
+        indistinguishable from a freshly built one."""
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
             self._bytes = 0
+            self._on_clear()
 
 
 class ByteLRUCache(ByteCache):
@@ -302,6 +328,14 @@ class BeladyCache(ByteCache):
     def _pick_victim(self) -> str:
         return max(self._entries, key=self._next_use)
 
+    def _forget(self, path: str) -> None:
+        # the file is gone (unlink): a rewrite of the freed name is a NEW
+        # file — the old trace's occurrences must not make it look hot
+        self._future.pop(path, None)
+
+    # NOTE: clear() deliberately keeps the installed future — clearing is
+    # an entries reset (benchmark epoch restart), not an oracle reset.
+
 
 class TwoQCache(ByteCache):
     """2Q: FIFO probation (A1in) + ghost history (A1out) + protected LRU
@@ -313,14 +347,23 @@ class TwoQCache(ByteCache):
     while the key is in A1out proves reuse beyond the probation horizon, so
     the refetched payload is admitted straight into Am. ``kin`` is the
     byte-budget fraction reserved for probation, ``kout`` the ghost-list
-    size as a fraction of the budget (counting remembered *bytes*).
+    size as a fraction of the budget (counting remembered *bytes* — the
+    entries hold no payload, so a generous horizon costs only keys).
+
+    ``kout`` defaults to 2.0: the ghost must remember evicted keys for
+    longer than the working set's typical reuse distance or promotion
+    never fires — the old 0.5 default forgot a key well before its mean
+    reuse under DL-style access, leaving the protected queue starved and
+    2Q *below* LRU on the uniform BENCH trace (0.262 vs 0.277).
     """
 
     def __init__(self, capacity_bytes: int, *, kin: float = 0.25,
-                 kout: float = 0.5):
+                 kout: float = 2.0):
         super().__init__(capacity_bytes)
         if not 0.0 < kin < 1.0:
             raise ValueError("kin must be in (0, 1)")
+        if kout <= 0.0:
+            raise ValueError("kout must be > 0")
         self.kin_bytes = max(1, int(capacity_bytes * kin))
         self.kout_bytes = max(1, int(capacity_bytes * kout))
         self._a1in: "OrderedDict[str, int]" = OrderedDict()   # path -> size
@@ -383,12 +426,327 @@ class TwoQCache(ByteCache):
         if path in self._ghost:
             self._ghost_bytes -= self._ghost.pop(path)
 
-    def clear(self) -> None:
-        with self._lock:
-            self._entries.clear()
-            self._a1in.clear()
-            self._ghost.clear()
-            self._bytes = self._a1in_bytes = self._ghost_bytes = 0
+    def _on_clear(self) -> None:
+        self._a1in.clear()
+        self._ghost.clear()
+        self._a1in_bytes = self._ghost_bytes = 0
+
+
+class LFUCache(ByteCache):
+    """Least-frequently-used with periodic aging.
+
+    Each resident entry carries an access count; eviction removes the
+    lowest count, breaking ties toward least-recent (the shared
+    ``OrderedDict`` keeps LRU order, and ``min`` keeps the first — i.e.
+    oldest — of equals). Every ``aging_interval`` accesses all counts are
+    halved, so a file that was hot a thousand accesses ago cannot pin its
+    slot forever on stale credit — the failure mode that makes plain LFU
+    worse than LRU on drifting working sets.
+    """
+
+    def __init__(self, capacity_bytes: int, *, aging_interval: int = 1024):
+        super().__init__(capacity_bytes)
+        if aging_interval < 1:
+            raise ValueError("aging_interval must be >= 1")
+        self.aging_interval = aging_interval
+        self._freq: Dict[str, int] = {}
+        self._accesses = 0
+
+    def _tick(self) -> None:
+        self._accesses += 1
+        if self._accesses >= self.aging_interval:
+            self._accesses = 0
+            for p in self._freq:
+                self._freq[p] //= 2
+
+    def _on_hit(self, path: str) -> None:
+        self._entries.move_to_end(path)          # LRU order = tie-break
+        self._freq[path] = self._freq.get(path, 0) + 1
+        self._tick()
+
+    def _on_miss(self, path: str) -> None:
+        self._tick()
+
+    def _note_insert(self, path: str, nbytes: int, *,
+                     replaced: bool) -> None:
+        self._freq[path] = self._freq.get(path, 0) + 1
+
+    def _pick_victim(self) -> str:
+        return min(self._entries, key=lambda p: self._freq.get(p, 0))
+
+    def _evicted(self, path: str, entry: CachedEntry) -> None:
+        self._freq.pop(path, None)
+
+    def _forget(self, path: str) -> None:
+        self._freq.pop(path, None)
+
+    def _on_clear(self) -> None:
+        self._freq.clear()
+        self._accesses = 0
+
+
+class ArcCache(ByteCache):
+    """ARC (Megiddo & Modha '03) adapted to a byte budget.
+
+    Residents live on two lists — T1 (seen exactly once since entering)
+    and T2 (seen again while resident, or readmitted after a ghost hit) —
+    with ghost lists B1/B2 remembering the keys (and sizes) most recently
+    evicted from each. A self-tuning target ``p`` says how many bytes T1
+    deserves: a hit in B1 ("we evicted a recent entry too soon") grows
+    ``p``, a hit in B2 ("we evicted a frequent entry too soon") shrinks
+    it, each step weighted by the opposing ghost's byte mass so the
+    smaller signal moves the needle faster — byte-weighted exactly as the
+    original is entry-weighted. Eviction drains T1's LRU while T1 exceeds
+    ``p``, else T2's LRU.
+
+    Ghost hits are detected at insert time (``_note_insert``): the tier's
+    read path is get-then-put, so the refetch after a ghost hit is the
+    moment the key returns.
+    """
+
+    def __init__(self, capacity_bytes: int):
+        super().__init__(capacity_bytes)
+        self._t1: "OrderedDict[str, int]" = OrderedDict()   # path -> size
+        self._t2: "OrderedDict[str, int]" = OrderedDict()
+        self._b1: "OrderedDict[str, int]" = OrderedDict()   # ghosts
+        self._b2: "OrderedDict[str, int]" = OrderedDict()
+        self._t1_bytes = self._t2_bytes = 0
+        self._b1_bytes = self._b2_bytes = 0
+        self._p = 0.0                      # target byte share for T1
+
+    def _on_hit(self, path: str) -> None:
+        self._entries.move_to_end(path)
+        if path in self._t1:               # second touch: promote
+            self._t2[path] = self._t1.pop(path)
+            self._t1_bytes -= self._t2[path]
+            self._t2_bytes += self._t2[path]
+        elif path in self._t2:
+            self._t2.move_to_end(path)
+
+    def _ghost_trim(self) -> None:
+        # classic ARC bounds |B1|<=c and |L1|+|L2|<=2c; byte-weighted here
+        while self._b1_bytes > self.capacity_bytes and len(self._b1) > 1:
+            _, s = self._b1.popitem(last=False)
+            self._b1_bytes -= s
+        while self._b2_bytes > self.capacity_bytes and len(self._b2) > 1:
+            _, s = self._b2.popitem(last=False)
+            self._b2_bytes -= s
+
+    def _note_insert(self, path: str, nbytes: int, *,
+                     replaced: bool) -> None:
+        if replaced:                       # resident refresh: keep list,
+            for lst, attr in ((self._t1, "_t1_bytes"),
+                              (self._t2, "_t2_bytes")):
+                if path in lst:            # update the byte count
+                    setattr(self, attr,
+                            getattr(self, attr) + nbytes - lst[path])
+                    lst[path] = nbytes
+                    return
+            self._t1[path] = nbytes        # untracked resident (defensive)
+            self._t1_bytes += nbytes
+            return
+        if path in self._b1:
+            # recency ghost hit: T1 was too small — grow p, weighted by
+            # how lopsided the ghosts are (rarer signal => bigger step)
+            ratio = max(1.0, self._b2_bytes / max(self._b1_bytes, 1))
+            self._p = min(self._p + ratio * nbytes,
+                          float(self.capacity_bytes))
+            self._b1_bytes -= self._b1.pop(path)
+            self._t2[path] = nbytes        # proven reuse -> frequent list
+            self._t2_bytes += nbytes
+        elif path in self._b2:
+            ratio = max(1.0, self._b1_bytes / max(self._b2_bytes, 1))
+            self._p = max(self._p - ratio * nbytes, 0.0)
+            self._b2_bytes -= self._b2.pop(path)
+            self._t2[path] = nbytes
+            self._t2_bytes += nbytes
+        else:                              # brand new: recency list
+            self._t1[path] = nbytes
+            self._t1_bytes += nbytes
+
+    def _pick_victim(self) -> str:
+        if self._t1 and (self._t1_bytes > self._p or not self._t2):
+            return next(iter(self._t1))
+        if self._t2:
+            return next(iter(self._t2))
+        return next(iter(self._entries))   # unreachable if lists are sound
+
+    def _evicted(self, path: str, entry: CachedEntry) -> None:
+        if path in self._t1:
+            self._t1_bytes -= self._t1.pop(path)
+            self._b1[path] = entry.size
+            self._b1_bytes += entry.size
+        elif path in self._t2:
+            self._t2_bytes -= self._t2.pop(path)
+            self._b2[path] = entry.size
+            self._b2_bytes += entry.size
+        self._ghost_trim()
+
+    def _forget(self, path: str) -> None:
+        # unlink: the name must vanish from resident AND ghost history —
+        # a rewrite of the freed path is a new file, not a ghost hit
+        if path in self._t1:
+            self._t1_bytes -= self._t1.pop(path)
+        if path in self._t2:
+            self._t2_bytes -= self._t2.pop(path)
+        if path in self._b1:
+            self._b1_bytes -= self._b1.pop(path)
+        if path in self._b2:
+            self._b2_bytes -= self._b2.pop(path)
+
+    def _on_clear(self) -> None:
+        for lst in (self._t1, self._t2, self._b1, self._b2):
+            lst.clear()
+        self._t1_bytes = self._t2_bytes = 0
+        self._b1_bytes = self._b2_bytes = 0
+        self._p = 0.0
+
+
+class GdsfCache(ByteCache):
+    """Greedy-Dual-Size-Frequency (Cherkasova '98).
+
+    Each resident entry has priority ``H = L + freq * cost / size`` with
+    uniform cost (every miss is one remote fetch); ``L`` is the global
+    inflation value, raised to the evicted entry's priority on each
+    eviction so long-resident entries must keep earning hits to stay
+    above newcomers. Eviction removes the smallest ``H`` — small hot
+    files beat a huge once-read blob at equal frequency, the right shape
+    for mixed file sizes. ``cost_bytes`` scales the cost term (priority =
+    L + freq * cost_bytes / size) so byte-valued sizes don't drown the
+    frequency signal; it defaults to a typical payload size.
+    """
+
+    def __init__(self, capacity_bytes: int, *, cost_bytes: float = 4096.0):
+        super().__init__(capacity_bytes)
+        if cost_bytes <= 0:
+            raise ValueError("cost_bytes must be > 0")
+        self.cost_bytes = cost_bytes
+        self._L = 0.0
+        self._freq: Dict[str, int] = {}
+        self._H: Dict[str, float] = {}
+
+    def _priority(self, path: str, nbytes: int) -> float:
+        return self._L + (self._freq.get(path, 1)
+                          * self.cost_bytes / max(nbytes, 1))
+
+    def _on_hit(self, path: str) -> None:
+        self._entries.move_to_end(path)          # stable LRU tie-break
+        self._freq[path] = self._freq.get(path, 0) + 1
+        self._H[path] = self._priority(path, self._entries[path].size)
+
+    def _note_insert(self, path: str, nbytes: int, *,
+                     replaced: bool) -> None:
+        self._freq[path] = self._freq.get(path, 0) + 1
+        self._H[path] = self._priority(path, nbytes)
+
+    def _pick_victim(self) -> str:
+        return min(self._entries, key=lambda p: self._H.get(p, 0.0))
+
+    def _evicted(self, path: str, entry: CachedEntry) -> None:
+        # inflation: everything that stays must now beat this bar
+        self._L = max(self._L, self._H.pop(path, self._L))
+        self._freq.pop(path, None)
+
+    def _forget(self, path: str) -> None:
+        # unlink (NOT an eviction): no inflation — deleting a cold output
+        # must not raise the bar for the survivors
+        self._H.pop(path, None)
+        self._freq.pop(path, None)
+
+    def _on_clear(self) -> None:
+        self._L = 0.0
+        self._freq.clear()
+        self._H.clear()
+
+
+class PredictiveCache(ByteCache):
+    """Online Belady approximation from observed reuse distances.
+
+    A virtual clock ticks on every demand access (``get`` — hit or miss;
+    prefetch ``put`` does not tick, so inserts ahead of the demand stream
+    leave distances exact, mirroring :class:`BeladyCache`). Each path
+    keeps an EWMA of its observed reuse distances; its predicted next use
+    is ``last_access + ewma``. Eviction removes the resident with the
+    farthest predicted next use — exactly Belady's rule, with the oracle
+    replaced by history.
+
+    Two edge rules make it behave:
+
+    * **Overdue flip** — an entry past its predicted reuse
+      (``last + ewma < now``) is increasingly likely dead, so its score
+      is reflected forward: ``now + (now - (last + ewma))``. The longer
+      overdue, the farther predicted, the sooner evicted.
+    * **Cold fallback** — a path with no observed reuse yet borrows the
+      global mean reuse distance, scaled down by its lifetime access
+      count (frequency rank: historically popular paths are predicted to
+      return sooner). With every path cold this degenerates to LRU order,
+      so the predictor never does worse than the baseline it upgrades.
+
+    History (``last``, ``ewma``, frequency) deliberately survives
+    eviction — relearning a path's period on every readmission would
+    forget exactly the information the predictor exists to keep. It does
+    NOT survive :meth:`invalidate` (the file is gone) or :meth:`clear`.
+    """
+
+    def __init__(self, capacity_bytes: int, *, alpha: float = 0.3):
+        super().__init__(capacity_bytes)
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = alpha
+        self._now = 0
+        self._last: Dict[str, int] = {}
+        self._ewma: Dict[str, float] = {}
+        self._freq: Dict[str, int] = {}
+        self._gsum = 0.0                   # global reuse-distance mean
+        self._gcount = 0
+
+    def _observe(self, path: str) -> None:
+        self._now += 1
+        last = self._last.get(path)
+        if last is not None:
+            d = float(self._now - last)
+            prev = self._ewma.get(path)
+            self._ewma[path] = (d if prev is None
+                                else self.alpha * d
+                                + (1.0 - self.alpha) * prev)
+            self._gsum += d
+            self._gcount += 1
+        self._last[path] = self._now
+        self._freq[path] = self._freq.get(path, 0) + 1
+
+    def _on_hit(self, path: str) -> None:
+        self._entries.move_to_end(path)          # LRU order = cold order
+        self._observe(path)
+
+    def _on_miss(self, path: str) -> None:
+        self._observe(path)
+
+    def _predicted_next_use(self, path: str) -> float:
+        last = self._last.get(path, 0)
+        ewma = self._ewma.get(path)
+        if ewma is None:
+            gmean = (self._gsum / self._gcount) if self._gcount else 1.0
+            ewma = gmean / max(self._freq.get(path, 1), 1)
+        pred = last + ewma
+        if pred < self._now:               # overdue: reflect forward
+            pred = self._now + (self._now - pred)
+        return pred
+
+    def _pick_victim(self) -> str:
+        return max(self._entries, key=self._predicted_next_use)
+
+    def _forget(self, path: str) -> None:
+        self._last.pop(path, None)
+        self._ewma.pop(path, None)
+        self._freq.pop(path, None)
+
+    def _on_clear(self) -> None:
+        self._now = 0
+        self._last.clear()
+        self._ewma.clear()
+        self._freq.clear()
+        self._gsum = 0.0
+        self._gcount = 0
 
 
 class NodeCacheTier:
@@ -408,18 +766,25 @@ class NodeCacheTier:
       This is the comparison baseline, and also an isolation mode for
       workers with disjoint working sets.
 
-    Per-worker ATTRIBUTION rides beside the member caches' own stats:
-    every ``get`` books its hit/miss (and hit bytes) onto that worker's
-    :class:`CacheStats` under the tier lock, so "which worker's reads
-    hit" is answerable while the node totals stay the tier truth — the
-    sums match the member-cache totals by construction (pinned in
-    tests). The lock matters: transport-pool workers and socket serving
-    threads hit one tier concurrently.
+    Per-worker (and per-job) ATTRIBUTION rides beside the member caches'
+    own stats: every ``get`` books its hit/miss (and hit bytes) onto that
+    worker's :class:`CacheStats` — and, when the caller names a ``job``,
+    onto that job's ledger too — under the tier lock, so "which worker's
+    (or which job's) reads hit" is answerable while the node totals stay
+    the tier truth — the sums match the member-cache totals by
+    construction (pinned in tests; the same discipline as the serving
+    plane's tenant ledger). The lock matters: transport-pool workers and
+    socket serving threads hit one tier concurrently.
     """
+
+    #: ledger key for reads that never named a job — keeps the per-job
+    #: sums equal to the tier totals by construction
+    DEFAULT_JOB = "default"
 
     def __init__(self, node_id: int, policy: Union[str, Callable[[int], ByteCache]],
                  capacity_bytes: int, *, workers: int = 1,
-                 scope: str = "node"):
+                 scope: str = "node",
+                 policy_options: Optional[Dict[str, object]] = None):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         if scope not in ("node", "worker"):
@@ -429,18 +794,22 @@ class NodeCacheTier:
         self.policy = policy
         self.scope = scope
         self.capacity_bytes = capacity_bytes
+        self.policy_options = dict(policy_options or {})
         self.worker_ids = tuple(range(workers))
         if scope == "node":
-            shared = make_cache(policy, capacity_bytes)
+            shared = make_cache(policy, capacity_bytes,
+                                **self.policy_options)
             self._members: Dict[int, ByteCache] = {
                 w: shared for w in self.worker_ids}
         else:
             per = capacity_bytes // workers
-            self._members = {w: make_cache(policy, per)
+            self._members = {w: make_cache(policy, per,
+                                           **self.policy_options)
                              for w in self.worker_ids}
         self._lock = threading.Lock()
         self.worker_stats: Dict[int, CacheStats] = {
             w: CacheStats() for w in self.worker_ids}
+        self.job_stats: Dict[str, CacheStats] = {}
 
     # ---- views -------------------------------------------------------------
     def cache_for(self, worker_id: int = 0) -> ByteCache:
@@ -487,26 +856,43 @@ class NodeCacheTier:
         return any(path in c for c in self.member_caches())
 
     # ---- the attributed read/insert surface --------------------------------
+    def _job_ledger(self, job: Optional[str]) -> CacheStats:
+        """The (lazily created) ledger for ``job`` — ``None`` books onto
+        :attr:`DEFAULT_JOB` so job sums always equal tier totals."""
+        key = job if job is not None else self.DEFAULT_JOB
+        st = self.job_stats.get(key)
+        if st is None:
+            st = self.job_stats[key] = CacheStats()
+        return st
+
     def get(self, path: str, *, worker_id: int = 0,
-            require_data: bool = False) -> Optional[CachedEntry]:
-        """Member-cache ``get`` plus per-worker attribution (a disabled
-        tier attributes nothing, mirroring ``ByteCache.get``)."""
+            require_data: bool = False,
+            job: Optional[str] = None) -> Optional[CachedEntry]:
+        """Member-cache ``get`` plus per-worker and per-job attribution
+        (a disabled tier attributes nothing, mirroring
+        ``ByteCache.get``)."""
         cache = self.cache_for(worker_id)
         entry = cache.get(path, require_data=require_data)
         if cache.enabled:
             with self._lock:
                 st = self.worker_stats[worker_id]
+                jt = self._job_ledger(job)
                 if entry is None:
                     st.misses += 1
+                    jt.misses += 1
                 else:
                     st.hits += 1
                     st.hit_bytes += entry.size
+                    jt.hits += 1
+                    jt.hit_bytes += entry.size
         return entry
 
     def put(self, path: str, data: Optional[bytes], *,
-            size: Optional[int] = None, worker_id: int = 0) -> int:
+            size: Optional[int] = None, worker_id: int = 0,
+            job: Optional[str] = None) -> int:
         """Insert through the worker's member cache; returns evictions.
-        Insert/eviction attribution lands on the inserting worker."""
+        Insert/eviction attribution lands on the inserting worker (and
+        its job)."""
         cache = self.cache_for(worker_id)
         evicted = cache.put(path, data, size=size)
         if cache.enabled:
@@ -514,6 +900,9 @@ class NodeCacheTier:
                 st = self.worker_stats[worker_id]
                 st.insertions += 1
                 st.evictions += evicted
+                jt = self._job_ledger(job)
+                jt.insertions += 1
+                jt.evictions += evicted
         return evicted
 
     # ---- maintenance -------------------------------------------------------
@@ -528,11 +917,13 @@ class NodeCacheTier:
             c.clear()
 
     def reset_stats(self) -> None:
-        """Reset the per-worker attribution ledger (member-cache lifetime
-        stats are theirs to keep; benchmarks compare fresh tiers)."""
+        """Reset the per-worker and per-job attribution ledgers
+        (member-cache lifetime stats are theirs to keep; benchmarks
+        compare fresh tiers)."""
         with self._lock:
             for w in self.worker_ids:
                 self.worker_stats[w] = CacheStats()
+            self.job_stats.clear()
 
     # ---- clairvoyant futures (Belady) --------------------------------------
     def set_future(self, trace: Sequence[str]) -> bool:
@@ -560,23 +951,53 @@ class NodeCacheTier:
             return True
         return False
 
+    def extend_future(self, trace: Sequence[str]) -> bool:
+        """Append another epoch's node-merged trace after the installed
+        one (cross-epoch stitching: clairvoyant eviction stays exact at
+        the epoch seam instead of seeing next-use = infinity for every
+        path once the current epoch's occurrences drain)."""
+        fed = False
+        for c in self.member_caches():
+            if hasattr(c, "extend_future"):
+                c.extend_future(trace)
+                fed = True
+        return fed
 
-CACHE_POLICIES: Dict[str, Callable[[int], ByteCache]] = {
+    def extend_worker_future(self, worker_id: int,
+                             trace: Sequence[str]) -> bool:
+        """Append one worker's next-epoch trace on ITS member cache
+        (the ``scope="worker"`` counterpart of :meth:`extend_future`)."""
+        cache = self.cache_for(worker_id)
+        if hasattr(cache, "extend_future"):
+            cache.extend_future(trace)
+            return True
+        return False
+
+
+CACHE_POLICIES: Dict[str, Callable[..., ByteCache]] = {
     "lru": ByteLRUCache,
     "belady": BeladyCache,
     "2q": TwoQCache,
+    "lfu": LFUCache,
+    "arc": ArcCache,
+    "gdsf": GdsfCache,
+    "predictive": PredictiveCache,
 }
 
 
-def make_cache(policy: Union[str, Callable[[int], ByteCache]],
-               capacity_bytes: int) -> ByteCache:
-    """Build a cache for ``policy`` — a registry name ("lru" / "belady" /
-    "2q") or any callable ``capacity_bytes -> ByteCache``."""
+def make_cache(policy: Union[str, Callable[..., ByteCache]],
+               capacity_bytes: int, **options: object) -> ByteCache:
+    """Build a cache for ``policy`` — a registry name (see
+    ``CACHE_POLICIES``) or any callable ``capacity_bytes -> ByteCache``.
+    ``options`` are forwarded to the constructor (per-policy knobs, e.g.
+    ``kin``/``kout`` for 2Q or ``alpha`` for the predictor) — the
+    transport for ``ClusterSpec.cache_policy_options``."""
     if callable(policy):
-        return policy(capacity_bytes)
+        return policy(capacity_bytes, **options)
     try:
-        return CACHE_POLICIES[policy](capacity_bytes)
+        ctor = CACHE_POLICIES[policy]
     except KeyError:
         raise ValueError(
             f"unknown cache policy {policy!r}; "
             f"known: {sorted(CACHE_POLICIES)}") from None
+    return ctor(capacity_bytes, **options)

@@ -143,7 +143,8 @@ class FanStoreCluster:
         self.cache_tiers: Dict[int, NodeCacheTier] = {
             i: NodeCacheTier(i, spec.cache_policy, spec.cache_bytes,
                              workers=spec.workers_per_node,
-                             scope=spec.cache_scope)
+                             scope=spec.cache_scope,
+                             policy_options=spec.cache_policy_options)
             for i in range(spec.num_nodes)}
         self.failed: set = set()
         self._lock = threading.Lock()
@@ -179,7 +180,9 @@ class FanStoreCluster:
         """Open a per-worker session: the one client surface co-located
         workers share a node cache tier through. ``session_kwargs`` pass
         to :class:`repro.fanstore.api.FanStoreSession` (``mount=``,
-        ``lane=``, and the serving plane's ``read_lane=``/``tenant=``)."""
+        ``lane=``, the serving plane's ``read_lane=``/``tenant=``, and
+        the multi-job seam's ``job=`` — two jobs, e.g. train + eval,
+        attach to one namespace/tier with per-job cache attribution)."""
         ctx = WorkerContext(node_id, worker_id)
         if ctx.node_id not in self.nodes:
             raise ValueError(f"node_id {node_id} outside the "
@@ -318,7 +321,8 @@ class FanStoreCluster:
             self.cache_tiers[node_id] = NodeCacheTier(
                 node_id, self.spec.cache_policy, self.spec.cache_bytes,
                 workers=self.spec.workers_per_node,
-                scope=self.spec.cache_scope)
+                scope=self.spec.cache_scope,
+                policy_options=self.spec.cache_policy_options)
             if hasattr(self.placement, "add_node"):
                 self.placement.add_node(node_id)
         self.failed.discard(node_id)
@@ -608,7 +612,8 @@ class FanStoreCluster:
 
     def read(self, requester: int, path: str, *, worker_id: int = 0,
              materialize: bool = True, lane: str = "consume",
-             tenant: Optional[str] = None) -> bytes:
+             tenant: Optional[str] = None,
+             job: Optional[str] = None) -> bytes:
         """Whole-file read as the training process sees it (paper §3.4).
 
         ``materialize=False`` runs the identical placement + timeline
@@ -618,12 +623,13 @@ class FanStoreCluster:
         """
         return self.read_many(requester, [path], worker_id=worker_id,
                               materialize=materialize, batched=False,
-                              lane=lane, tenant=tenant)[0]
+                              lane=lane, tenant=tenant, job=job)[0]
 
     def read_many(self, requester: int, paths: Sequence[str], *,
                   worker_id: int = 0, materialize: bool = True,
                   batched: bool = True, lane: str = "consume",
-                  tenant: Optional[str] = None) -> List[bytes]:
+                  tenant: Optional[str] = None,
+                  job: Optional[str] = None) -> List[bytes]:
         """Batched read: all remote requests for one owner ride ONE round trip.
 
         ``batched=False`` degrades to per-file round trips (the paper's
@@ -639,6 +645,12 @@ class FanStoreCluster:
         the concurrent ``NodeClock.serve_app_s`` timeline attributed to
         ``tenant``, so hundreds of read-mostly serving tenants overlap —
         rather than serialize into — the trainer's demand lane.
+
+        ``job`` names which attached job (e.g. ``"train"`` vs ``"eval"``)
+        issued the read: every cache hit/miss is additionally booked onto
+        that job's attribution row on BOTH the tier ledger and the
+        ``NodeClock``, so two jobs sharing one node tier tie out exactly
+        against the tier totals (tenant-ledger discipline).
         """
         if requester in self.failed:
             raise IOError(f"node {requester} is failed")
@@ -656,15 +668,17 @@ class FanStoreCluster:
             item = self._fetch_item(path, st, loc)
             if tier.enabled:
                 entry = tier.get(path, worker_id=worker_id,
-                                 require_data=materialize)
+                                 require_data=materialize, job=job)
                 if entry is not None:
                     self.transport.account_cache_hit(requester, item,
                                                      worker_id=worker_id,
-                                                     lane=lane, tenant=tenant)
+                                                     lane=lane, tenant=tenant,
+                                                     job=job)
                     out[i] = entry.data if materialize else b""
                     continue
                 self.transport.account_cache_miss(requester,
-                                                  worker_id=worker_id)
+                                                  worker_id=worker_id,
+                                                  job=job)
             if self.nodes[requester].has(path) or \
                     self.nodes[requester].has_output(path):
                 data = self.transport.fetch_local(requester, item,
@@ -673,7 +687,8 @@ class FanStoreCluster:
                 out[i] = data
                 if tier.enabled:
                     ev = tier.put(path, data if materialize else None,
-                                  size=item.size, worker_id=worker_id)
+                                  size=item.size, worker_id=worker_id,
+                                  job=job)
                     self.transport.account_cache_eviction(requester, ev)
                 continue
             owner = self._choose_owner(loc, item, pending_serve)
@@ -685,7 +700,8 @@ class FanStoreCluster:
             out[slot] = data
             if tier.enabled:
                 ev = tier.put(item.path, data if materialize else None,
-                              size=item.size, worker_id=worker_id)
+                              size=item.size, worker_id=worker_id,
+                              job=job)
                 self.transport.account_cache_eviction(requester, ev)
 
         self._fetch_with_failover(requester, groups,
@@ -696,13 +712,14 @@ class FanStoreCluster:
 
     def read_many_async(self, requester: int, paths: Sequence[str], *,
                         worker_id: int = 0, materialize: bool = True,
-                        lane: str = "consume", tenant: Optional[str] = None
+                        lane: str = "consume", tenant: Optional[str] = None,
+                        job: Optional[str] = None
                         ) -> "Future[List[bytes]]":
         """Batched read on the transport's I/O pool; returns a Future."""
         return self.transport.submit(self.read_many, requester, list(paths),
                                      worker_id=worker_id,
                                      materialize=materialize,
-                                     lane=lane, tenant=tenant)
+                                     lane=lane, tenant=tenant, job=job)
 
     # ---- scheduled prefetch (repro.fanstore.prefetch drives this) ----------
     def prefetch_window(self, requester: int, paths: Sequence[str], *,

@@ -13,7 +13,12 @@ scale. Two pieces:
   from an explicit per-step trace (``from_trace``). The schedule also
   yields each requester's demand-access sequence (``future_paths``) — the
   exact-reuse-distance oracle :class:`repro.fanstore.cache.BeladyCache`
-  evicts by.
+  evicts by. ``from_sampler(epochs=K)`` stitches K consecutive epochs
+  into ONE globally-stepped horizon, so prefetch windows flow across the
+  epoch boundary (the tail of epoch e covers the head of e+1 — no
+  drain-and-refill stall) and the Belady oracle stays exact at the seam;
+  ``install_futures(extend=True)`` appends a later schedule to a tier's
+  already-installed future for the same effect incrementally.
 * :class:`PrefetchScheduler` — drives one requester's schedule through the
   transport's window-level async path: the horizon is cut into lookahead
   windows of ``window_steps`` training steps, and each window issues ONE
@@ -102,15 +107,22 @@ class EpochSchedule:
         self.num_steps = max(
             (reads[-1].step + 1 for reads in self._reads.values() if reads),
             default=0)
+        # multi-epoch metadata (set by from_sampler(epochs=K)): steps are
+        # GLOBAL across the stitched horizon — epoch e's step s is global
+        # step e * steps_per_epoch + s, matching PrefetchLoader's
+        # monotonically increasing schedule step
+        self.epochs = 1
+        self.steps_per_epoch = self.num_steps
 
     # ---- construction ------------------------------------------------------
     @classmethod
     def from_sampler(cls, sampler, paths: Sequence[str], *,
                      num_requesters: int, workers_per_node: int = 1,
-                     cluster=None,
-                     epoch: Optional[int] = None) -> "EpochSchedule":
-        """Materialize the epoch's permutation from any checkpointable
-        sampler (``state``/``restore``/``next_batch``) without advancing it.
+                     cluster=None, epoch: Optional[int] = None,
+                     epochs: int = 1) -> "EpochSchedule":
+        """Materialize the permutation of ``epochs`` consecutive epochs
+        from any checkpointable sampler (``state``/``restore``/
+        ``next_batch``) without advancing it.
 
         Each global batch is split into ``num_requesters`` contiguous
         per-requester slices — the convention the device tier and
@@ -123,13 +135,31 @@ class EpochSchedule:
         (optional) annotates each read with its expected serving node
         (informational — the scheduler re-resolves owners at issue time
         against the live failure set).
+
+        With ``epochs=K > 1`` the schedule is the STITCHED K-epoch
+        horizon starting at ``epoch`` (default: the sampler's current
+        epoch): each epoch is peeked via ``peek_epoch(base + e)`` and its
+        steps offset by ``e * steps_per_epoch``, so one schedule spans
+        the epoch boundary. Prefetch windows then flow straight across
+        it (no drain-and-refill stall at epoch end) and Belady's oracle
+        sees the next epoch's reuses instead of next-use = infinity for
+        every path as the first epoch drains.
         """
         if workers_per_node < 1:
             raise ValueError("workers_per_node must be >= 1")
         if num_requesters % workers_per_node:
             raise ValueError("workers_per_node must divide num_requesters "
                              "(one slice per (node, worker))")
-        batches = sampler.peek_epoch(epoch)
+        if epochs < 1:
+            raise ValueError("epochs must be >= 1")
+        # minimal duck-typed samplers carry peek_epoch but no .state; they
+        # keep working as long as no stitched base epoch must be derived
+        base = (epoch if epoch is not None
+                else getattr(getattr(sampler, "state", None), "epoch", None))
+        if base is None and epochs > 1:
+            raise ValueError("epochs > 1 needs a sampler with .state.epoch "
+                             "(or an explicit epoch=) to number the "
+                             "stitched horizon")
 
         def key(r: int) -> Requester:
             if workers_per_node == 1:
@@ -138,18 +168,29 @@ class EpochSchedule:
 
         reads: Dict[Requester, List[ScheduledRead]] = {
             key(r): [] for r in range(num_requesters)}
-        for step, batch in enumerate(batches):
-            if len(batch) % num_requesters:
-                raise ValueError(
-                    "num_requesters must divide the global batch size")
-            per = len(batch) // num_requesters
-            for r in range(num_requesters):
-                node = _req_key(key(r))[0]
-                for idx in batch[r * per:(r + 1) * per]:
-                    path = paths[int(idx)].strip("/")
-                    owner = _resolve_owner(cluster, node, path)
-                    reads[key(r)].append(ScheduledRead(step, path, owner))
-        return cls(reads)
+        step_base = 0
+        steps_per_epoch = 0
+        for e in range(epochs):
+            batches = sampler.peek_epoch(None if base is None else base + e)
+            for step, batch in enumerate(batches):
+                if len(batch) % num_requesters:
+                    raise ValueError(
+                        "num_requesters must divide the global batch size")
+                per = len(batch) // num_requesters
+                for r in range(num_requesters):
+                    node = _req_key(key(r))[0]
+                    for idx in batch[r * per:(r + 1) * per]:
+                        path = paths[int(idx)].strip("/")
+                        owner = _resolve_owner(cluster, node, path)
+                        reads[key(r)].append(
+                            ScheduledRead(step_base + step, path, owner))
+            if e == 0:
+                steps_per_epoch = len(batches)
+            step_base += len(batches)
+        sched = cls(reads)
+        sched.epochs = epochs
+        sched.steps_per_epoch = steps_per_epoch
+        return sched
 
     @classmethod
     def from_trace(cls, traces: Mapping[Requester, Sequence[Sequence[str]]],
@@ -199,23 +240,29 @@ class EpochSchedule:
         return [path for _, _, _, path in merged]
 
     def install_futures(self, cluster,
-                        requesters: Optional[Sequence[Requester]] = None
-                        ) -> int:
+                        requesters: Optional[Sequence[Requester]] = None,
+                        *, extend: bool = False) -> int:
         """Hand future traces to the requesters' cache tiers (no-op for
         policies without a ``set_future`` hook). A shared tier
         (``cache_scope="node"``) receives the node-merged trace ONCE per
         node — co-located workers must not clobber each other's oracle
         with single-worker views; private per-worker caches receive their
-        own worker's trace. Returns the number of caches fed."""
+        own worker's trace. Returns the number of caches fed.
+
+        ``extend=True`` APPENDS this schedule's traces after whatever is
+        already installed instead of replacing it — the cross-epoch
+        stitch: feed epoch e+1's schedule to a tier mid-epoch-e and
+        clairvoyant eviction stays exact across the seam."""
         fed = 0
         reqs = list(requesters if requesters is not None
                     else self.requesters)
         tiers = getattr(cluster, "cache_tiers", None)
         if tiers is None:              # pre-topology cluster duck-type
+            verb = "extend_future" if extend else "set_future"
             for r in reqs:
                 cache = cluster.caches.get(r)
-                if cache is not None and hasattr(cache, "set_future"):
-                    cache.set_future(self.future_paths(r))
+                if cache is not None and hasattr(cache, verb):
+                    getattr(cache, verb)(self.future_paths(r))
                     fed += 1
             return fed
         done_nodes = set()
@@ -228,10 +275,14 @@ class EpochSchedule:
                 if node in done_nodes:
                     continue
                 done_nodes.add(node)
-                if tier.set_future(self.node_future(node)):
+                feed = (tier.extend_future if extend else tier.set_future)
+                if feed(self.node_future(node)):
                     fed += 1
-            elif tier.set_worker_future(worker, self.future_paths(r)):
-                fed += 1
+            else:
+                feed = (tier.extend_worker_future if extend
+                        else tier.set_worker_future)
+                if feed(worker, self.future_paths(r)):
+                    fed += 1
         return fed
 
 

@@ -159,6 +159,11 @@ class ClusterSpec:
     cache_policy: str = "lru"
     cache_bytes: int = 0              # per-NODE tier budget (all workers)
     cache_scope: str = "node"         # "node" shared tier | "worker" private
+    # per-policy constructor knobs forwarded to make_cache (e.g.
+    # {"kin": 0.25, "kout": 2.0} for 2Q, {"alpha": 0.3} for the
+    # predictor, {"aging_interval": 1024} for LFU) — validated at build
+    # time by the policy constructor itself
+    cache_policy_options: Mapping[str, Any] = field(default_factory=dict)
     placement: str = "modulo"
     selector: str = "least-loaded"
     replication: int = 1
@@ -244,6 +249,18 @@ class ClusterSpec:
             object.__setattr__(self, "faults", pol)
         object.__setattr__(self, "backend_options",
                            dict(self.backend_options or {}))
+        opts = dict(self.cache_policy_options or {})
+        if opts:
+            from repro.fanstore.cache import make_cache
+            try:
+                # build a throwaway 1-byte cache: unknown knob names and
+                # out-of-range values fail HERE, at spec build time
+                make_cache(self.cache_policy, 1, **opts)
+            except TypeError:
+                raise ValueError(
+                    f"cache_policy_options {sorted(opts)} not accepted by "
+                    f"cache policy {self.cache_policy!r}") from None
+        object.__setattr__(self, "cache_policy_options", opts)
         if self.interconnect is not None:
             known = {f.name for f in fields(InterconnectModel)}
             net = dict(self.interconnect)
@@ -315,7 +332,8 @@ class ClusterSpec:
     # ---- the legacy-kwargs shim --------------------------------------------
     #: legacy FanStoreCluster kwarg -> spec field (identity unless renamed)
     LEGACY_KWARGS = ("codec", "backend", "backend_options", "cache_policy",
-                     "cache_bytes", "cache_scope", "workers_per_node",
+                     "cache_bytes", "cache_scope", "cache_policy_options",
+                     "workers_per_node",
                      "placement", "selector", "replication", "io_threads",
                      "interconnect", "wire_stripes", "wire_codec",
                      "faults", "fault_threshold", "retry_backoff_s",

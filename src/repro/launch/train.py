@@ -99,7 +99,23 @@ def main() -> None:
     ap.add_argument("--prefetch-window", type=int, default=8,
                     help="lookahead window in training steps for "
                          "--prefetch-schedule")
+    ap.add_argument("--epochs", type=int, default=0,
+                    help="with --prefetch-schedule: stitch this many "
+                         "consecutive epochs into ONE schedule "
+                         "(EpochSchedule.from_sampler(epochs=K)) so "
+                         "lookahead windows flow across epoch boundaries "
+                         "with no drain-and-refill stall and the Belady "
+                         "oracle stays exact at the seam; --steps is then "
+                         "derived as epochs * steps_per_epoch "
+                         "(0 = single-epoch schedule, --steps drives)")
     args = ap.parse_args()
+    if args.epochs:
+        if not args.prefetch_schedule:
+            raise SystemExit("--epochs requires --prefetch-schedule "
+                             "(it parameterizes the stitched schedule)")
+        # derive the step budget up front so the optimizer schedule and
+        # the stitched EpochSchedule agree on the horizon
+        args.steps = args.epochs * (args.num_samples // args.global_batch)
 
     cfg = (get_smoke if args.preset == "smoke" else get_config)(args.arch)
     if cfg.family in ("audio", "vlm"):
@@ -177,21 +193,29 @@ def main() -> None:
 
     scheduler = None
     if args.prefetch_schedule:
-        # the epoch's permutation is fully determined by the sampler seed:
-        # materialize it WITHOUT advancing the sampler, axed per
-        # (node, worker), and run one clairvoyant driver per coordinate so
-        # every node keeps its own lookahead windows in flight
+        # the permutation of every epoch is fully determined by the
+        # sampler seed: materialize it WITHOUT advancing the sampler,
+        # axed per (node, worker), and run one clairvoyant driver per
+        # coordinate so every node keeps its own lookahead windows in
+        # flight. --epochs K stitches K epochs into one globally-stepped
+        # horizon: windows flow across the epoch boundary instead of
+        # draining at epoch end.
+        stitch = max(1, args.epochs)
         schedule = EpochSchedule.from_sampler(sampler, paths,
                                               num_requesters=num_loaders,
                                               workers_per_node=workers,
-                                              cluster=cluster)
+                                              cluster=cluster,
+                                              epochs=stitch)
         scheduler = SchedulerGroup.for_schedule(
             cluster, schedule, window_steps=args.prefetch_window)
         print(f"prefetch-schedule: {len(scheduler)} loaders "
               f"({args.nodes} nodes x {workers} workers), "
               f"{scheduler.num_windows} windows of "
               f"{args.prefetch_window} steps over "
-              f"{schedule.num_steps} steps")
+              f"{schedule.num_steps} steps"
+              + (f" ({stitch} stitched epochs x "
+                 f"{schedule.steps_per_epoch} steps)"
+                 if stitch > 1 else ""))
 
     loader = PrefetchLoader(sampler, fetch_many=fetch_many, decode=decode,
                             num_threads=args.io_threads, depth=2,

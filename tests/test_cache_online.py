@@ -1,0 +1,365 @@
+"""Online cache intelligence: LFU / ARC / GDSF / Predictive policy
+behavior, invalidate/clear correctness across every policy, cross-epoch
+prefetch stitching, and per-job cache attribution tie-out."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data.sampler import GlobalUniformSampler
+from repro.fanstore.cache import (ArcCache, ByteLRUCache, GdsfCache,
+                                  LFUCache, PredictiveCache, TwoQCache,
+                                  make_cache)
+from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.prefetch import EpochSchedule, PrefetchScheduler
+from repro.fanstore.prepare import prepare_dataset
+from repro.fanstore.spec import ClusterSpec
+
+
+ONLINE_POLICIES = ["lru", "2q", "lfu", "arc", "gdsf", "predictive"]
+
+
+def simulate(cache, trace, size=100):
+    """Demand-read loop as the cluster drives it: get, then put on miss."""
+    for p in trace:
+        if cache.get(p) is None:
+            cache.put(p, b"x" * size)
+    return cache.stats
+
+
+def permutation_trace(num_files, epochs, seed=0):
+    """Per-epoch full permutations — the paper's global-shuffle access."""
+    rng = np.random.default_rng(seed)
+    paths = [f"f{i}" for i in range(num_files)]
+    out = []
+    for _ in range(epochs):
+        out.extend(paths[int(i)] for i in rng.permutation(num_files))
+    return out
+
+
+# ---- registry / spec plumbing ----------------------------------------------
+
+def test_make_cache_knows_every_online_policy():
+    for name, cls in (("lfu", LFUCache), ("arc", ArcCache),
+                      ("gdsf", GdsfCache), ("predictive", PredictiveCache)):
+        assert isinstance(make_cache(name, 1000), cls)
+    with pytest.raises(ValueError, match="unknown cache policy"):
+        make_cache("arcc", 1000)
+    with pytest.raises(ValueError, match="did you mean 'arc'"):
+        ClusterSpec(num_nodes=2, cache_bytes=1000, cache_policy="arcc")
+
+
+def test_policy_options_flow_from_spec_to_member_caches():
+    spec = ClusterSpec(num_nodes=2, cache_bytes=1000, cache_policy="lfu",
+                       cache_policy_options={"aging_interval": 7})
+    cluster = FanStoreCluster(spec=spec)
+    assert all(c.aging_interval == 7 for c in cluster.caches.values())
+    with pytest.raises(ValueError, match="cache_policy_options"):
+        ClusterSpec(num_nodes=2, cache_bytes=1000, cache_policy="lru",
+                    cache_policy_options={"aging_interval": 7})
+
+
+# ---- LFU --------------------------------------------------------------------
+
+def test_lfu_evicts_least_frequent():
+    cache = LFUCache(300)
+    for p, hits in (("a", 3), ("b", 2), ("c", 0)):
+        cache.get(p), cache.put(p, b"x" * 100)
+        for _ in range(hits):
+            assert cache.get(p) is not None
+    cache.get("d"), cache.put("d", b"x" * 100)     # evicts c (freq 1)
+    assert "c" not in cache and "a" in cache and "b" in cache
+
+
+def test_lfu_aging_halves_stale_credit():
+    cache = LFUCache(200, aging_interval=4)
+    cache.get("a"), cache.put("a", b"x" * 100)
+    for _ in range(6):                             # a earns credit, then ages
+        cache.get("a")
+    assert cache._freq["a"] < 7                    # halved at least once
+    cache.get("b"), cache.put("b", b"x" * 100)
+    for _ in range(3):
+        cache.get("b")
+    # fresh credit now outranks the aged hot streak's remainder
+    cache.get("c"), cache.put("c", b"x" * 100)
+    assert "b" in cache
+
+
+# ---- ARC --------------------------------------------------------------------
+
+def test_arc_ghost_hit_promotes_to_t2_and_grows_p():
+    cache = ArcCache(200)
+    cache.get("a"), cache.put("a", b"x" * 100)
+    cache.get("b"), cache.put("b", b"x" * 100)
+    cache.get("c"), cache.put("c", b"x" * 100)     # evicts a -> B1 ghost
+    assert "a" in cache._b1 and cache._p == 0.0
+    assert cache.get("a") is None                  # ghost hit: miss, refetch
+    cache.put("a", b"x" * 100)
+    assert "a" in cache._t2 and "a" not in cache._b1
+    assert cache._p > 0.0                          # recency deserved more
+
+
+def test_arc_second_touch_promotes_within_residency():
+    cache = ArcCache(300)
+    cache.get("a"), cache.put("a", b"x" * 100)
+    assert "a" in cache._t1
+    assert cache.get("a") is not None
+    assert "a" in cache._t2 and "a" not in cache._t1
+
+
+# ---- GDSF -------------------------------------------------------------------
+
+def test_gdsf_keeps_small_hot_over_large_cold():
+    cache = GdsfCache(1000, cost_bytes=100.0)
+    cache.get("small"), cache.put("small", b"x" * 100)
+    assert cache.get("small") is not None          # freq 2
+    cache.get("big"), cache.put("big", b"x" * 800)
+    cache.get("more"), cache.put("more", b"x" * 400)   # must evict big
+    assert "big" not in cache and "small" in cache
+
+
+def test_gdsf_inflation_rises_on_eviction_not_invalidate():
+    cache = GdsfCache(200)
+    cache.get("a"), cache.put("a", b"x" * 100)
+    cache.get("b"), cache.put("b", b"x" * 100)
+    cache.get("c"), cache.put("c", b"x" * 100)     # eviction -> L inflates
+    assert cache._L > 0.0
+    before = cache._L
+    cache.invalidate("b")                          # unlink, NOT an eviction
+    assert cache._L == before
+
+
+# ---- Predictive -------------------------------------------------------------
+
+def test_predictive_learns_period_and_evicts_farthest():
+    cache = PredictiveCache(200)
+    # a returns every 2 accesses; b every 8 — teach both periods
+    trace = ["a", "b"] + ["a", "x1", "a", "x2", "a", "b"] * 3
+    simulate(cache, trace)
+    assert cache._ewma["a"] < cache._ewma["b"]
+    # with a and b resident, the next eviction removes the farthest
+    # predicted reuse — which must not be the short-period a
+    cache.clear()
+    simulate(cache, trace)
+    cache.get("a"), cache.put("a", b"x" * 100)
+    cache.get("b"), cache.put("b", b"x" * 100)
+    cache.get("z"), cache.put("z", b"x" * 100)
+    assert "a" in cache
+
+
+def test_predictive_history_survives_eviction():
+    cache = PredictiveCache(200)
+    simulate(cache, ["a", "b", "a", "b"])          # residents a, b; period 2
+    cache.get("c"), cache.get("c")                 # teach c period 1 (misses
+    cache.put("c", b"x" * 100)                     # only), then insert: the
+    assert "a" not in cache                        # overdue a is farthest
+    assert cache._ewma["a"] == 2.0                 # period knowledge kept
+
+
+def test_predictive_beats_lru_on_epoch_permutations():
+    """The paper's global-shuffle trace: recency is anti-predictive (the
+    file just read is a full epoch from reuse), learned periods are not."""
+    trace = permutation_trace(32, 6, seed=0)
+    lru = simulate(ByteLRUCache(16 * 100), trace)
+    pred = simulate(PredictiveCache(16 * 100), trace)
+    assert pred.hit_rate > lru.hit_rate
+
+
+# ---- invalidate / clear across every policy ---------------------------------
+
+def _mentions(cache, path):
+    """Does any policy-side structure still know this path?"""
+    for attr in ("_freq", "_H", "_last", "_ewma", "_t1", "_t2", "_b1",
+                 "_b2", "_a1in", "_ghost", "_future"):
+        d = getattr(cache, attr, None)
+        if d is not None and path in d:
+            return True
+    return path in cache
+
+
+@pytest.mark.parametrize("policy", ONLINE_POLICIES)
+def test_invalidate_forgets_path_everywhere(policy):
+    cache = make_cache(policy, 300)
+    simulate(cache, ["a", "b", "c", "a", "b", "d", "a"])   # force evictions
+    for p in ("a", "b", "c", "d"):
+        cache.invalidate(p)
+        assert not _mentions(cache, p), (policy, p)
+    assert cache.used_bytes == sum(e.size for e in cache._entries.values())
+
+
+def test_arc_invalidated_path_is_not_a_ghost_hit():
+    cache = ArcCache(200)
+    cache.get("a"), cache.put("a", b"x" * 100)
+    cache.get("b"), cache.put("b", b"x" * 100)
+    cache.get("c"), cache.put("c", b"x" * 100)     # a -> B1 ghost
+    cache.invalidate("a")                          # deleted file: no ghost
+    p = cache._p
+    cache.get("a"), cache.put("a", b"x" * 100)     # rewrite = brand new
+    assert "a" in cache._t1 and cache._p == p
+
+
+@pytest.mark.parametrize("policy", ONLINE_POLICIES)
+def test_clear_is_indistinguishable_from_fresh(policy):
+    trace = permutation_trace(12, 3, seed=1)
+    cache = make_cache(policy, 500)
+    simulate(cache, trace)
+    cache.clear()
+    assert cache.used_bytes == 0
+    before = cache.stats.hits
+    simulate(cache, trace)
+    fresh = simulate(make_cache(policy, 500), trace)
+    assert cache.stats.hits - before == fresh.hits, policy
+
+
+# ---- cross-epoch stitching --------------------------------------------------
+
+def test_from_sampler_stitches_consecutive_epochs():
+    paths = [f"d/f{i}.bin" for i in range(16)]
+    sampler = GlobalUniformSampler(16, 8, seed=0)
+    one = EpochSchedule.from_sampler(sampler, paths, num_requesters=2)
+    two = EpochSchedule.from_sampler(sampler, paths, num_requesters=2,
+                                     epochs=2)
+    assert one.epochs == 1 and two.epochs == 2
+    assert two.steps_per_epoch == one.num_steps
+    assert two.num_steps == 2 * one.num_steps
+    # epoch 0 of the stitched horizon IS the single-epoch schedule, and
+    # epoch 1 is numbered right after it (global steps, no reset)
+    r0 = two.for_requester(0)
+    spe = one.steps_per_epoch
+    assert [s for s in r0 if s.step < spe] == one.for_requester(0)
+    assert {s.step for s in r0} == set(range(two.num_steps))
+    # a different permutation per epoch, same multiset of files across
+    # the requesters together (each epoch covers the dataset once)
+    both = two.for_requester(0) + two.for_requester(1)
+    e0 = sorted(s.path for s in both if s.step < spe)
+    e1 = sorted(s.path for s in both if s.step >= spe)
+    assert e0 == e1 == sorted(paths)
+
+
+def test_boundary_window_covers_step_zero_of_next_epoch():
+    """window=2 over two stitched 3-step epochs: the window starting at
+    global step 2 spans the boundary — epoch 0's last step AND epoch 1's
+    step 0 ride one prefetch round trip, no drain-and-refill."""
+    files = {f"d/f{i}.bin": b"z" * 256 for i in range(12)}
+    blobs, _ = prepare_dataset(files, 4, compress=False)
+    cluster = FanStoreCluster(2, cache_bytes=12 * 512, cache_policy="belady")
+    cluster.load_partitions(blobs)
+    paths = sorted(files)
+    rng = np.random.default_rng(0)
+    epoch_steps = []
+    for _ in range(2):
+        perm = [paths[int(i)] for i in rng.permutation(12)]
+        epoch_steps.append([perm[s * 4:(s + 1) * 4] for s in range(3)])
+    flat = [b for ep in epoch_steps for b in ep]
+    sched = EpochSchedule.from_trace({1: flat}, cluster)
+    pf = PrefetchScheduler(cluster, sched, 1, window_steps=2)
+    starts = [w[0] for w in pf._windows]
+    assert starts == [0, 2, 4]                     # no per-epoch reset
+    boundary = dict((w[0], w[1]) for w in pf._windows)[2]
+    assert set(epoch_steps[1][0]) <= set(boundary)  # covers e+1 step 0
+    for gstep, batch in enumerate(flat):
+        pf.ensure(gstep + 2)
+        pf.wait_ready(gstep)
+        cluster.read_many(1, batch, materialize=False)
+    pf.close()
+    # every path fetched at most once per window it appears in — and with
+    # the cache holding the dataset, prefetch never refetches: windows ==
+    # ceil(6/2), each path staged exactly twice (once per epoch)
+    assert pf.windows_issued == 3
+    assert cluster.accounting.retries() == 0       # faults off: clean ledger
+    assert cluster.caches[1].stats.hits == len(flat) * 4   # all demand hits
+    cluster.close()
+
+
+def test_tier_extend_future_feeds_belady_next_epoch():
+    files = {f"d/f{i}.bin": b"z" * 256 for i in range(8)}
+    blobs, _ = prepare_dataset(files, 4, compress=False)
+    cluster = FanStoreCluster(2, cache_bytes=8 * 512, cache_policy="belady")
+    cluster.load_partitions(blobs)
+    paths = sorted(files)
+    EpochSchedule.from_trace({1: [[p] for p in paths]}
+                             ).install_futures(cluster)
+    cluster.cache_tiers[1].extend_future(paths)    # next epoch, same order
+    q = cluster.caches[1]._future[paths[0]]
+    assert list(q) == [0, len(paths)]
+    cluster.close()
+
+
+# ---- per-job attribution ----------------------------------------------------
+
+def _assert_job_tie_out(cluster, node):
+    tier = cluster.cache_tiers[node]
+    clock = cluster.clocks[node]
+    total = tier.stats
+    for field, clock_jobs, clock_total in (
+            ("hits", clock.job_cache_hits, clock.cache_hits),
+            ("misses", clock.job_cache_misses, clock.cache_misses),
+            ("hit_bytes", clock.job_cache_hit_bytes, clock.cache_hit_bytes)):
+        tier_sum = sum(getattr(st, field) for st in tier.job_stats.values())
+        assert tier_sum == getattr(total, field), field
+        assert sum(clock_jobs.values()) == clock_total == tier_sum, field
+
+
+def test_two_jobs_share_tier_with_exact_attribution():
+    files = {f"d/f{i}.bin": b"z" * 512 for i in range(16)}
+    blobs, _ = prepare_dataset(files, 4, compress=False)
+    spec = ClusterSpec(num_nodes=2, workers_per_node=2,
+                       cache_bytes=16 * 1024)
+    cluster = FanStoreCluster(spec=spec)
+    cluster.load_partitions(blobs)
+    paths = sorted(files)
+    train = cluster.connect(1, 0, job="train")
+    evalj = cluster.connect(1, 1, job="eval")
+    train.read_many(paths)                         # cold: misses
+    evalj.read_many(paths[:8])                     # warm via shared tier
+    train.read_many(paths)
+    tier = cluster.cache_tiers[1]
+    assert set(tier.job_stats) == {"train", "eval"}
+    assert tier.job_stats["eval"].hits == 8        # rode train's fetches
+    assert tier.job_stats["train"].misses == len(paths)
+    _assert_job_tie_out(cluster, 1)
+    cluster.close()
+
+
+def test_unnamed_job_books_onto_default_ledger():
+    files = {"d/a.bin": b"z" * 128}
+    blobs, _ = prepare_dataset(files, 1, compress=False)
+    cluster = FanStoreCluster(2, cache_bytes=1024)
+    cluster.load_partitions(blobs)
+    cluster.read_many(1, ["d/a.bin"])
+    tier = cluster.cache_tiers[1]
+    assert set(tier.job_stats) == {tier.DEFAULT_JOB}
+    _assert_job_tie_out(cluster, 1)
+    cluster.close()
+
+
+def test_job_attribution_survives_concurrent_thread_storm():
+    files = {f"d/f{i}.bin": b"z" * 256 for i in range(32)}
+    blobs, _ = prepare_dataset(files, 4, compress=False)
+    spec = ClusterSpec(num_nodes=2, workers_per_node=2,
+                       cache_bytes=16 * 256)
+    cluster = FanStoreCluster(spec=spec)
+    cluster.load_partitions(blobs)
+    paths = sorted(files)
+    sessions = [cluster.connect(1, 0, job="train"),
+                cluster.connect(1, 1, job="eval")]
+    rounds = 8
+
+    def storm(sess, seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(rounds):
+            picks = [paths[int(i)] for i in rng.integers(0, 32, size=8)]
+            sess.read_many(picks, materialize=False)
+
+    threads = [threading.Thread(target=storm, args=(s, i))
+               for i, s in enumerate(sessions)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    tier = cluster.cache_tiers[1]
+    for job in ("train", "eval"):
+        st = tier.job_stats[job]
+        assert st.hits + st.misses == rounds * 8, job
+    _assert_job_tie_out(cluster, 1)
+    cluster.close()

@@ -26,7 +26,7 @@ def test_make_cache_registry_and_custom():
     assert isinstance(make_cache("2q", 10), TwoQCache)
     assert isinstance(make_cache(ByteLRUCache, 10), ByteLRUCache)
     with pytest.raises(ValueError):
-        make_cache("arc", 10)
+        make_cache("fifo", 10)
 
 
 def test_cluster_cache_policy_parameter():
@@ -164,7 +164,8 @@ def test_twoq_promotes_only_reused_files():
 
 # ---- NodeClock mirroring ----------------------------------------------------
 
-@pytest.mark.parametrize("policy", ["lru", "belady", "2q"])
+@pytest.mark.parametrize("policy", ["lru", "belady", "2q", "lfu", "arc",
+                                    "gdsf", "predictive"])
 def test_policies_mirror_counters_onto_node_clock(policy):
     files = {f"d/f{i}.bin": b"z" * 1000 for i in range(16)}
     blobs, _ = prepare_dataset(files, 1, compress=False)
