@@ -245,19 +245,22 @@ def run_measured_one(backend: str, *, nodes: int = 4,
                     for i in range(write_files)])
             moved = read_bytes + nodes * write_files * write_size
             elapsed = time.perf_counter() - t0
+            # the measured ledgers come through the observability plane:
+            # one consistent accounting snapshot via cluster.metrics
+            agg = cluster.metrics.snapshot()["cluster"]
             row = {"backend": backend, "nodes": nodes,
                    "file_size": file_size, "count": count,
                    "reads_per_node": min(reads_per_node, count),
                    "elapsed_s": elapsed,
-                   "measured_makespan_s": cluster.measured_makespan_s(),
-                   "measured_total_s": cluster.accounting.measured_total_s(),
-                   "measured_bytes": cluster.accounting.measured_bytes(),
-                   "measured_requests": cluster.accounting.measured_requests(),
+                   "measured_makespan_s": agg["measured_makespan_s"],
+                   "measured_total_s": agg["measured_total_s"],
+                   "measured_bytes": agg["measured_bytes"],
+                   "measured_requests": agg["measured_requests"],
                    "read_bytes": read_bytes,
                    "bytes_moved": moved,
                    "throughput_MBps": moved / elapsed / 1e6
                    if elapsed else 0.0,
-                   "modeled_makespan_s": cluster.makespan_s()}
+                   "modeled_makespan_s": agg["makespan_s"]}
         if best is None or row["elapsed_s"] < best["elapsed_s"]:
             best = row
     # only threads THIS function spawned count — a modeled arm elsewhere in
@@ -326,7 +329,9 @@ def run_wire_arm(backend: str, *, backend_options: Optional[Dict] = None,
                 for data in cluster.read_many(0, remote):
                     moved += len(data)
             elapsed = time.perf_counter() - t0
-            wall = cluster.accounting.wall
+            # stripe / codec / serve ledgers via the observability plane
+            snap = cluster.metrics.snapshot()
+            agg = snap["cluster"]
             row = {"backend": backend,
                    "options": dict(backend_options or {}),
                    "file_size": file_size, "count": count,
@@ -334,11 +339,10 @@ def run_wire_arm(backend: str, *, backend_options: Optional[Dict] = None,
                    "elapsed_s": elapsed,
                    "throughput_MBps": moved / elapsed / 1e6
                    if elapsed else 0.0,
-                   "stripes_used": sorted(
-                       cluster.accounting.measured_stripe_bytes()),
-                   "wire_saved_bytes":
-                       cluster.accounting.measured_wire_saved(),
-                   "serve_ns": sum(w.serve_ns for w in wall.values())}
+                   "stripes_used": sorted(agg["stripe_bytes"]),
+                   "wire_saved_bytes": agg["wire_saved_bytes"],
+                   "serve_ns": sum(n["measured"]["serve_ns"]
+                                   for n in snap["nodes"].values())}
         if best is None or row["elapsed_s"] < best["elapsed_s"]:
             best = row
     leaked = [t.name for t in threading.enumerate()
@@ -595,19 +599,22 @@ def run_measured_prefetch(backend: str, *, nodes: int = 4,
                         cluster.read_many(nid, steps[step])
             group.close()
             elapsed = time.perf_counter() - t0
-            wall = cluster.accounting.wall
+            # lane ledgers via the observability plane's consistent copy
+            snap = cluster.metrics.snapshot()
+            agg = snap["cluster"]
+            per_node = snap["nodes"].values()
             row = {"backend": backend, "nodes": nodes,
                    "file_size": file_size,
                    "elapsed_s": elapsed,
                    "measured_prefetch_s": sum(
-                       w.prefetch_ns for w in wall.values()) / 1e9,
-                   "measured_makespan_s": cluster.measured_makespan_s(),
-                   "measured_bytes":
-                       cluster.accounting.measured_bytes(),
+                       n["measured"]["prefetch_ns"]
+                       for n in per_node) / 1e9,
+                   "measured_makespan_s": agg["measured_makespan_s"],
+                   "measured_bytes": agg["measured_bytes"],
                    "staged_bytes": group.bytes_scheduled,
-                   "cache_hits": sum(c.cache_hits
-                                     for c in cluster.clocks.values()),
-                   "cache_hit_rate": cluster.cache_hit_rate(),
+                   "cache_hits": sum(n["modeled"]["cache_hits"]
+                                     for n in per_node),
+                   "cache_hit_rate": agg["cache_hit_rate"],
                    "windows": group.windows_issued}
         if best is None or row["elapsed_s"] < best["elapsed_s"]:
             best = row
@@ -687,17 +694,22 @@ def run_measured_ckpt(backend: str, *, nodes: int = 2,
                 writer.write_shard(f"ckpt/n{nid:03d}/shard.bin", payload)
             group.close()
             elapsed = time.perf_counter() - t0
-            wall = cluster.accounting.wall
+            # both concurrent lanes read from one consistent snapshot
+            snap = cluster.metrics.snapshot()
+            per_node = snap["nodes"].values()
             row = {"backend": backend, "nodes": nodes,
                    "shard_bytes": shard_bytes,
                    "elapsed_s": elapsed,
                    "measured_prefetch_s": sum(
-                       w.prefetch_ns for w in wall.values()) / 1e9,
+                       n["measured"]["prefetch_ns"]
+                       for n in per_node) / 1e9,
                    "measured_write_s": sum(
-                       w.write_ns for w in wall.values()) / 1e9,
-                   "measured_makespan_s": cluster.measured_makespan_s(),
+                       n["measured"]["write_ns"]
+                       for n in per_node) / 1e9,
+                   "measured_makespan_s":
+                       snap["cluster"]["measured_makespan_s"],
                    "measured_requests":
-                       cluster.accounting.measured_requests()}
+                       snap["cluster"]["measured_requests"]}
         if best is None or row["elapsed_s"] < best["elapsed_s"]:
             best = row
     leaked = [t.name for t in threading.enumerate()

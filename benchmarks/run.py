@@ -35,11 +35,20 @@ single-owner makespan, per-tenant attribution ties out exactly, peak
 inflight respects ``max_inflight_bytes``, and the within-node fairness
 ratio stays under 2x). ``--smoke`` shrinks it to the fast-lane CI
 variant (scripts/ci.sh fast).
+
+The io-json emission flows through the observability plane: the bench
+blocks are attached to a :class:`repro.fanstore.metrics.MetricsCollector`,
+streamed to a JSONL sink next to the output path (``BENCH_io.jsonl``),
+and the written ``BENCH_io.json`` is the SNAPSHOT-derived copy (asserted
+equal to the source blocks, so the schema stays byte-compatible). The
+perf-trajectory guards are the declarative ``IO_SLO_GUARDS`` table below,
+evaluated over the reloaded JSONL stream — not assert soup.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 import time
@@ -50,230 +59,226 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
     if _p not in sys.path:         # `python benchmarks/run.py` from anywhere,
         sys.path.insert(0, _p)     # with or without PYTHONPATH=src
 
+from repro.fanstore.metrics import (JsonlSink, MetricsCollector, Ref,  # noqa: E402
+                                    SloGuard, check_slos)
+
+# Every BENCH_io.json perf-trajectory guard, as data. Paths are dotted
+# with `*` wildcards; a Ref threshold compares against another path (its
+# wildcards bind to the metric path's, leftovers mean "for all", which is
+# how "belady >= every policy on the same arm" is spelled). Deterministic
+# modeled quantities throughout, except the explicitly measured blocks.
+IO_SLO_GUARDS = [
+    # fast-fabric arms: direction-only (the GUARDED prefetch ratio lives
+    # in prefetch_depth, where the win is structural)
+    SloGuard("prefetch_direction", "arms.*.prefetch_speedup_vs_batched",
+             ">=", 1.0),
+    SloGuard("write_many_beats_loop", "arms.*.write.write_speedup",
+             ">", 1.0),
+    SloGuard("ckpt_overlap_wins", "arms.*.write.overlapped_makespan_s",
+             "<", Ref("arms.*.write.serialized_makespan_s")),
+    # cache policies: oracle beats LRU at equal byte budget
+    SloGuard("belady_beats_lru", "cache_policies.belady_hit_rate",
+             ">", Ref("cache_policies.lru_hit_rate")),
+    # online intelligence: adaptive policies never lose to LRU on any
+    # (budget, trace) arm; predictor closes >= 40% of the zipf gap;
+    # Belady stays the upper bound; 2Q holds the scan trace
+    SloGuard("arc_vs_lru_uniform", "cache_policy_sweep.uniform.arms.*.arc",
+             ">=", Ref("cache_policy_sweep.uniform.arms.*.lru")),
+    SloGuard("arc_vs_lru_zipf", "cache_policy_sweep.zipf.arms.*.arc",
+             ">=", Ref("cache_policy_sweep.zipf.arms.*.lru")),
+    SloGuard("predictive_vs_lru_uniform",
+             "cache_policy_sweep.uniform.arms.*.predictive",
+             ">=", Ref("cache_policy_sweep.uniform.arms.*.lru")),
+    SloGuard("predictive_vs_lru_zipf",
+             "cache_policy_sweep.zipf.arms.*.predictive",
+             ">=", Ref("cache_policy_sweep.zipf.arms.*.lru")),
+    SloGuard("belady_upper_bound_uniform",
+             "cache_policy_sweep.uniform.arms.*.belady",
+             ">=", Ref("cache_policy_sweep.uniform.arms.*.*")),
+    SloGuard("belady_upper_bound_zipf",
+             "cache_policy_sweep.zipf.arms.*.belady",
+             ">=", Ref("cache_policy_sweep.zipf.arms.*.*")),
+    SloGuard("zipf_gap_closure", "cache_policy_sweep.zipf_gap_closure.*",
+             ">=", 0.40),
+    SloGuard("twoq_holds_scan", "cache_policy_sweep.scan.2q",
+             ">=", Ref("cache_policy_sweep.scan.lru")),
+    # cross-epoch stitching: fewer boundary round trips, strictly earlier
+    # finish, clean retry ledger
+    SloGuard("stitching_beats_drain", "cross_epoch.stitched.makespan_s",
+             "<", Ref("cross_epoch.drain_refill.makespan_s")),
+    SloGuard("stitching_saves_window",
+             "cross_epoch.stitched.prefetch_windows",
+             "<", Ref("cross_epoch.drain_refill.prefetch_windows")),
+    SloGuard("cross_epoch_clean_retries", "cross_epoch.*.retries",
+             "==", 0),
+    # multi-tenant workers: shared tier strictly beats private caches of
+    # the same total bytes; attribution ledgers tie out
+    SloGuard("shared_tier_wins", "workers.shared.makespan_s",
+             "<", Ref("workers.private.makespan_s")),
+    SloGuard("shared_tier_hit_rate", "workers.shared.cache_hit_rate",
+             ">", Ref("workers.private.cache_hit_rate")),
+    SloGuard("worker_attribution", "workers.*.attribution_ok", "truthy"),
+    # hardware truth: real bytes over real wires, clean teardown, shm
+    # beats socket, ledgers == trace bytes exactly
+    SloGuard("measured_teardown", "measured.teardown_clean", "truthy"),
+    SloGuard("socket_ran", "measured.socket.elapsed_s", ">", 0),
+    SloGuard("shm_ran", "measured.shm.elapsed_s", ">", 0),
+    SloGuard("socket_makespan", "measured.socket.measured_makespan_s",
+             ">", 0),
+    SloGuard("shm_makespan", "measured.shm.measured_makespan_s", ">", 0),
+    SloGuard("socket_byte_ledger", "measured.socket.measured_bytes",
+             "==", Ref("measured.socket.read_bytes")),
+    SloGuard("shm_byte_ledger", "measured.shm.measured_bytes",
+             "==", Ref("measured.shm.read_bytes")),
+    SloGuard("socket_moved_bytes", "measured.socket.read_bytes", ">", 0),
+    SloGuard("shm_moved_bytes", "measured.shm.read_bytes", ">", 0),
+    SloGuard("shm_beats_socket", "measured.shm_speedup_vs_socket",
+             ">", 1.0),
+    # measured prefetch arm: nonzero PREFETCH-lane time, ledger == staged
+    # bytes, demand reads hit the cache, shm beats socket
+    SloGuard("prefetch_teardown", "measured.prefetch.teardown_clean",
+             "truthy"),
+    SloGuard("prefetch_lane_ran",
+             "measured.prefetch.socket.measured_prefetch_s", ">", 0),
+    SloGuard("prefetch_lane_ran_shm",
+             "measured.prefetch.shm.measured_prefetch_s", ">", 0),
+    SloGuard("prefetch_byte_ledger_socket",
+             "measured.prefetch.socket.measured_bytes",
+             "==", Ref("measured.prefetch.socket.staged_bytes")),
+    SloGuard("prefetch_byte_ledger_shm",
+             "measured.prefetch.shm.measured_bytes",
+             "==", Ref("measured.prefetch.shm.staged_bytes")),
+    SloGuard("prefetch_staged_socket",
+             "measured.prefetch.socket.staged_bytes", ">", 0),
+    SloGuard("prefetch_staged_shm",
+             "measured.prefetch.shm.staged_bytes", ">", 0),
+    SloGuard("prefetch_cache_hits_socket",
+             "measured.prefetch.socket.cache_hits", ">", 0),
+    SloGuard("prefetch_cache_hits_shm",
+             "measured.prefetch.shm.cache_hits", ">", 0),
+    SloGuard("prefetch_shm_beats_socket",
+             "measured.prefetch.shm_speedup_vs_socket", ">", 1.0),
+    # measured checkpoint arm: BOTH concurrent lanes show time in the
+    # same wall window
+    SloGuard("ckpt_teardown", "measured.checkpoint.teardown_clean",
+             "truthy"),
+    SloGuard("ckpt_write_lane", "measured.checkpoint.*.measured_write_s",
+             ">", 0),
+    SloGuard("ckpt_prefetch_lane",
+             "measured.checkpoint.*.measured_prefetch_s", ">", 0),
+    SloGuard("ckpt_elapsed", "measured.checkpoint.*.elapsed_s", ">", 0),
+    SloGuard("ckpt_makespan", "measured.checkpoint.*.measured_makespan_s",
+             ">", 0),
+    SloGuard("ckpt_shm_beats_socket",
+             "measured.checkpoint.shm_speedup_vs_socket", ">", 1.0),
+    # wire gap: the rebuilt socket data plane holds its floor. 300 MB/s
+    # is deliberately conservative (>= 4x what the PR-4 wire measured on
+    # this trace shape, ~3x under what the striped wire actually does) so
+    # CI noise can't flake it while a protocol regression can't hide
+    SloGuard("wire_teardown", "measured.wire.teardown_clean", "truthy"),
+    SloGuard("striped_floor", "measured.wire.striped.throughput_MBps",
+             ">=", 300.0),
+    SloGuard("stripe_speedup_multicore", "measured.wire.stripe_speedup",
+             ">", 1.0, when=("measured.wire.cpu_count", ">", 1)),
+    # one core: stripe threads serialize, so wall-clock parallelism
+    # cannot express — bound the overhead instead
+    SloGuard("stripe_overhead_unicore", "measured.wire.stripe_speedup",
+             ">", 0.4, when=("measured.wire.cpu_count", "<=", 1)),
+    SloGuard("striping_on", "measured.wire.striped.stripes_used",
+             "min_len", 2),
+    SloGuard("single_conn_stripe0", "measured.wire.single.stripes_used",
+             "subset", (0,)),
+    # codec truth: LZSS engages exactly when the cost model predicts
+    SloGuard("codec_engages", "measured.wire.codec.engages_when_predicted",
+             "truthy"),
+    SloGuard("codec_stays_raw", "measured.wire.codec.raw_when_not_predicted",
+             "truthy"),
+    # one-sided contract: rdma moves the bytes with ZERO owner serve time
+    SloGuard("rdma_one_sided", "measured.wire.rdma.serve_ns", "==", 0),
+    SloGuard("rdma_moved_bytes", "measured.wire.rdma.throughput_MBps",
+             ">", 0),
+    # the guarded prefetch ratio: structural ~1.2x on the slow fabric
+    SloGuard("deep_prefetch_win", "prefetch_depth.prefetch_speedup",
+             ">", 1.15),
+    SloGuard("deep_prefetch_scheduled", "prefetch_depth.prefetch_windows",
+             ">", 0),
+    # failover: a mid-epoch kill at R=2 is invisible (zero failed reads),
+    # fully accounted (retries == injected, exactly), detected, healed,
+    # and cheap; the R=1 control fails FAST and CLASSIFIED
+    SloGuard("failover_zero_failures", "failover.degraded.reads_failed",
+             "==", 0),
+    SloGuard("failover_kill_fired", "failover.degraded.injected", ">", 0),
+    SloGuard("failover_retry_ledger", "failover.degraded.retries",
+             "==", Ref("failover.degraded.injected")),
+    SloGuard("failover_detected", "failover.kill_node",
+             "in", Ref("failover.degraded.failed_nodes")),
+    SloGuard("failover_healed", "failover.degraded.healed_copies", ">", 0),
+    SloGuard("failover_bounded", "failover.degraded_ratio", "<=", 1.6),
+    SloGuard("r1_classified", "failover.r1.error", "==", "NodeLostError"),
+    SloGuard("r1_names_loss", "failover.r1.lost_partitions", "nonempty"),
+    # serving plane: stays multi-tenant, replication strictly wins,
+    # attribution ties out, admission cap respected, promotion fired,
+    # fairness bounded on both arms
+    SloGuard("serving_multi_tenant", "serving.tenants", ">=", 64),
+    SloGuard("serving_nodes", "serving.nodes", "==", 8),
+    SloGuard("replication_wins", "serving.replicated.makespan_s",
+             "<", Ref("serving.single.makespan_s")),
+    SloGuard("serving_attribution", "serving.*.attribution_ok", "truthy"),
+    SloGuard("promotion_fired", "serving.replicated.promoted_partitions",
+             "nonempty"),
+    SloGuard("inflight_nonzero", "serving.*.peak_inflight_bytes", ">", 0),
+    SloGuard("inflight_capped", "serving.*.peak_inflight_bytes",
+             "<=", Ref("serving.max_inflight_bytes")),
+    SloGuard("no_shedding", "serving.*.admission_shed", "==", 0),
+    SloGuard("fairness_bound", "serving.*.fairness_ratio", "<=", 2.0),
+]
+
 
 def write_io_json(path: str, *, smoke: bool = False) -> None:
     from benchmarks.io_scaling import bench_json
     result = bench_json(smoke=smoke)
+    # ONE pipeline: attach every bench block to a collector, stream the
+    # versioned snapshot to the JSONL sink beside the output path, and
+    # write BENCH_io.json from the SNAPSHOT-derived copy (asserted equal
+    # to the source blocks under JSON canonicalization, so the emitted
+    # schema is unchanged).
+    collector = MetricsCollector()
+    for block_name, block in result.items():
+        collector.record_block(block_name, block)
+    jsonl_path = str(pathlib.Path(path).with_suffix(".jsonl"))
+    if os.path.exists(jsonl_path):
+        os.remove(jsonl_path)  # fresh stream: the CI nonempty check is honest
+    with JsonlSink(jsonl_path) as sink:
+        snap = sink.flush(collector)
+    records = JsonlSink.load(jsonl_path)
+    assert records and records[-1]["version"] == snap["version"], (
+        "JSONL sink round trip lost the flushed snapshot")
+    doc = records[-1]["bench"]
+    canonical = json.loads(json.dumps(result, sort_keys=True, default=str))
+    assert doc == canonical, (
+        "snapshot-derived BENCH blocks diverged from the bench result")
     with open(path, "w") as f:
-        json.dump(result, f, indent=1, sort_keys=True)
-    # perf-trajectory guards (deterministic modeled quantities, not timing)
-    for entry in result["arms"]:
-        # direction-only on the fast-fabric arms: their ~1-2% prefetch
-        # edge is real but thin; the GUARDED prefetch ratio lives in the
-        # prefetch_depth block below, where the win is structural
-        assert entry["prefetch_speedup_vs_batched"] >= 1.0, (
-            f"prefetch arm went backwards at {entry['nodes']} nodes")
-        w = entry["write"]
-        assert w["write_speedup"] > 1.0, (
-            f"write_many no longer beats the per-file write loop at "
-            f"{entry['nodes']} nodes")
-        assert w["overlapped_makespan_s"] < w["serialized_makespan_s"], (
-            f"checkpoint/prefetch overlap regressed at "
-            f"{entry['nodes']} nodes")
+        json.dump(doc, f, indent=1, sort_keys=True)
+    # perf-trajectory guards: the declarative table over the JSONL stream
+    violations = check_slos(doc, IO_SLO_GUARDS)
+    if violations:
+        raise AssertionError(
+            "BENCH_io.json SLO guard violations:\n  "
+            + "\n  ".join(violations))
     cp = result["cache_policies"]
-    assert cp["belady_hit_rate"] > cp["lru_hit_rate"], (
-        "Belady no longer beats LRU at equal byte budget")
-    # online-intelligence guards: on EVERY (budget, trace) arm of the
-    # policy sweep the adaptive policies must not lose to plain LRU, the
-    # reuse-distance predictor must close >= 40% of the LRU->Belady gap
-    # on the zipf trace, and the oracle must stay the upper bound
     cs = result["cache_policy_sweep"]
-    for kind in ("uniform", "zipf"):
-        for bf, arm in cs[kind]["arms"].items():
-            top = max(arm.values())
-            assert arm["arc"] >= arm["lru"], (
-                f"ARC lost to LRU on the {kind} trace at {bf} files "
-                f"({arm['arc']:.3f} < {arm['lru']:.3f})")
-            assert arm["predictive"] >= arm["lru"], (
-                f"Predictive lost to LRU on the {kind} trace at {bf} "
-                f"files ({arm['predictive']:.3f} < {arm['lru']:.3f})")
-            assert arm["belady"] >= top, (
-                f"Belady is no longer the upper bound on the {kind} "
-                f"trace at {bf} files ({arm['belady']:.3f} < {top:.3f})")
-    for bf, closure in cs["zipf_gap_closure"].items():
-        assert closure >= 0.40, (
-            f"Predictive closes only {closure:.0%} of the LRU->Belady "
-            f"gap on the zipf trace at {bf} files (need >= 40%)")
-    assert cs["scan"]["2q"] >= cs["scan"]["lru"], (
-        f"2Q lost to LRU on the scan trace "
-        f"({cs['scan']['2q']:.3f} < {cs['scan']['lru']:.3f})")
-    # cross-epoch stitching guards: the stitched multi-epoch schedule
-    # must make strictly fewer boundary round trips than drain-and-refill
-    # and therefore finish strictly earlier, with a clean retry ledger
     ce = result["cross_epoch"]
-    assert ce["stitched"]["makespan_s"] < ce["drain_refill"]["makespan_s"], (
-        f"cross-epoch stitching no longer beats drain-and-refill "
-        f"({ce['stitched']['makespan_s']} vs "
-        f"{ce['drain_refill']['makespan_s']})")
-    assert (ce["stitched"]["prefetch_windows"]
-            < ce["drain_refill"]["prefetch_windows"]), (
-        "stitched arm no longer saves the boundary window round trip")
-    assert ce["stitched"]["retries"] == 0 == ce["drain_refill"]["retries"], (
-        "cross-epoch arms recorded retries with fault injection off")
-    # multi-tenant guards: the shared node cache tier must strictly beat
-    # private per-worker caches of the same total bytes, and the
-    # per-worker attribution ledgers must tie out against the tier totals
     wb = result["workers"]
-    assert wb["shared"]["makespan_s"] < wb["private"]["makespan_s"], (
-        f"shared cache tier no longer beats private per-worker caches at "
-        f"{wb['nodes']}x{wb['workers']} "
-        f"({wb['shared']['makespan_s']} vs {wb['private']['makespan_s']})")
-    assert wb["shared"]["cache_hit_rate"] > wb["private"]["cache_hit_rate"], (
-        "shared-tier hit rate regressed below the private baseline")
-    assert wb["shared"]["attribution_ok"] and wb["private"]["attribution_ok"], (
-        "per-worker cache attribution no longer sums to the tier totals")
-    # hardware-truth guards: real bytes moved over real wires, serving
-    # loops torn down, and the co-located shm path beat the socket path
     m = result["measured"]
-    assert m["teardown_clean"], "serving-loop teardown leaked threads"
-    for wire_arm in ("socket", "shm"):
-        w = m[wire_arm]
-        assert w["elapsed_s"] > 0 and w["measured_makespan_s"] > 0, (
-            f"{wire_arm} backend recorded no measured time — the wire "
-            f"path did not actually run")
-        assert w["measured_bytes"] == w["read_bytes"] > 0, (
-            f"{wire_arm} backend measured-byte ledger disagrees with the "
-            f"trace ({w['measured_bytes']} != {w['read_bytes']})")
-    assert m["shm_speedup_vs_socket"] > 1.0, (
-        "co-located shared-memory path no longer beats the socket path")
-    # measured-arm guards for the prefetch benchmark, mirroring the
-    # read+write trace's: nonzero time on the PREFETCH lane specifically,
-    # ledger == staged bytes, clean teardown, shm beats socket
     mp = m["prefetch"]
-    assert mp["teardown_clean"], "prefetch measured arm leaked threads"
-    for wire_arm in ("socket", "shm"):
-        w = mp[wire_arm]
-        assert w["measured_prefetch_s"] > 0, (
-            f"{wire_arm} prefetch arm recorded no measured prefetch-lane "
-            f"time — the scheduled windows did not cross the wire")
-        assert w["measured_bytes"] == w["staged_bytes"] > 0, (
-            f"{wire_arm} prefetch byte ledger disagrees with the staged "
-            f"schedule ({w['measured_bytes']} != {w['staged_bytes']})")
-        assert w["cache_hits"] > 0, (
-            f"{wire_arm} prefetch arm demand reads never hit the cache")
-    assert mp["shm_speedup_vs_socket"] > 1.0, (
-        "shm no longer beats socket on the scheduled-prefetch wire leg")
-    # ... and for the checkpoint-overlap benchmark: BOTH concurrent lanes
-    # (prefetch + write) must show measured time in the same wall window
     mc = m["checkpoint"]
-    assert mc["teardown_clean"], "checkpoint measured arm leaked threads"
-    for wire_arm in ("socket", "shm"):
-        w = mc[wire_arm]
-        assert w["measured_write_s"] > 0 and w["measured_prefetch_s"] > 0, (
-            f"{wire_arm} checkpoint-overlap arm did not exercise both "
-            f"concurrent lanes (write={w['measured_write_s']}, "
-            f"prefetch={w['measured_prefetch_s']})")
-        assert w["elapsed_s"] > 0 and w["measured_makespan_s"] > 0, (
-            f"{wire_arm} checkpoint arm recorded no measured time")
-    assert mc["shm_speedup_vs_socket"] > 1.0, (
-        "shm no longer beats socket on the checkpoint-overlap trace")
-    # wire-gap guards: the rebuilt socket data plane must hold its floor.
-    # 300 MB/s is deliberately conservative (>= 4x the 68 MB/s the PR-4
-    # wire measured on this trace shape, ~3x under what the striped wire
-    # actually does here) so CI noise can't flake it while a protocol
-    # regression can't hide under it.
     mw = m["wire"]
-    assert mw["teardown_clean"], "wire arms leaked stripe threads"
-    assert mw["striped"]["throughput_MBps"] >= 300.0, (
-        f"striped socket wire fell below the 300 MB/s floor "
-        f"({mw['striped']['throughput_MBps']:.0f} MB/s)")
-    if mw["cpu_count"] > 1:
-        assert mw["stripe_speedup"] > 1.0, (
-            f"striped wire no longer beats its single-connection self "
-            f"(speedup {mw['stripe_speedup']:.3f})")
-    else:
-        # one core: stripe threads serialize, so wall-clock parallelism
-        # cannot express — demand bounded overhead instead (the striping
-        # machinery must not cost more than it could ever win back) and
-        # leave the >1.0 claim to multi-core hosts
-        assert mw["stripe_speedup"] > 0.4, (
-            f"striping overhead exploded on a single-core host "
-            f"(speedup {mw['stripe_speedup']:.3f})")
-    assert len(mw["striped"]["stripes_used"]) > 1, (
-        "striped arm moved all bytes on one stripe — striping is off")
-    assert set(mw["single"]["stripes_used"]) <= {0}, (
-        "single-connection arm booked bytes on extra stripes")
-    # codec truth: LZSS engages exactly when the cost model predicts a
-    # win — forced-slow modeled wire saves bytes, honest loopback never
-    # compresses
-    assert mw["codec"]["engages_when_predicted"], (
-        "wire codec saved no bytes under a cost model that demands it")
-    assert mw["codec"]["raw_when_not_predicted"], (
-        "wire codec engaged on loopback where the cost model says raw")
-    # one-sided contract: rdma moves the same bytes with ZERO owner
-    # serve-lane time
-    assert mw["rdma"]["serve_ns"] == 0, (
-        f"rdma arm accrued owner serve time ({mw['rdma']['serve_ns']} ns) "
-        f"— the one-sided contract is broken")
-    assert mw["rdma"]["throughput_MBps"] > 0, "rdma arm moved no bytes"
-    # the guarded prefetch ratio: on the slow latency-bound fabric with a
-    # deep window the scheduler's win is structural (~1.2x), not the thin
-    # smoke-arm ~1-2%
     pd = result["prefetch_depth"]
-    assert pd["prefetch_speedup"] > 1.15, (
-        f"deep-window prefetch win collapsed on the slow fabric "
-        f"(speedup {pd['prefetch_speedup']:.3f})")
-    assert pd["prefetch_windows"] > 0, (
-        "prefetch_depth arm scheduled no windows")
-    # failover guards: killing a node mid-epoch at R=2 must be invisible
-    # to readers (zero failed reads), fully accounted (retry ledger ==
-    # injected-fault count, exactly), and cheap (bounded makespan
-    # inflation over the healthy run); the R=1 control must fail FAST and
-    # CLASSIFIED — a NodeLostError naming the lost partitions, not a hang
     fo = result["failover"]
     fd = fo["degraded"]
-    assert fd["reads_failed"] == 0, (
-        f"R=2 degraded run lost {fd['reads_failed']} reads — replica "
-        f"failover did not cover the killed node")
-    assert fd["injected"] > 0, (
-        "failover arm injected no faults — the kill never fired")
-    assert fd["retries"] == fd["injected"], (
-        f"retry ledger ({fd['retries']}) != injected faults "
-        f"({fd['injected']}) — failover accounting is off")
-    assert fo["kill_node"] in fd["failed_nodes"], (
-        "killed node was never detected as failed")
-    assert fd["healed_copies"] > 0, (
-        "heal() restored no replicas after the kill")
-    assert fo["degraded_ratio"] <= 1.6, (
-        f"degraded makespan blew past the 1.6x bound "
-        f"({fo['degraded_ratio']:.2f}x of healthy)")
     r1 = fo["r1"]
-    assert r1["error"] == "NodeLostError" and r1["lost_partitions"], (
-        f"R=1 control did not surface a classified loss "
-        f"(error={r1['error']}, lost={r1['lost_partitions']})")
-    # serving-plane guards: the multi-tenant zipfian trace must stay
-    # multi-tenant (>= 64 tenants, 8 nodes, smoke included), hot-shard
-    # replication must strictly beat single-owner makespan, per-tenant
-    # attribution must tie out exactly on both arms, the measured peak
-    # inflight must respect the admission cap, promotion must have
-    # actually fired, and the slowest co-located tenant stays within the
-    # 2x fairness bound of its node's mean
     sv = result["serving"]
-    assert sv["tenants"] >= 64 and sv["nodes"] == 8, (
-        f"serving arm shrank below the multi-tenant claim "
-        f"({sv['tenants']} tenants, {sv['nodes']} nodes)")
-    ssv, rsv = sv["single"], sv["replicated"]
-    assert rsv["makespan_s"] < ssv["makespan_s"], (
-        f"hot-shard replication no longer beats single-owner serving "
-        f"({rsv['makespan_s']} vs {ssv['makespan_s']})")
-    assert ssv["attribution_ok"] and rsv["attribution_ok"], (
-        "per-tenant serving attribution no longer sums to the "
-        "serve-app lane totals")
-    assert rsv["promoted_partitions"], (
-        "serving arm promoted no hot shards — the popularity "
-        "threshold never tripped")
-    for arm_name, arm in (("single", ssv), ("replicated", rsv)):
-        assert 0 < arm["peak_inflight_bytes"] <= sv["max_inflight_bytes"], (
-            f"{arm_name} serving arm peak inflight "
-            f"({arm['peak_inflight_bytes']}) outside "
-            f"(0, {sv['max_inflight_bytes']}] — the admission gate is off")
-        assert arm["admission_shed"] == 0, (
-            f"{arm_name} serving arm shed requests under a queue that "
-            f"should absorb this trace")
-        assert arm["fairness_ratio"] <= 2.0, (
-            f"{arm_name} serving arm fairness ratio "
-            f"{arm['fairness_ratio']:.3f} exceeds the 2x bound — a "
-            f"zipf-head tenant is starving its node's tail")
+    rsv = sv["replicated"]
     for entry in result["arms"]:
         w = entry["write"]
         print(f"io_json,nodes={entry['nodes']},"
@@ -339,7 +344,9 @@ def write_io_json(path: str, *, smoke: bool = False) -> None:
           f"promoted={len(rsv['promoted_partitions'])},"
           f"peak_inflight={rsv['peak_inflight_bytes']},"
           f"fairness_ratio={rsv['fairness_ratio']:.3f}", flush=True)
-    print(f"io_json,wrote={path}", flush=True)
+    print(f"io_json,wrote={path},metrics_jsonl={jsonl_path},"
+          f"snapshot_version={snap['version']},"
+          f"guards={len(IO_SLO_GUARDS)}", flush=True)
 
 
 def main() -> None:

@@ -28,8 +28,12 @@ from repro.serve.serve_step import generate, make_decode_step, make_prefill_step
 
 def run_fanstore(args) -> None:
     """Publish params + a shared KV prefix once; serve them to N tenants
-    through the admission-gated serving plane."""
+    through the admission-gated serving plane. With ``--metrics-jsonl``
+    the per-tenant restore latencies (p50/p99 via the bounded sketch) and
+    the full ledger bridge — tenant attribution included — stream through
+    the cluster's MetricsCollector to the JSONL sink."""
     from repro.fanstore.cluster import FanStoreCluster
+    from repro.fanstore.metrics import JsonlSink, Reduce
     from repro.fanstore.serving import ServeGroup
     from repro.fanstore.spec import ClusterSpec
     from repro.train.checkpoint import restore_from_session, save_to_session
@@ -58,13 +62,23 @@ def run_fanstore(args) -> None:
         save_to_session(publisher, 0, params, prefix="params")
         save_to_session(publisher, 0, caches_f32, prefix="kvprefix")
         group = ServeGroup(cluster, args.tenants)
+        sink = (JsonlSink(args.metrics_jsonl, every_s=1.0)
+                if args.metrics_jsonl else None)
         t0 = time.perf_counter()
         t_params = t_caches = None
         for tenant in group.tenants:
             ts = group.session(tenant)    # gated, serve_app-lane session
+            t_tenant = time.perf_counter()
             t_params, _ = restore_from_session(ts, params, prefix="params")
             t_caches, _ = restore_from_session(ts, caches_f32,
                                                prefix="kvprefix")
+            if sink is not None:
+                cluster.metrics.record_metric(
+                    "serve.tenant_restore_s",
+                    time.perf_counter() - t_tenant, reduce=Reduce.P99)
+                cluster.metrics.record_metric("serve.tenants_restored", 1,
+                                              reduce=Reduce.COUNT)
+                sink.tick(cluster.metrics)
         dt = time.perf_counter() - t0
         t_caches = jax.tree_util.tree_map(
             lambda a, orig: jnp.asarray(a, orig.dtype), t_caches, caches)
@@ -88,6 +102,19 @@ def run_fanstore(args) -> None:
         worst = max(per_tenant, key=per_tenant.get)
         print(f"per-tenant bytes: min={min(per_tenant.values())} "
               f"max={per_tenant[worst]} ({worst})")
+        if sink is not None:
+            snap = sink.flush(cluster.metrics)   # final explicit flush
+            sink.close()
+            rs = snap["metrics"]["serve.tenant_restore_s"]
+            assert snap["cluster"]["tenant_bytes"] == per_tenant, (
+                "snapshot tenant ledger diverged from ServeGroup stats")
+            print(f"metrics: jsonl={args.metrics_jsonl} "
+                  f"records={sink.records_written} "
+                  f"version={snap['version']} "
+                  f"restore_p50={rs['p50']:.4f}s "
+                  f"restore_p99={rs['p99']:.4f}s "
+                  f"tenants_restored="
+                  f"{snap['metrics']['serve.tenants_restored']['value']:.0f}")
         print("decoded token sample from restored state:",
               np.asarray(tok)[:4].tolist())
 
@@ -103,6 +130,10 @@ def main() -> None:
                     help="serve params + KV prefix to N tenants through "
                          "the FanStore serving plane")
     ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="with --fanstore: stream per-tenant restore "
+                         "metrics + the ledger bridge (tenant attribution "
+                         "included) to this JSONL sink")
     args = ap.parse_args()
     if args.fanstore:
         run_fanstore(args)

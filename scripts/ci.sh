@@ -39,15 +39,22 @@ case "$lane" in
     # predictor state per policy, cross-epoch prefetch stitching (the
     # boundary window covers the next epoch's step 0, clean retry
     # ledger), and per-job attribution tie-out under a 2-job storm.
+    # ... plus the observability-plane suite: reduce truth, the bounded
+    # quantile sketch (memory O(capacity) at 100k samples), a 16-rank
+    # collector storm tied out EXACTLY against the ledger bridge,
+    # PER_RANK vs GLOBAL_REDUCE equivalence, JSONL rotation/reload/
+    # torn-tail semantics, declarative SLO guards, and the reset-vs-
+    # accrual race regression on the shared clock lock.
     python -m pytest -x -q tests/test_wire.py tests/test_backends.py \
         tests/test_topology.py tests/test_faults.py tests/test_serving.py \
-        tests/test_cache_online.py
+        tests/test_cache_online.py tests/test_metrics.py
     python -m pytest -x -q -m "not slow" --ignore=tests/test_wire.py \
         --ignore=tests/test_backends.py \
         --ignore=tests/test_topology.py \
         --ignore=tests/test_faults.py \
         --ignore=tests/test_serving.py \
-        --ignore=tests/test_cache_online.py
+        --ignore=tests/test_cache_online.py \
+        --ignore=tests/test_metrics.py
     # perf trajectory smoke: seed/batched/prefetched arms + cache policies
     # + the multi-tenant `workers` block (shared node tier strictly beats
     # private per-worker caches; attribution ledgers tie out) + the
@@ -73,8 +80,16 @@ case "$lane" in
     # prefetch schedule strictly beats drain-and-refill makespan).
     # Writes BENCH_io.json (uploaded as the bench-io artifact, `workers`,
     # `measured.wire`, `prefetch_depth`, `failover`, and `serving`
-    # blocks included).
+    # blocks included). The run itself routes every block through the
+    # observability pipeline (snapshot -> JSONL sink -> reload ->
+    # byte-compatible BENCH_io.json) and evaluates the declarative
+    # SloGuard table, so a pass here certifies the streamed telemetry
+    # matches the emitted artifact exactly.
     python benchmarks/run.py --only io-json --io-json BENCH_io.json --smoke
+    # the streaming sink must actually have streamed: a nonempty JSONL
+    # twin rides next to the artifact (write_io_json reloads it and
+    # asserts record == artifact before emitting either)
+    test -s BENCH_io.jsonl
     ;;
   full)
     python -m pytest -x -q

@@ -16,6 +16,9 @@ Layers:
   cache       optional per-node byte-budget read cache (LRU / Belady / 2Q)
   prefetch    clairvoyant epoch-horizon schedule + window prefetch driver
   accounting  per-node clocks + cluster aggregates for the benchmarks
+  metrics     observability plane: reduce-mode accumulators, the
+              cluster-owned MetricsCollector, streaming JsonlSink, and
+              declarative SloGuard threshold checks
   cluster     the composition of the above behind one deployment object
   api         FanStoreSession: the unified descriptor-based client surface
               (fd table, batched read/write verbs, CheckpointWriter)
@@ -38,6 +41,9 @@ from repro.fanstore.transport import FetchItem, InterconnectModel, Transport
 from repro.fanstore.cache import (BeladyCache, ByteCache, ByteLRUCache,
                                   CacheStats, NodeCacheTier, TwoQCache,
                                   make_cache)
+from repro.fanstore.metrics import (JsonlSink, MetricsCollector, Mode,
+                                    QuantileSketch, Reduce, Ref, SloGuard,
+                                    check_slos)
 from repro.fanstore.spec import ClusterSpec, WorkerContext
 from repro.fanstore.cluster import FanStoreCluster
 from repro.fanstore.prefetch import (EpochSchedule, PrefetchScheduler,
@@ -59,6 +65,8 @@ __all__ = [
     "EpochSchedule", "PrefetchScheduler", "ScheduledRead", "SchedulerGroup",
     "NodeStore", "FanStoreCluster", "ClusterSpec", "WorkerContext",
     "InterconnectModel",
+    "MetricsCollector", "Reduce", "Mode", "QuantileSketch", "JsonlSink",
+    "SloGuard", "Ref", "check_slos",
     "FanStoreSession", "FanStoreDirEntry", "CheckpointWriter", "FanStoreFS",
     "prepare_dataset",
 ]

@@ -21,9 +21,21 @@ Two kinds of clocks, one per node each:
 ``ClusterAccounting`` owns one clock of each kind per node and reports
 either view: ``makespan_s()`` (modeled) vs ``measured_makespan_s()``
 (hardware truth), plus the aggregates the benchmarks plot.
+
+Concurrency contract: ``ClusterAccounting.lock`` is THE clock lock.
+The transport backend accrues every modeled/measured quantity under it
+(the cluster hands it to ``make_backend``), and ``reset()`` /
+``snapshot()`` / every dict-iterating aggregate here takes the same
+lock — so a flush racing in-flight accrual sees a CONSISTENT per-node
+state (never a half-applied tenant row, never ``dict changed size
+during iteration``, never an accrual stranded on a clock object that
+``reset()`` just swapped out). The observability plane
+(:mod:`repro.fanstore.metrics`) builds its ledger bridge exclusively
+from :meth:`ClusterAccounting.snapshot` for exactly this reason.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List
 
@@ -244,6 +256,10 @@ class ClusterAccounting:
 
     def __init__(self, node_ids: Iterable[int]):
         ids = list(node_ids)
+        # THE clock lock. Reentrant because aggregate readers here may be
+        # called from code already holding it (the transport backend
+        # accrues under this same object when the cluster wires it in).
+        self.lock = threading.RLock()
         self.clocks: Dict[int, NodeClock] = {i: NodeClock() for i in ids}
         self.wall: Dict[int, WallClock] = {i: WallClock() for i in ids}
 
@@ -251,141 +267,271 @@ class ClusterAccounting:
         return self.clocks[node_id]
 
     def add_node(self, node_id: int) -> None:
-        self.clocks.setdefault(node_id, NodeClock())
-        self.wall.setdefault(node_id, WallClock())
+        with self.lock:
+            self.clocks.setdefault(node_id, NodeClock())
+            self.wall.setdefault(node_id, WallClock())
 
     def reset(self) -> None:
         # in place, so every holder of the clocks dict (e.g. the transport
-        # backend) observes the reset without re-pointing
-        for i in list(self.clocks):
-            self.clocks[i] = NodeClock()
-        for i in list(self.wall):
-            self.wall[i] = WallClock()
+        # backend) observes the reset without re-pointing. Under the clock
+        # lock: an in-flight accrual either lands fully before the swap
+        # (and is dropped with the old clock) or fully after (and survives
+        # on the fresh clock) — never half-applied across the two.
+        with self.lock:
+            for i in list(self.clocks):
+                self.clocks[i] = NodeClock()
+            for i in list(self.wall):
+                self.wall[i] = WallClock()
+
+    # ---- consistent snapshot (observability-plane bridge) ------------------
+    def snapshot(self) -> Dict[str, dict]:
+        """One CONSISTENT copy of every ledger, taken under the clock
+        lock so no accrual is half-applied across related counters (e.g.
+        a tenant row bumped but the lane total not yet).
+
+        Returns plain builtins only (JSON-serializable): ``{"nodes":
+        {node_id: {"modeled": {...}, "measured": {...}}}, "cluster":
+        {aggregates}}``. This is the ONLY ledger-read path the
+        observability plane uses; aggregates are computed from the
+        copies, never from the live dicts.
+        """
+        with self.lock:
+            nodes = {
+                i: {"modeled": self._clock_dict(self.clocks[i]),
+                    "measured": self._wall_dict(self.wall[i])}
+                for i in self.clocks
+            }
+        # aggregates from the copies — outside the lock on purpose
+        modeled = [n["modeled"] for n in nodes.values()]
+        measured = [n["measured"] for n in nodes.values()]
+
+        def _merge(rows: List[dict], key: str) -> dict:
+            out: dict = {}
+            for r in rows:
+                for k, v in r[key].items():
+                    out[k] = out.get(k, 0 if isinstance(v, int) else 0.0) + v
+            return out
+
+        local = sum(m["local_bytes"] + m["cache_hit_bytes"] for m in modeled)
+        total_in = sum(m["bytes_in"] for m in modeled)
+        hits = sum(m["cache_hits"] for m in modeled)
+        lookups = hits + sum(m["cache_misses"] for m in modeled)
+        makespan = max((m["busy_s"] for m in modeled), default=0.0)
+        moved = local + total_in
+        cluster = {
+            "makespan_s": makespan,
+            "measured_makespan_s":
+                max((w["busy_s"] for w in measured), default=0.0),
+            "measured_total_s": sum(w["total_s"] for w in measured),
+            "measured_bytes": sum(w["bytes_in"] for w in measured),
+            "measured_requests": sum(w["requests"] for w in measured),
+            "aggregate_bandwidth_Bps":
+                (moved / makespan) if makespan > 0 else 0.0,
+            "local_hit_rate": (local / moved) if moved else 1.0,
+            "cache_hit_rate": (hits / lookups) if lookups else 0.0,
+            "prefetch_windows": sum(m["prefetch_windows"] for m in modeled),
+            "prefetch_bytes": sum(m["prefetch_bytes"] for m in modeled),
+            "write_bytes": sum(m["write_bytes"] for m in modeled),
+            "write_rpcs": sum(m["write_rpcs"] for m in modeled),
+            "serve_app_bytes": sum(m["serve_app_bytes"] for m in modeled),
+            "serve_app_requests":
+                sum(m["serve_app_requests"] for m in modeled),
+            "retries": sum(m["retries"] for m in modeled),
+            "retry_s": sum(m["retry_s"] for m in modeled),
+            "measured_retries": sum(w["retries"] for w in measured),
+            "tenant_bytes": _merge(modeled, "tenant_bytes"),
+            "tenant_requests": _merge(modeled, "tenant_requests"),
+            "tenant_serve_s": _merge(modeled, "tenant_serve_s"),
+            "job_cache_hits": _merge(modeled, "job_cache_hits"),
+            "job_cache_misses": _merge(modeled, "job_cache_misses"),
+            "job_cache_hit_bytes": _merge(modeled, "job_cache_hit_bytes"),
+            "stripe_bytes": _merge(measured, "stripe_bytes"),
+            "wire_raw_bytes": sum(w["wire_raw_bytes"] for w in measured),
+            "wire_sent_bytes": sum(w["wire_sent_bytes"] for w in measured),
+            "wire_saved_bytes":
+                sum(w["wire_raw_bytes"] - w["wire_sent_bytes"]
+                    for w in measured),
+        }
+        return {"nodes": nodes, "cluster": cluster}
+
+    @staticmethod
+    def _clock_dict(c: NodeClock) -> dict:
+        """Copy one modeled clock to plain builtins (prefetch_log is
+        summarized by its window/byte counters, not copied entry by
+        entry). Call under the clock lock."""
+        return {
+            "consume_s": c.consume_s, "serve_s": c.serve_s,
+            "prefetch_s": c.prefetch_s, "write_s": c.write_s,
+            "serve_app_s": c.serve_app_s, "busy_s": c.busy_s,
+            "bytes_in": c.bytes_in, "bytes_out": c.bytes_out,
+            "local_bytes": c.local_bytes,
+            "prefetch_bytes": c.prefetch_bytes,
+            "prefetch_windows": c.prefetch_windows,
+            "write_bytes": c.write_bytes, "write_rpcs": c.write_rpcs,
+            "retries": c.retries, "retry_s": c.retry_s,
+            "serve_app_bytes": c.serve_app_bytes,
+            "serve_app_requests": c.serve_app_requests,
+            "tenant_bytes": dict(c.tenant_bytes),
+            "tenant_requests": dict(c.tenant_requests),
+            "tenant_serve_s": dict(c.tenant_serve_s),
+            "cache_hits": c.cache_hits, "cache_misses": c.cache_misses,
+            "cache_evictions": c.cache_evictions,
+            "cache_hit_bytes": c.cache_hit_bytes,
+            "cache_hit_rate": c.cache_hit_rate,
+            "worker_cache_hits": dict(c.worker_cache_hits),
+            "worker_cache_misses": dict(c.worker_cache_misses),
+            "worker_cache_hit_bytes": dict(c.worker_cache_hit_bytes),
+            "job_cache_hits": dict(c.job_cache_hits),
+            "job_cache_misses": dict(c.job_cache_misses),
+            "job_cache_hit_bytes": dict(c.job_cache_hit_bytes),
+        }
+
+    @staticmethod
+    def _wall_dict(w: WallClock) -> dict:
+        """Copy one measured clock to plain builtins (call under the
+        clock lock)."""
+        return {
+            "consume_ns": w.consume_ns, "serve_ns": w.serve_ns,
+            "prefetch_ns": w.prefetch_ns, "write_ns": w.write_ns,
+            "serve_app_ns": w.serve_app_ns,
+            "busy_s": w.busy_s, "total_s": w.total_s,
+            "bytes_in": w.bytes_in, "bytes_out": w.bytes_out,
+            "requests": w.requests,
+            "stripe_ns": dict(w.stripe_ns),
+            "stripe_bytes": dict(w.stripe_bytes),
+            "wire_raw_bytes": w.wire_raw_bytes,
+            "wire_sent_bytes": w.wire_sent_bytes,
+            "retries": w.retries, "retry_ns": w.retry_ns,
+        }
 
     def makespan_s(self) -> float:
-        return max((c.busy_s for c in self.clocks.values()), default=0.0)
+        with self.lock:
+            return max((c.busy_s for c in self.clocks.values()), default=0.0)
 
     # ---- measured (wall-clock) view ----------------------------------------
     def measured_makespan_s(self) -> float:
         """Max per-node measured busy time (optimistic-overlap bound)."""
-        return max((w.busy_s for w in self.wall.values()), default=0.0)
+        with self.lock:
+            return max((w.busy_s for w in self.wall.values()), default=0.0)
 
     def measured_total_s(self) -> float:
         """Whole-cluster measured activity (sum of every node's lanes)."""
-        return sum(w.total_s for w in self.wall.values())
+        with self.lock:
+            return sum(w.total_s for w in self.wall.values())
 
     def measured_bytes(self) -> int:
-        return sum(w.bytes_in for w in self.wall.values())
+        with self.lock:
+            return sum(w.bytes_in for w in self.wall.values())
 
     def measured_requests(self) -> int:
-        return sum(w.requests for w in self.wall.values())
+        with self.lock:
+            return sum(w.requests for w in self.wall.values())
 
     def measured_stripe_bytes(self) -> Dict[int, int]:
         """Cluster-wide bytes moved per stripe id (striped socket wires)."""
         out: Dict[int, int] = {}
-        for w in self.wall.values():
-            for sid, nbytes in w.stripe_bytes.items():
-                out[sid] = out.get(sid, 0) + nbytes
+        with self.lock:
+            for w in self.wall.values():
+                for sid, nbytes in w.stripe_bytes.items():
+                    out[sid] = out.get(sid, 0) + nbytes
         return out
 
     def measured_wire_saved(self) -> int:
         """Bytes the on-the-wire codec kept OFF the wire (0 when the cost
         model never engaged it)."""
-        return sum(w.wire_raw_bytes - w.wire_sent_bytes
-                   for w in self.wall.values())
+        with self.lock:
+            return sum(w.wire_raw_bytes - w.wire_sent_bytes
+                       for w in self.wall.values())
 
     def aggregate_bandwidth(self) -> float:
-        total = sum(c.local_bytes + c.bytes_in + c.cache_hit_bytes
-                    for c in self.clocks.values())
-        t = self.makespan_s()
+        with self.lock:
+            total = sum(c.local_bytes + c.bytes_in + c.cache_hit_bytes
+                        for c in self.clocks.values())
+            t = max((c.busy_s for c in self.clocks.values()), default=0.0)
         return total / t if t > 0 else 0.0
 
     def prefetch_windows(self) -> int:
-        return sum(c.prefetch_windows for c in self.clocks.values())
+        with self.lock:
+            return sum(c.prefetch_windows for c in self.clocks.values())
 
     def prefetch_bytes(self) -> int:
-        return sum(c.prefetch_bytes for c in self.clocks.values())
+        with self.lock:
+            return sum(c.prefetch_bytes for c in self.clocks.values())
 
     def write_bytes(self) -> int:
-        return sum(c.write_bytes for c in self.clocks.values())
+        with self.lock:
+            return sum(c.write_bytes for c in self.clocks.values())
 
     def write_rpcs(self) -> int:
-        return sum(c.write_rpcs for c in self.clocks.values())
+        with self.lock:
+            return sum(c.write_rpcs for c in self.clocks.values())
 
     # ---- serving plane (repro.fanstore.serving) ----------------------------
     def serve_app_bytes(self) -> int:
         """Cluster-wide bytes read on the serve-app lane."""
-        return sum(c.serve_app_bytes for c in self.clocks.values())
+        with self.lock:
+            return sum(c.serve_app_bytes for c in self.clocks.values())
 
     def serve_app_requests(self) -> int:
-        return sum(c.serve_app_requests for c in self.clocks.values())
+        with self.lock:
+            return sum(c.serve_app_requests for c in self.clocks.values())
+
+    def _merge_rows(self, attr: str) -> dict:
+        """Merge one per-key attribution dict across nodes, under the
+        clock lock (the live dicts grow during accrual)."""
+        out: dict = {}
+        with self.lock:
+            for c in self.clocks.values():
+                for k, v in getattr(c, attr).items():
+                    out[k] = out.get(k, type(v)()) + v
+        return out
 
     def tenant_bytes(self) -> Dict[str, int]:
         """Per-tenant bytes merged across nodes; values sum to
         :meth:`serve_app_bytes` by construction."""
-        out: Dict[str, int] = {}
-        for c in self.clocks.values():
-            for t, n in c.tenant_bytes.items():
-                out[t] = out.get(t, 0) + n
-        return out
+        return self._merge_rows("tenant_bytes")
 
     def tenant_requests(self) -> Dict[str, int]:
-        out: Dict[str, int] = {}
-        for c in self.clocks.values():
-            for t, n in c.tenant_requests.items():
-                out[t] = out.get(t, 0) + n
-        return out
+        return self._merge_rows("tenant_requests")
 
     def tenant_serve_s(self) -> Dict[str, float]:
         """Per-tenant modeled serve-app seconds merged across nodes —
         the fairness metric the serving BENCH block bounds."""
-        out: Dict[str, float] = {}
-        for c in self.clocks.values():
-            for t, s in c.tenant_serve_s.items():
-                out[t] = out.get(t, 0.0) + s
-        return out
+        return self._merge_rows("tenant_serve_s")
 
     def retries(self) -> int:
         """Cluster-wide failover retry count (modeled ledger)."""
-        return sum(c.retries for c in self.clocks.values())
+        with self.lock:
+            return sum(c.retries for c in self.clocks.values())
 
     def retry_s(self) -> float:
         """Cluster-wide modeled backoff time paid by failover retries."""
-        return sum(c.retry_s for c in self.clocks.values())
+        with self.lock:
+            return sum(c.retry_s for c in self.clocks.values())
 
     def local_hit_rate(self) -> float:
         # client-cache hits are served from node-local RAM: they count as
         # local (no fabric crossing), same as partition-store reads
-        local = sum(c.local_bytes + c.cache_hit_bytes
-                    for c in self.clocks.values())
-        total = local + sum(c.bytes_in for c in self.clocks.values())
+        with self.lock:
+            local = sum(c.local_bytes + c.cache_hit_bytes
+                        for c in self.clocks.values())
+            total = local + sum(c.bytes_in for c in self.clocks.values())
         return local / total if total else 1.0
 
     def cache_hit_rate(self) -> float:
-        hits = sum(c.cache_hits for c in self.clocks.values())
-        total = hits + sum(c.cache_misses for c in self.clocks.values())
+        with self.lock:
+            hits = sum(c.cache_hits for c in self.clocks.values())
+            total = hits + sum(c.cache_misses for c in self.clocks.values())
         return hits / total if total else 0.0
 
     # ---- per-job cache attribution (multi-job seam) ------------------------
     def job_cache_hits(self) -> Dict[str, int]:
         """Per-job cache hits merged across nodes; values sum to the
         node totals by construction (every accrual books both)."""
-        out: Dict[str, int] = {}
-        for c in self.clocks.values():
-            for j, n in c.job_cache_hits.items():
-                out[j] = out.get(j, 0) + n
-        return out
+        return self._merge_rows("job_cache_hits")
 
     def job_cache_misses(self) -> Dict[str, int]:
-        out: Dict[str, int] = {}
-        for c in self.clocks.values():
-            for j, n in c.job_cache_misses.items():
-                out[j] = out.get(j, 0) + n
-        return out
+        return self._merge_rows("job_cache_misses")
 
     def job_cache_hit_bytes(self) -> Dict[str, int]:
-        out: Dict[str, int] = {}
-        for c in self.clocks.values():
-            for j, n in c.job_cache_hit_bytes.items():
-                out[j] = out.get(j, 0) + n
-        return out
+        return self._merge_rows("job_cache_hit_bytes")

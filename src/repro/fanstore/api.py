@@ -448,6 +448,22 @@ class FanStoreSession:
             "wire_saved_bytes": w.wire_raw_bytes - w.wire_sent_bytes,
         }
 
+    def metrics(self) -> Dict[str, object]:
+        """This session's PER_RANK observability view (the metric
+        counterpart of :meth:`transport_stats`): app-level series this
+        (node, worker) rank recorded through ``cluster.metrics``, plus
+        its node's modeled lanes and its own worker-attributed cache
+        counters, all from one consistent accounting snapshot."""
+        return self.cluster.metrics.rank_view(self.node_id, self.worker_id)
+
+    def record_metric(self, name: str, value: float, **kw) -> None:
+        """Record one observation on the cluster collector, attributed
+        to this session's (node, worker) rank. Keyword arguments pass
+        through to :meth:`repro.fanstore.metrics.MetricsCollector.
+        record_metric` (``reduce=``, ``rate=``)."""
+        self.cluster.metrics.record_metric(
+            name, value, rank=(self.node_id, self.worker_id), **kw)
+
     def fault_stats(self) -> Dict[str, object]:
         """The cluster's fault ledger: injector counters (injected/
         dropped/errored/delayed, whether the kill trigger fired), the

@@ -52,7 +52,9 @@ BACKENDS: Dict[str, Type[TransportBackend]] = {
 def make_backend(name: str, net, nodes, clocks, *, wall=None,
                  num_threads: int = 8, **options) -> TransportBackend:
     """Construct a registered backend by name (``backend_options`` from
-    the cluster land in ``options``, e.g. ``host=`` for sockets)."""
+    the cluster land in ``options``, e.g. ``host=`` for sockets; the
+    cluster also passes ``lock=ClusterAccounting.lock`` here so clock
+    accrual and snapshot/reset serialize on one lock)."""
     try:
         cls = BACKENDS[name]
     except KeyError:

@@ -66,7 +66,8 @@ class TransportBackend:
                  wall: Optional[Dict[int, WallClock]] = None,
                  num_threads: int = 8, stripes: int = 1,
                  pipeline_depth: int = 4, wire_codec: str = "none",
-                 wire_policy: Optional[Dict[str, float]] = None):
+                 wire_policy: Optional[Dict[str, float]] = None,
+                 lock: Optional[threading.RLock] = None):
         self.net = net
         self.nodes = nodes
         self.clocks = clocks
@@ -80,7 +81,11 @@ class TransportBackend:
         self.pipeline_depth = max(1, int(pipeline_depth))
         self.wire_policy = WireCodecPolicy(codec=wire_codec,
                                            **dict(wire_policy or {}))
-        self._lock = threading.Lock()     # clock accrual from pool threads
+        # clock accrual from pool threads. When the cluster wires in
+        # ClusterAccounting.lock here, accrual and snapshot/reset/flush
+        # serialize on ONE lock — the consistency contract accounting.py
+        # documents. Standalone construction keeps a private lock.
+        self._lock = lock if lock is not None else threading.Lock()
         self._lifecycle = threading.Lock()  # start/close state transitions
         self._pool: Optional[ThreadPoolExecutor] = None
         self._num_threads = num_threads

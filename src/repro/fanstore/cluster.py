@@ -130,11 +130,21 @@ class FanStoreCluster:
         backend_options = dict(spec.backend_options)
         backend_options.setdefault("stripes", spec.wire_stripes)
         backend_options.setdefault("wire_codec", spec.wire_codec)
+        # the backend accrues clocks under the accounting lock, so
+        # snapshot/reset/flush never race a half-applied accrual
+        backend_options.setdefault("lock", self.accounting.lock)
         self.transport = make_backend(spec.backend, self.net, self.nodes,
                                       self.accounting.clocks,
                                       wall=self.accounting.wall,
                                       num_threads=spec.io_threads,
                                       **backend_options)
+        # observability plane: one thread-safe collector per cluster. It
+        # carries app-level series (record_metric) under its OWN lock and
+        # bridges every accounting ledger via ClusterAccounting.snapshot()
+        # at flush time — recording never contends the clock lock.
+        from repro.fanstore.metrics import MetricsCollector
+        self.metrics = MetricsCollector(accounting=self.accounting,
+                                        cluster=self)
         self.cache_policy = spec.cache_policy
         self.workers_per_node = spec.workers_per_node
         # ONE cache tier per node, shared by its co-located workers (the

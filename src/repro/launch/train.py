@@ -41,6 +41,7 @@ from repro.data.pipeline import PrefetchLoader
 from repro.data.sampler import GlobalUniformSampler, StratifiedSampler
 from repro.data.synthetic import files_to_tokens, token_dataset, tokens_to_files
 from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.metrics import JsonlSink, Reduce
 from repro.fanstore.prefetch import EpochSchedule, SchedulerGroup
 from repro.fanstore.spec import ClusterSpec
 from repro.fanstore.prepare import prepare_dataset
@@ -78,6 +79,16 @@ def main() -> None:
                          "FanStore session write path (concurrent write "
                          "lane, placement-owned outputs)")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="stream per-step training metrics (loss mean, "
+                         "step-time p99, items/s rate, per-rank read "
+                         "bytes) plus the full accounting-ledger bridge "
+                         "through the cluster's MetricsCollector to this "
+                         "JSONL sink (periodic ticks + a final explicit "
+                         "flush)")
+    ap.add_argument("--metrics-every", type=float, default=1.0,
+                    help="minimum seconds between periodic JSONL "
+                         "snapshots (0 = snapshot every step)")
     ap.add_argument("--io-threads", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="modeled",
@@ -170,6 +181,22 @@ def main() -> None:
     sessions = {key: cluster.connect(*key) for key in order}  # slice order
     step_counter = {"n": 0}
 
+    # observability: per-step series stream through the cluster's
+    # collector to a JSONL sink (periodic ticks in the loop below plus a
+    # final explicit flush). Per-rank read bytes are recorded on each
+    # issuing session, so the PER_RANK view ties each loader's traffic
+    # to its (node, worker) coordinate.
+    sink = (JsonlSink(args.metrics_jsonl,
+                      every_s=args.metrics_every or None)
+            if args.metrics_jsonl else None)
+
+    def _read(key, chunk_paths) -> list:
+        blobs_out = sessions[key].read_many(chunk_paths)
+        if sink is not None:
+            sessions[key].record_metric(
+                "train.read_bytes", sum(len(b) for b in blobs_out))
+        return blobs_out
+
     def fetch_many(idxs) -> list:
         # under --prefetch-schedule each step's batch is split into one
         # contiguous slice per (node, worker) — the same slicing the
@@ -179,12 +206,12 @@ def main() -> None:
         step_counter["n"] += 1
         if not args.prefetch_schedule:
             key = order[(step_counter["n"] - 1) % len(order)]
-            return sessions[key].read_many([paths[i] for i in idxs])
+            return _read(key, [paths[i] for i in idxs])
         per = len(idxs) // len(order)
         out = []
         for r, key in enumerate(order):
             chunk = idxs[r * per:(r + 1) * per]
-            out.extend(sessions[key].read_many([paths[i] for i in chunk]))
+            out.extend(_read(key, [paths[i] for i in chunk]))
         return out
 
     def decode(blobs_list):
@@ -237,10 +264,22 @@ def main() -> None:
                                       microbatches=args.microbatches))
     t0 = time.perf_counter()
     n_done = start_step
+    t_step = t0
     try:
         for batch in loader.batches(args.steps - start_step):
             state, metrics = step_fn(state, batch)
             n_done += 1
+            if sink is not None:
+                now = time.perf_counter()
+                cm = cluster.metrics
+                cm.record_metric("train.loss", float(metrics["loss"]),
+                                 reduce=Reduce.MEAN)
+                cm.record_metric("train.step_time_s", now - t_step,
+                                 reduce=Reduce.P99)
+                cm.record_metric("train.items", args.global_batch,
+                                 rate=True)
+                t_step = now
+                sink.tick(cm)
             if n_done % 10 == 0 or n_done == args.steps:
                 dt = time.perf_counter() - t0
                 items = (n_done - start_step) * args.global_batch / dt
@@ -268,6 +307,21 @@ def main() -> None:
             cluster.close()  # join the I/O pool + any serving loops
     print(f"done: {n_done} steps, local-hit-rate="
           f"{cluster.local_hit_rate():.3f}")
+    if sink is not None:
+        # final explicit flush: the last snapshot carries the complete
+        # ledger bridge (the clocks outlive cluster.close())
+        snap = sink.flush(cluster.metrics)
+        sink.close()
+        view = sessions[order[0]].metrics()
+        st = snap["metrics"].get("train.step_time_s", {})
+        print(f"metrics: jsonl={args.metrics_jsonl} "
+              f"records={sink.records_written} "
+              f"version={snap['version']} "
+              f"series={len(snap['metrics'])} "
+              f"step_p50={st.get('p50', 0.0):.4f}s "
+              f"step_p99={st.get('p99', 0.0):.4f}s "
+              f"rank0_read_bytes="
+              f"{view['metrics'].get('train.read_bytes', {}).get('sum', 0):.0f}")
     if scheduler is not None:
         prefetch_s = max(c.prefetch_s for c in cluster.clocks.values())
         busy_s = max(c.busy_s for c in cluster.clocks.values())

@@ -1,0 +1,503 @@
+"""Observability plane: reduce truth, the bounded quantile sketch,
+collector thread-safety with an EXACT ledger tie-out, PER_RANK vs
+GLOBAL_REDUCE equivalence, the JSONL sink round trip, declarative SLO
+guards, and the reset-vs-accrual race regression."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import small_file_dataset
+from repro.fanstore.accounting import ClusterAccounting
+from repro.fanstore.cluster import FanStoreCluster
+from repro.fanstore.metrics import (DistributionAccumulator, JsonlSink,
+                                    MetricsCollector, Mode, QuantileSketch,
+                                    RateAccumulator, Reduce, Ref,
+                                    ScalarAccumulator, SloGuard, check_slos,
+                                    resolve_path)
+from repro.fanstore.prepare import prepare_dataset
+from repro.fanstore.spec import ClusterSpec
+
+
+def _make_files(n=48, seed=3):
+    files = small_file_dataset(n, (200, 1_500), num_dirs=3, seed=seed)
+    blobs, _ = prepare_dataset(files, 8, compress=False)
+    return files, blobs
+
+
+# ---------------------------------------------------------------------------
+# reduce truth on known sequences
+# ---------------------------------------------------------------------------
+
+def test_reduce_truth_on_known_sequence():
+    c = MetricsCollector()
+    for reduce in (Reduce.SUM, Reduce.MEAN, Reduce.MAX, Reduce.MIN,
+                   Reduce.COUNT):
+        for v in (3.0, 1.0, 4.0, 1.0, 5.0):
+            c.record_metric(f"m.{reduce.value}", v, reduce=reduce)
+    m = c.snapshot()["metrics"]
+    assert m["m.sum"]["value"] == 14.0
+    assert m["m.mean"]["value"] == pytest.approx(2.8)
+    assert m["m.max"]["value"] == 5.0
+    assert m["m.min"]["value"] == 1.0
+    assert m["m.count"]["value"] == 5.0
+    # every entry carries the full scalar summary alongside the fold
+    assert m["m.sum"]["count"] == 5 and m["m.sum"]["min"] == 1.0
+
+
+def test_scalar_rejects_quantile_reduce():
+    with pytest.raises(ValueError, match="Distribution"):
+        ScalarAccumulator(Reduce.P99)
+
+
+def test_distribution_summary_has_quantiles():
+    acc = DistributionAccumulator(Reduce.P50)
+    for v in range(100):
+        acc.observe(float(v))
+    s = acc.summary()
+    assert s["count"] == 100 and "p50" in s and "p99" in s
+    assert 45.0 <= acc.value() <= 55.0
+
+
+# ---------------------------------------------------------------------------
+# quantile sketch: error bounds, bounded memory, merge
+# ---------------------------------------------------------------------------
+
+def test_sketch_error_bounds(rng):
+    vals = rng.random(50_000)
+    sk = QuantileSketch(capacity=512)
+    for v in vals:
+        sk.add(float(v))
+    # rank error of the estimate stays well inside ~2/capacity
+    for q in (0.50, 0.99):
+        est = sk.query(q)
+        frac = float((vals <= est).mean())
+        assert abs(frac - q) <= 0.02, (q, est, frac)
+
+
+def test_sketch_memory_bounded_independent_of_samples(rng):
+    sk = QuantileSketch(capacity=64)
+    n = 100_000
+    for v in rng.random(n):
+        sk.add(float(v))
+    assert len(sk) <= 64          # O(capacity), NOT O(n)
+    assert sk.count == n          # but no sample's weight is lost
+    assert sk.compactions > 0
+
+
+def test_sketch_merge_matches_single_stream(rng):
+    vals = rng.random(20_000)
+    a, b = QuantileSketch(256), QuantileSketch(256)
+    for v in vals[:10_000]:
+        a.add(float(v))
+    for v in vals[10_000:]:
+        b.add(float(v))
+    a.merge(b)
+    assert len(a) <= 256 and a.count == 20_000
+    for q in (0.50, 0.99):
+        frac = float((vals <= a.query(q)).mean())
+        assert abs(frac - q) <= 0.04
+
+
+def test_sketch_rejects_tiny_capacity():
+    with pytest.raises(ValueError, match=">= 8"):
+        QuantileSketch(capacity=4)
+
+
+# ---------------------------------------------------------------------------
+# rate accumulator (injectable clock)
+# ---------------------------------------------------------------------------
+
+def test_rate_accumulator_fake_clock():
+    t = [100.0]
+    acc = RateAccumulator(clock=lambda: t[0])
+    acc.observe(10.0)
+    acc.observe(30.0)
+    t[0] = 104.0
+    assert acc.value() == pytest.approx(10.0)    # 40 over 4s
+    assert acc.summary()["elapsed_s"] == pytest.approx(4.0)
+
+
+def test_rate_merge_takes_earliest_birth():
+    t = [100.0]
+    clock = lambda: t[0]  # noqa: E731
+    early = RateAccumulator(clock=clock)
+    early.observe(4.0)
+    t[0] = 102.0
+    late = RateAccumulator(clock=clock)
+    late.observe(4.0)
+    late.merge(early)
+    t[0] = 104.0
+    assert late.value() == pytest.approx(8.0 / 4.0)
+
+
+def test_rate_requires_sum_reduce():
+    with pytest.raises(ValueError, match="SUM"):
+        RateAccumulator(Reduce.MEAN)
+
+
+def test_collector_rate_series():
+    t = [0.0]
+    c = MetricsCollector(clock=lambda: t[0])
+    c.record_metric("io.bytes", 100.0, rate=True)
+    c.record_metric("io.bytes", 300.0, rate=True)
+    t[0] = 2.0
+    e = c.snapshot()["metrics"]["io.bytes"]
+    assert e["kind"] == "rate" and e["value"] == pytest.approx(200.0)
+
+
+# ---------------------------------------------------------------------------
+# collector: declarations, modes, blocks, versioning
+# ---------------------------------------------------------------------------
+
+def test_declaration_conflict_raises():
+    c = MetricsCollector()
+    c.record_metric("x", 1.0, reduce=Reduce.SUM)
+    with pytest.raises(ValueError, match="already declared"):
+        c.record_metric("x", 1.0, reduce=Reduce.MEAN)
+    with pytest.raises(ValueError, match="already declared"):
+        c.record_metric("x", 1.0, reduce=Reduce.SUM, rate=True)
+
+
+def test_per_rank_vs_global_reduce_equivalence():
+    c = MetricsCollector()
+    obs = {(0, 0): [1.0, 2.0], (0, 1): [10.0], (1, 0): [5.0, 7.0, 9.0]}
+    reduces = [Reduce.SUM, Reduce.MEAN, Reduce.MAX, Reduce.MIN,
+               Reduce.COUNT, Reduce.P99]
+    for reduce in reduces:
+        for rank, vals in obs.items():
+            for v in vals:
+                c.record_metric(f"m.{reduce.value}", v,
+                                reduce=reduce, rank=rank)
+    per = c.snapshot(mode=Mode.PER_RANK)["metrics"]
+    glob = c.snapshot(mode=Mode.GLOBAL_REDUCE)["metrics"]
+    for reduce in reduces:
+        name = f"m.{reduce.value}"
+        # the two modes are views of the same per-rank store: the
+        # folded value is identical, PER_RANK just keeps the keys
+        assert per[name]["value"] == glob[name]["value"]
+        assert "ranks" in per[name] and "ranks" not in glob[name]
+        ranks = per[name]["ranks"]
+        assert set(ranks) == {"0/0", "0/1", "1/0"}
+        # and the fold is provably the reduction of the rank entries
+        rsum = sum(r["sum"] for r in ranks.values())
+        rcount = sum(r["count"] for r in ranks.values())
+        if reduce is Reduce.SUM:
+            assert glob[name]["value"] == rsum
+        elif reduce is Reduce.COUNT:
+            assert glob[name]["value"] == rcount
+        elif reduce is Reduce.MEAN:
+            assert glob[name]["value"] == pytest.approx(rsum / rcount)
+        elif reduce is Reduce.MAX:
+            assert glob[name]["value"] == max(
+                r["max"] for r in ranks.values())
+        elif reduce is Reduce.MIN:
+            assert glob[name]["value"] == min(
+                r["min"] for r in ranks.values())
+
+
+def test_record_block_is_deep_copied_both_ways():
+    c = MetricsCollector()
+    block = {"rows": [1, 2]}
+    c.record_block("bench_block", block)
+    block["rows"].append(3)                       # caller mutates after
+    snap = c.snapshot()
+    assert snap["bench"]["bench_block"] == {"rows": [1, 2]}
+    snap["bench"]["bench_block"]["rows"].append(99)   # reader mutates
+    assert c.snapshot()["bench"]["bench_block"] == {"rows": [1, 2]}
+
+
+def test_collector_does_not_keep_cluster_alive():
+    """Regression: cluster.metrics must hold its owner weakly — a strong
+    back-reference makes a cycle, and an abandoned (never-closed) cluster
+    then waits for the cycle GC instead of dying by refcount, stranding
+    lazily spawned transport pool threads past test teardown."""
+    import weakref
+    cluster = FanStoreCluster.from_spec(ClusterSpec(num_nodes=1))
+    collector = cluster.metrics
+    ref = weakref.ref(cluster)
+    cluster.close()
+    del cluster
+    assert ref() is None
+    assert collector.cluster is None
+    collector.record_metric("x", 1.0)        # still usable standalone
+    assert "faults" not in collector.snapshot()
+
+
+def test_version_monotonic_across_reset():
+    c = MetricsCollector()
+    c.record_metric("x", 1.0)
+    v1 = c.snapshot()["version"]
+    c.reset()
+    snap = c.snapshot()
+    assert snap["version"] == v1 + 1      # reset never rewinds the stream
+    assert snap["metrics"] == {}
+    c.record_metric("x", 1.0, reduce=Reduce.MEAN)   # re-declaration OK
+
+
+# ---------------------------------------------------------------------------
+# thread storm: 16 ranks hammer one collector + the transport, then the
+# recorded app-level SUM must tie out EXACTLY against the ledger bridge
+# ---------------------------------------------------------------------------
+
+def test_thread_storm_exact_ledger_tieout():
+    files, blobs = _make_files(n=64, seed=5)
+    paths = sorted(files)
+    spec = ClusterSpec(num_nodes=2, workers_per_node=8,
+                       cache_bytes=1 << 20)
+    with FanStoreCluster.from_spec(spec) as cluster:
+        cluster.load_partitions(blobs)
+        ranks = [(n, w) for n in range(2) for w in range(8)]
+        barrier = threading.Barrier(len(ranks))
+        errors = []
+
+        def storm(rank):
+            try:
+                sess = cluster.connect(*rank)
+                barrier.wait()
+                for rnd in range(3):
+                    lo = (rank[0] * 8 + rank[1] + rnd) % 32
+                    blobs_out = sess.read_many(paths[lo:lo + 16])
+                    sess.record_metric("storm.read_bytes",
+                                       sum(len(b) for b in blobs_out))
+            except Exception as e:     # pragma: no cover - diagnostic
+                errors.append(e)
+
+        threads = [threading.Thread(target=storm, args=(r,)) for r in ranks]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        snap = cluster.metrics.snapshot(mode=Mode.PER_RANK)
+        entry = snap["metrics"]["storm.read_bytes"]
+        # every byte a session read landed in exactly one ledger bucket
+        # (cache hit / local / remote) — so the app-recorded total and
+        # the accounting bridge agree EXACTLY, not approximately
+        ledger = sum(
+            n["modeled"]["cache_hit_bytes"] + n["modeled"]["local_bytes"]
+            + n["modeled"]["bytes_in"]
+            for n in snap["nodes"].values())
+        assert entry["value"] == ledger
+        assert entry["count"] == len(ranks) * 3
+        # per-rank sums fold back to the global value, all 16 ranks seen
+        assert len(entry["ranks"]) == len(ranks)
+        assert sum(r["sum"] for r in entry["ranks"].values()) \
+            == entry["value"]
+        # at quiesce the snapshot equals the live clocks field for field
+        for i, nd in snap["nodes"].items():
+            clock = cluster.clocks[i]
+            assert nd["modeled"]["bytes_in"] == clock.bytes_in
+            assert nd["modeled"]["local_bytes"] == clock.local_bytes
+            assert nd["modeled"]["cache_hit_bytes"] == clock.cache_hit_bytes
+            assert nd["modeled"]["cache_hits"] == clock.cache_hits
+            assert nd["modeled"]["busy_s"] == clock.busy_s
+
+
+# ---------------------------------------------------------------------------
+# regression: reset() / snapshot() racing in-flight accrual
+# ---------------------------------------------------------------------------
+
+def test_reset_and_snapshot_race_inflight_accrual():
+    """Writers accrue tenant rows the way the transport does (under the
+    clock lock) while the main thread snapshots and resets. Every
+    snapshot must be internally consistent: the tenant rows bumped in
+    the same critical section as the lane totals are never observed
+    half-applied, and reset never tears an accrual in two."""
+    acct = ClusterAccounting(range(2))
+    stop = threading.Event()
+    errors = []
+
+    def writer(wid):
+        i = 0
+        try:
+            while not stop.is_set():
+                with acct.lock:     # exactly the backend accrual shape
+                    acct[wid % 2].attribute_tenant(
+                        f"t{wid}", nbytes=100, cost_s=0.001, requests=1)
+                i += 1
+        except Exception as e:      # pragma: no cover - diagnostic
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for rnd in range(200):
+            snap = acct.snapshot()["cluster"]
+            assert sum(snap["tenant_bytes"].values()) \
+                == snap["serve_app_bytes"]
+            assert sum(snap["tenant_requests"].values()) \
+                == snap["serve_app_requests"]
+            if rnd % 20 == 10:
+                acct.reset()
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errors
+    # post-quiesce: reset left live, attributable clocks behind
+    acct.reset()
+    empty = acct.snapshot()["cluster"]
+    assert empty["serve_app_bytes"] == 0 and empty["tenant_bytes"] == {}
+
+
+# ---------------------------------------------------------------------------
+# JSONL sink: round trip, rotation, torn tail, periodic tick
+# ---------------------------------------------------------------------------
+
+def test_jsonl_flush_reload_round_trip(tmp_path):
+    p = tmp_path / "m.jsonl"
+    c = MetricsCollector()
+    c.record_metric("a", 1.0)
+    with JsonlSink(p) as sink:
+        for _ in range(3):
+            sink.flush(c)
+        assert sink.records_written == 3
+    records = JsonlSink.load(p)
+    assert [r["version"] for r in records] == [1, 2, 3]
+    assert records[-1]["metrics"]["a"]["value"] == 1.0
+
+
+def test_jsonl_rotation_keeps_every_record(tmp_path):
+    p = tmp_path / "m.jsonl"
+    c = MetricsCollector()
+    with JsonlSink(p, rotate_bytes=150) as sink:
+        for _ in range(6):
+            sink.flush(c)
+        assert sink.rotations >= 1
+    assert (tmp_path / "m.jsonl.1").exists()
+    records = JsonlSink.load(p)
+    assert [r["version"] for r in records] == [1, 2, 3, 4, 5, 6]
+    # without the rotated segments only the live tail remains
+    assert len(JsonlSink.load(p, include_rotated=False)) < 6
+
+
+def test_jsonl_torn_tail_dropped_but_midfile_corruption_raises(tmp_path):
+    p = tmp_path / "m.jsonl"
+    p.write_text('{"version": 1}\n{"version": 2, "to')   # crash mid-append
+    assert [r["version"] for r in JsonlSink.load(p)] == [1]
+    p.write_text('{"version": 1}\ngarbage\n{"version": 3}\n')
+    with pytest.raises(ValueError, match="corrupt"):
+        JsonlSink.load(p)
+
+
+def test_jsonl_tick_is_periodic(tmp_path):
+    t = [0.0]
+    c = MetricsCollector()
+    sink = JsonlSink(tmp_path / "m.jsonl", every_s=5.0, clock=lambda: t[0])
+    assert sink.tick(c) is True       # nothing emitted yet -> due
+    assert sink.tick(c) is False      # within the window
+    t[0] = 4.9
+    assert sink.tick(c) is False
+    t[0] = 5.0
+    assert sink.tick(c) is True
+    sink.close()
+    assert sink.records_written == 2
+
+
+# ---------------------------------------------------------------------------
+# session-level view
+# ---------------------------------------------------------------------------
+
+def test_session_metrics_rank_view():
+    files, blobs = _make_files(n=32, seed=7)
+    spec = ClusterSpec(num_nodes=2, workers_per_node=2,
+                       cache_bytes=1 << 20)
+    with FanStoreCluster.from_spec(spec) as cluster:
+        cluster.load_partitions(blobs)
+        mine = cluster.connect(0, 1)
+        other = cluster.connect(1, 0)
+        paths = sorted(files)[:8]
+        mine.read_many(paths)
+        mine.read_many(paths)          # second pass hits the node tier
+        mine.record_metric("app.loss", 2.0, reduce=Reduce.MEAN)
+        other.record_metric("app.other", 1.0)
+        view = mine.metrics()
+        assert view["rank"] == "0/1"
+        assert view["metrics"]["app.loss"]["value"] == 2.0
+        assert "app.other" not in view["metrics"]   # not this rank's
+        assert view["node"]["bytes_in"] == cluster.clocks[0].bytes_in
+        assert view["cache"]["hits"] == \
+            cluster.clocks[0].worker_cache_hits.get(1, 0)
+        assert view["cache"]["hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# declarative SLO guards
+# ---------------------------------------------------------------------------
+
+def test_resolve_path_wildcards_and_indices():
+    doc = {"arms": {"a": {"v": 1}, "b": {"v": 2}}, "xs": [10, 20, 30]}
+    assert dict(resolve_path(doc, "arms.*.v")) == {("a",): 1, ("b",): 2}
+    assert resolve_path(doc, "xs.1") == [((), 20)]
+    assert [v for _, v in resolve_path(doc, "xs.*")] == [10, 20, 30]
+    assert resolve_path(doc, "arms.c.v") == []
+
+
+def test_resolve_path_dotted_metric_names():
+    # metric names contain dots by convention; the longest joined run
+    # of segments that names a key wins
+    doc = {"metrics": {"train.loss": {"value": 2.0},
+                       "train": {"loss": {"value": 99.0}}}}
+    # "train.loss" (longest) beats the nested "train" -> "loss" chain
+    assert resolve_path(doc, "metrics.train.loss.value") == [((), 2.0)]
+    del doc["metrics"]["train.loss"]
+    assert resolve_path(doc, "metrics.train.loss.value") == [((), 99.0)]
+
+
+def test_guard_ref_binds_metric_wildcards():
+    doc = {"arms": {"a": {"win": 1.0, "base": 2.0},
+                    "b": {"win": 3.0, "base": 2.5}}}
+    guards = [SloGuard("overlap_wins", "arms.*.win", "<",
+                       Ref("arms.*.base"))]
+    violations = check_slos(doc, guards)
+    assert len(violations) == 1 and "arms.b.win" in violations[0]
+    doc["arms"]["b"]["win"] = 2.0
+    assert check_slos(doc, guards) == []
+
+
+def test_guard_leftover_ref_wildcard_is_for_all():
+    # "belady bounds every policy on the same arm": the first ref
+    # wildcard consumes the arm binding, the leftover one fans out
+    doc = {"sweep": {"zipf": {"belady": 0.9, "lru": 0.7, "fifo": 0.6}}}
+    guards = [SloGuard("upper_bound", "sweep.*.belady", ">=",
+                       Ref("sweep.*.*"))]
+    assert check_slos(doc, guards) == []
+    doc["sweep"]["zipf"]["lru"] = 0.95
+    assert len(check_slos(doc, guards)) == 1
+
+
+def test_guard_when_gates_and_missing_paths_fail_loud():
+    guards = [SloGuard("speedup", "wire.speedup", ">", 1.0,
+                       when=("wire.cpus", ">", 1))]
+    assert check_slos({"wire": {"speedup": 0.5, "cpus": 1}}, guards) == []
+    assert len(check_slos({"wire": {"speedup": 0.5, "cpus": 4}},
+                          guards)) == 1
+    # a missing when-path or metric path is a violation, never a skip
+    assert any("when-path" in v
+               for v in check_slos({"wire": {"speedup": 2.0}}, guards))
+    assert any("no value" in v for v in check_slos(
+        {"wire": {"cpus": 4}}, guards))
+
+
+def test_guard_container_and_membership_ops():
+    doc = {"stripes": [0, 1, 2], "single": [0], "failed": [3],
+           "kill": 3, "ok": True, "shed": 0}
+    assert check_slos(doc, [
+        SloGuard("striped", "stripes", "min_len", 2),
+        SloGuard("one_conn", "single", "subset", (0,)),
+        SloGuard("detected", "kill", "in", Ref("failed")),
+        SloGuard("attrib", "ok", "truthy"),
+        SloGuard("nonempty", "stripes", "nonempty"),
+        SloGuard("no_shed", "shed", "==", 0),
+    ]) == []
+    assert len(check_slos(doc, [
+        SloGuard("one_conn", "stripes", "subset", (0,))])) == 1
+
+
+def test_guard_uncomparable_is_a_violation_not_a_crash():
+    doc = {"x": "not-a-number"}
+    violations = check_slos(doc, [SloGuard("typed", "x", ">", 1.0)])
+    assert len(violations) == 1 and "uncomparable" in violations[0]
